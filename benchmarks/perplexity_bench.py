@@ -1,0 +1,199 @@
+"""RLDA vs LDA model quality (paper §3.1/§6's "superior performance
+compared to standard LDA in the context of product review modeling").
+
+Both models are fit on the same synthetic review corpus (rating-dependent
+planted topics + irrelevant reviews). Metrics:
+
+  base-vocab perplexity   (tier-marginalized for RLDA, comparable units)
+  negative-topic purity   how cleanly negative-only planted topics separate
+  weighting ablation      RLDA with/without ψ quality weights and w_bits
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gibbs, perplexity, rlda
+from repro.core.types import Corpus, LDAConfig, LDAState
+from repro.data import reviews
+
+
+def _lda_fit(corp, vocab, k, sweeps, seed=0):
+    docs = np.concatenate(
+        [np.full(len(r.tokens), d, np.int64) for d, r in enumerate(corp.reviews)])
+    words = np.concatenate([r.tokens for r in corp.reviews])
+    corpus = Corpus(docs=jnp.asarray(docs, jnp.int32),
+                    words=jnp.asarray(words, jnp.int32),
+                    weights=jnp.ones(len(docs), jnp.float32))
+    cfg = LDAConfig(num_topics=k, vocab_size=vocab, num_docs=len(corp.reviews))
+    st = gibbs.run(cfg, corpus, jax.random.PRNGKey(seed), sweeps)
+    return cfg, corpus, st
+
+
+def _marginalize(prep, st, base_vocab, k):
+    n_wt_aug = np.asarray(st.n_wt, np.float64)
+    if prep.cfg.w_bits is not None:
+        from repro.core import fractional
+
+        n_wt_aug = n_wt_aug / fractional.scale(prep.cfg.w_bits)
+    base, _ = rlda.strip_rating(np.arange(prep.cfg.vocab_size))
+    n_wt = np.zeros((base_vocab, k))
+    np.add.at(n_wt, base, n_wt_aug)
+    return n_wt
+
+
+def _tier_conditional_perplexity(prep, st, corp) -> float:
+    """Predict each base-vocab token GIVEN its review's rating tier.
+
+    p(w | d, t_d) = Σ_k θ̂_dk · φ̂_k(aug(w, t_d)) / Σ_w' φ̂_k(aug(w', t_d))
+
+    This is the prediction task RLDA's structure is built for — a user
+    reading 1-star reviews wants the 1-star topics (paper §3.1).
+    """
+    from repro.core import fractional
+
+    cfg = st_cfg = prep.cfg
+    n_dt = np.asarray(st.n_dt, np.float64)
+    n_wt = np.asarray(st.n_wt, np.float64)
+    if cfg.w_bits is not None:
+        s = fractional.scale(cfg.w_bits)
+        n_dt, n_wt = n_dt / s, n_wt / s
+    alpha_bar = cfg.alpha * cfg.num_topics
+    theta = (n_dt + cfg.alpha) / (n_dt.sum(1, keepdims=True) + alpha_bar)
+    phi_aug = (n_wt + cfg.beta) / (n_wt.sum(0, keepdims=True)
+                                   + cfg.beta * cfg.vocab_size)  # (V*5, K)
+    base_vocab = prep.base_vocab
+    # per-tier conditional word dists: normalize φ within each tier slice
+    ll, n = 0.0, 0
+    for d, r in enumerate(corp.reviews):
+        t = int(prep.tiers[d])
+        ids = rlda.augment_word(np.arange(base_vocab), np.full(base_vocab, t))
+        phi_t = phi_aug[ids]  # (V, K)
+        phi_t = phi_t / np.maximum(phi_t.sum(0, keepdims=True), 1e-30)
+        p = phi_t[np.asarray(r.tokens, int)] @ theta[d]  # (n_d,)
+        ll += float(np.log(np.maximum(p, 1e-30)).sum())
+        n += len(r.tokens)
+    return float(np.exp(-ll / max(n, 1)))
+
+
+def _lda_conditional_perplexity(lda_cfg, lda_st, corp) -> float:
+    """LDA's prediction of the same tokens (it cannot use the tier)."""
+    n_dt = np.asarray(lda_st.n_dt, np.float64)
+    n_wt = np.asarray(lda_st.n_wt, np.float64)
+    alpha_bar = lda_cfg.alpha * lda_cfg.num_topics
+    theta = (n_dt + lda_cfg.alpha) / (n_dt.sum(1, keepdims=True) + alpha_bar)
+    phi = (n_wt + lda_cfg.beta) / (n_wt.sum(0, keepdims=True)
+                                   + lda_cfg.beta_bar)
+    ll, n = 0.0, 0
+    for d, r in enumerate(corp.reviews):
+        p = phi[np.asarray(r.tokens, int)] @ theta[d]
+        ll += float(np.log(np.maximum(p, 1e-30)).sum())
+        n += len(r.tokens)
+    return float(np.exp(-ll / max(n, 1)))
+
+
+def run(quick: bool = False) -> dict:
+    # NOTE: RLDA's rating conditioning needs enough reviews per tier — below
+    # ~50 train reviews/tier the 5-way vocab split is data-starved and LDA
+    # wins even cold-start (the low-review weakness the paper itself flags
+    # in §6). The quick profile stays above that regime.
+    vocab, k = 300, 10
+    sweeps = 12 if quick else 50
+    corp = reviews.generate(reviews.SyntheticSpec(
+        num_reviews=400 if quick else 800, vocab_size=vocab, num_topics=8,
+        negative_topic_frac=0.25, irrelevant_frac=0.15, seed=7))
+
+    # plain LDA baseline
+    lda_cfg, lda_corpus, lda_st = _lda_fit(corp, vocab, k, sweeps)
+    p_lda = float(perplexity.perplexity(lda_cfg, lda_st, lda_corpus))
+    p_lda_cond = _lda_conditional_perplexity(lda_cfg, lda_st, corp)
+
+    results = {"lda_perplexity": round(p_lda, 1),
+               "lda_conditional": round(p_lda_cond, 1), "variants": {}}
+    print(f"  LDA  baseline: marginal {p_lda:.1f}, conditional "
+          f"{p_lda_cond:.1f}")
+
+    for name, kwargs in (
+        ("rlda", dict(w_bits=8)),
+        ("rlda-float", dict(w_bits=None)),
+        ("rlda-nopsi", dict(w_bits=8)),  # ablation: ψ forced to 1
+    ):
+        prep = rlda.prepare(corp.reviews, base_vocab=vocab, num_topics=k,
+                            **kwargs)
+        if name == "rlda-nopsi":
+            prep.corpus.weights = jnp.ones_like(prep.corpus.weights)
+        st = gibbs.run(prep.cfg, prep.corpus, jax.random.PRNGKey(1), sweeps)
+
+        # (a) marginal perplexity (tier-summed counts) — the "structure tax"
+        n_wt = _marginalize(prep, st, vocab, k)
+        n_dt = np.asarray(st.n_dt, np.float64)
+        if prep.cfg.w_bits is not None:
+            from repro.core import fractional
+
+            n_dt = n_dt / fractional.scale(prep.cfg.w_bits)
+        st_m = LDAState(z=st.z, n_dt=jnp.asarray(n_dt, jnp.float32),
+                        n_wt=jnp.asarray(n_wt, jnp.float32),
+                        n_t=jnp.asarray(n_wt.sum(0), jnp.float32))
+        p_marg = float(perplexity.perplexity(lda_cfg, st_m, lda_corpus))
+
+        # (b) tier-conditional perplexity — RLDA's actual prediction task
+        p_cond = _tier_conditional_perplexity(prep, st, corp)
+        results["variants"][name] = {"marginal": round(p_marg, 1),
+                                     "conditional": round(p_cond, 1)}
+        print(f"  {name:12s}: marginal {p_marg:.1f} "
+              f"({100*(p_marg-p_lda)/p_lda:+.1f}%), conditional {p_cond:.1f} "
+              f"({100*(p_cond-p_lda_cond)/p_lda_cond:+.1f}% vs LDA)")
+
+    # Cold-start rating-conditioned prediction on held-out reviews: the
+    # cleanest rendering of the paper's use case (user filters by stars).
+    train_r, test_r = reviews.train_test_split(corp, test_frac=0.25, seed=1)
+    prep_t = rlda.prepare(train_r, base_vocab=vocab, num_topics=k, w_bits=8)
+    st_t = gibbs.run(prep_t.cfg, prep_t.corpus, jax.random.PRNGKey(2), sweeps)
+    lda_cfg_t, lda_corpus_t, lda_st_t = _lda_fit(
+        type("C", (), {"reviews": train_r})(), vocab, k, sweeps, seed=2)
+
+    from repro.core import fractional
+
+    n_wt_l = np.asarray(lda_st_t.n_wt, np.float64)
+    p_w_lda = (n_wt_l.sum(1) + lda_cfg_t.beta) / (
+        n_wt_l.sum() + lda_cfg_t.beta * vocab)
+    n_wt_r = np.asarray(st_t.n_wt, np.float64) / fractional.scale(8)
+    p_w_rlda = {}
+    for t in range(rlda.NUM_TIERS):
+        ids = rlda.augment_word(np.arange(vocab), np.full(vocab, t))
+        sc = n_wt_r[ids].sum(1)
+        p_w_rlda[t] = (sc + prep_t.cfg.beta) / (sc.sum() + prep_t.cfg.beta * vocab)
+    ll_l = ll_r = n_tok = 0
+    for r in test_r:
+        t = int(np.clip(np.round(r.rating) - 1, 0, 4))
+        toks = np.asarray(r.tokens, int)
+        ll_l += np.log(np.maximum(p_w_lda[toks], 1e-30)).sum()
+        ll_r += np.log(np.maximum(p_w_rlda[t][toks], 1e-30)).sum()
+        n_tok += len(toks)
+    cs_lda = float(np.exp(-ll_l / n_tok))
+    cs_rlda = float(np.exp(-ll_r / n_tok))
+    results["coldstart"] = {"lda": round(cs_lda, 1), "rlda": round(cs_rlda, 1),
+                            "improvement_pct": round(
+                                100 * (cs_lda - cs_rlda) / cs_lda, 1)}
+    print(f"  cold-start held-out (given stars only): LDA {cs_lda:.1f} vs "
+          f"RLDA {cs_rlda:.1f} ({results['coldstart']['improvement_pct']:+.1f}%)")
+
+    # The paper's §6 claim ("superior performance vs standard LDA") was
+    # never validated in the paper itself; our finding: RLDA wins the
+    # rating-conditioned tasks its structure targets (in-sample conditional
+    # and cold-start), and pays a marginal-perplexity tax for the 5x
+    # vocabulary split.
+    results["rlda_wins_conditional"] = (
+        results["variants"]["rlda"]["conditional"] < p_lda_cond)
+    results["rlda_wins_coldstart"] = cs_rlda < cs_lda
+    print(f"  -> RLDA wins conditional: {results['rlda_wins_conditional']}, "
+          f"cold-start: {results['rlda_wins_coldstart']}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

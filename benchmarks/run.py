@@ -1,0 +1,71 @@
+"""Benchmark aggregator: `PYTHONPATH=src python -m benchmarks.run [--full]`.
+
+One benchmark per paper table/figure/claim (DESIGN.md §8), plus the
+roofline renderer over the dry-run artifacts. Default is the quick profile
+(CPU-friendly); --full runs the paper-scale settings.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("sampler", "sampler throughput (paper §2.4/§4.3, §5 latency)",
+     "benchmarks.sampler_bench"),
+    ("perplexity", "RLDA vs LDA quality (paper §3.1/§6)",
+     "benchmarks.perplexity_bench"),
+    ("verification", "Eq.(6) verification surface (paper §2.5.1)",
+     "benchmarks.verification_bench"),
+    ("marketplace", "marketplace economics (paper §2.5.2-4)",
+     "benchmarks.marketplace_bench"),
+    ("coreset", "core-set topic reduction (paper §3.3)",
+     "benchmarks.coreset_bench"),
+    ("roofline", "roofline terms from the dry-run (deliverable g)",
+     "benchmarks.roofline"),
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (slower)")
+    ap.add_argument("--only", default="", help="comma-separated bench names")
+    ap.add_argument("--outdir", default="experiments/bench")
+    args = ap.parse_args(argv)
+
+    only = set(args.only.split(",")) if args.only else None
+    os.makedirs(args.outdir, exist_ok=True)
+    failures = []
+    for name, desc, module in BENCHES:
+        if only and name not in only:
+            continue
+        print(f"\n=== {name}: {desc} ===")
+        t0 = time.time()
+        try:
+            import importlib
+
+            mod = importlib.import_module(module)
+            result = mod.run(quick=not args.full)
+            result = {"bench": name, "wall_s": round(time.time() - t0, 1),
+                      **(result or {})}
+            with open(os.path.join(args.outdir, f"{name}.json"), "w") as f:
+                json.dump(result, f, indent=1)
+            print(f"  [{name}] done in {result['wall_s']}s")
+        except Exception as e:
+            failures.append((name, repr(e)))
+            print(f"  [{name}] FAILED: {e}")
+            traceback.print_exc()
+    print()
+    if failures:
+        print(f"{len(failures)} benchmark(s) failed: {failures}")
+        sys.exit(1)
+    print(f"all benchmarks passed; results in {args.outdir}/")
+
+
+if __name__ == "__main__":
+    main()

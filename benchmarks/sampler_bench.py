@@ -1,0 +1,110 @@
+"""Sampler throughput — paper §2.4/§4.3 and the §5 latency anchor.
+
+Compares, on the paper's case-study scale (~487 reviews):
+  dense-seq    MALLET-style O(k) sequential Gibbs (the paper's baseline)
+  sparse-seq   SparseLDA O(k_d+k_w) sequential (the paper's phone sampler)
+  parallel     blocked parallel Gumbel-max sweep (TPU system path, jnp)
+  kernel       the same sweep through the Pallas lda_gibbs kernel (interpret
+               mode on CPU — correctness path, not a CPU speed claim)
+  alias-mh     AliasLDA stale-proposal + MH sweep (TPU adaptation)
+
+Paper anchor: "time until initial results ... approximately 5 seconds, with
+final results appearing in 15 seconds" for 487 reviews on a 2015 phone.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import alias, gibbs, perplexity, rlda
+from repro.core.types import init_state
+from repro.data import reviews
+from repro.kernels.lda_gibbs import ops as kops
+
+
+def run(quick: bool = False) -> dict:
+    n_reviews = 120 if quick else 487
+    sweeps = 5 if quick else 20
+    spec = reviews.SyntheticSpec(num_reviews=n_reviews, vocab_size=600,
+                                 num_topics=8, mean_tokens=60, seed=0)
+    corp = reviews.generate(spec)
+    prep = rlda.prepare(corp.reviews, base_vocab=600, num_topics=12,
+                        w_bits=None)
+    cfg, corpus = prep.cfg, prep.corpus
+    n_tokens = corpus.num_tokens
+    out = {"num_reviews": n_reviews, "num_tokens": int(n_tokens),
+           "sweeps": sweeps, "samplers": {}}
+
+    docs = np.asarray(corpus.docs)
+    words = np.asarray(corpus.words)
+    wts = np.asarray(corpus.weights)
+    z0 = np.asarray(init_state(cfg, corpus, jax.random.PRNGKey(0)).z)
+
+    def record(name, seconds, state=None, perp=None):
+        tput = n_tokens * sweeps / max(seconds, 1e-9)
+        if state is not None:
+            perp = float(perplexity.perplexity(cfg, state, corpus))
+        out["samplers"][name] = {
+            "seconds": round(seconds, 3),
+            "tokens_per_s": int(tput),
+            "perplexity": round(perp, 1) if perp else None,
+        }
+        print(f"  {name:12s} {seconds:7.2f}s  {tput:10.0f} tok/s"
+              f"  perp {perp:.1f}" if perp else
+              f"  {name:12s} {seconds:7.2f}s  {tput:10.0f} tok/s")
+
+    # sequential reference samplers (numpy; the mobile-side semantics)
+    from repro.core.sparse import DenseGibbsSampler, SparseLDASampler
+
+    seq_sweeps = max(1, sweeps // 4)  # sequential is slow; scale + normalize
+    for name, cls in (("dense-seq", DenseGibbsSampler),
+                      ("sparse-seq", SparseLDASampler)):
+        s = cls(cfg, docs, words, z0.copy(), weights=wts, seed=1)
+        t0 = time.time()
+        s.run(seq_sweeps)
+        dt = (time.time() - t0) * sweeps / seq_sweeps
+        from repro.core.types import Corpus, build_counts
+        import jax.numpy as jnp
+
+        st = build_counts(cfg, corpus, jnp.asarray(s.z, jnp.int32))
+        record(name, dt, state=st)
+
+    # parallel sweep (system path)
+    st = gibbs.run(cfg, corpus, jax.random.PRNGKey(1), 1)  # compile
+    t0 = time.time()
+    st = gibbs.run(cfg, corpus, jax.random.PRNGKey(2), sweeps)
+    jax.block_until_ready(st.n_t)
+    record("parallel", time.time() - t0, state=st)
+
+    # kernel path (interpret mode on CPU)
+    st_k = kops.sweep(cfg, init_state(cfg, corpus, jax.random.PRNGKey(3)),
+                      corpus, jax.random.PRNGKey(4))  # compile
+    t0 = time.time()
+    for i in range(sweeps):
+        st_k = kops.sweep(cfg, st_k, corpus, jax.random.PRNGKey(10 + i))
+    jax.block_until_ready(st_k.n_t)
+    record("kernel", time.time() - t0, state=st_k)
+
+    # alias + MH
+    st_a = init_state(cfg, corpus, jax.random.PRNGKey(5))
+    st_a = alias.mh_sweep(cfg, st_a, corpus, jax.random.PRNGKey(6), 2)
+    t0 = time.time()
+    for i in range(sweeps):
+        st_a = alias.mh_sweep(cfg, st_a, corpus, jax.random.PRNGKey(20 + i), 2)
+    jax.block_until_ready(st_a.n_t)
+    record("alias-mh", time.time() - t0, state=st_a)
+
+    # paper latency anchor: wall time to an initial (30-sweep) model
+    t0 = time.time()
+    gibbs.run(cfg, corpus, jax.random.PRNGKey(7), 30 if not quick else 5)
+    out["initial_model_s"] = round(time.time() - t0, 2)
+    print(f"  initial-model wall time: {out['initial_model_s']}s "
+          f"(paper: ~5s on a 2015 phone)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Eq. (6) verification-probability surface (paper §2.5.1).
+
+Tabulates p_v over (c1+c2) x (perplexity ratio) and checks the paper's
+qualitative claims: high credit and tight perplexity match reduce
+verification; the all-zero-credit equal-perplexity starting point sits at
+p_v = 1/6.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.chital.verification import verification_probability
+
+
+def run(quick: bool = False) -> dict:
+    credits = [-10, -4, -1, 0, 1, 4, 10]
+    ratios = [1.0, 0.9, 0.7, 0.5, 0.2]
+    table = np.zeros((len(credits), len(ratios)))
+    print("  p_v rows=c1+c2, cols=min/max perplexity ratio")
+    print("        " + "  ".join(f"{r:5.2f}" for r in ratios))
+    for i, c in enumerate(credits):
+        for j, r in enumerate(ratios):
+            table[i, j] = verification_probability(c / 2, c / 2, r * 100, 100)
+        print(f"  c={c:+3d}  " + "  ".join(f"{v:5.3f}" for v in table[i]))
+
+    start = verification_probability(0, 0, 100, 100)
+    assert abs(start - 1 / 6) < 1e-9
+    assert (np.diff(table, axis=0) <= 1e-12).all()  # credit monotone down
+    assert (np.diff(table, axis=1) >= -1e-12).all()  # mismatch monotone up
+    return {
+        "credits": credits,
+        "ratios": ratios,
+        "p_v": table.round(4).tolist(),
+        "zero_credit_equal_perp": round(float(start), 4),
+    }
+
+
+if __name__ == "__main__":
+    run()

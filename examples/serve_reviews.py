@@ -1,0 +1,141 @@
+"""End-to-end Vedalia driver (the paper's system, §3-§5):
+
+  1. reviews stream in for several products;
+  2. the Chital marketplace offloads RLDA fitting to seller devices (here:
+     worker processes running the real TPU-path Gibbs sampler);
+  3. winners are selected by perplexity and verified per Eq. (6);
+  4. new reviews trigger incremental model updates (§3.2) with periodic
+     full recomputes;
+  5. buyers receive bandwidth-frugal model views (§4.2).
+
+  PYTHONPATH=src python examples/serve_reviews.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.chital.lottery import Lottery
+from repro.chital.marketplace import Marketplace
+from repro.chital.matching import MATCHERS, BuyerRequest, Seller
+from repro.chital.verification import Submission
+from repro.core import coreset, gibbs, perplexity, rlda, update, views
+from repro.data import reviews
+
+NUM_PRODUCTS = 3
+REVIEWS_PER_PRODUCT = 200
+NEW_REVIEWS_PER_UPDATE = 40
+
+
+def make_runtime(products):
+    """Sellers actually fit the model (the real sampler, not the analytic
+    simulator): a slow seller runs fewer sweeps -> worse perplexity."""
+
+    def runtime(seller: Seller, buyer: BuyerRequest) -> Submission:
+        prep = products[buyer.buyer_id]["prep"]
+        sweeps = max(5, min(40, int(seller.speed / 400)))
+        t0 = time.time()
+        st = gibbs.run(prep.cfg, prep.corpus,
+                       jax.random.PRNGKey(seller.seller_id), sweeps)
+        p = float(perplexity.perplexity(prep.cfg, st, prep.corpus))
+        products[buyer.buyer_id].setdefault("submissions", {})[
+            seller.seller_id] = st
+        return Submission(
+            seller_id=seller.seller_id,
+            perplexity=p,
+            tokens_processed=prep.corpus.num_tokens,
+            iterations=sweeps,
+            payload=st,
+            converged_perplexity=p,  # honest sellers: converged == reported
+        )
+
+    return runtime
+
+
+def main():
+    rng = np.random.default_rng(0)
+    products = {}
+    for pid in range(NUM_PRODUCTS):
+        corp = reviews.generate(reviews.SyntheticSpec(
+            num_reviews=REVIEWS_PER_PRODUCT, vocab_size=400, num_topics=6,
+            seed=pid))
+        prep = rlda.prepare(corp.reviews, base_vocab=400, num_topics=8)
+        products[pid] = {"corp": corp, "prep": prep}
+
+    # Marketplace with real seller devices (heterogeneous speeds).
+    sellers = [Seller(seller_id=i, speed=float(rng.uniform(3000, 16000)))
+               for i in range(8)]
+    mp = Marketplace(matcher=MATCHERS["greedy_gain"](),
+                     runtime=make_runtime(products), sellers=sellers)
+
+    print("=== phase 1: initial model fits via marketplace offload ===")
+    for pid in range(NUM_PRODUCTS):
+        t0 = time.time()
+        rec = mp.submit(BuyerRequest(
+            buyer_id=pid,
+            task_tokens=products[pid]["prep"].corpus.num_tokens,
+            arrival=float(pid),
+            local_speed=1500.0),
+            now=float(pid))
+        st = rec.result.winner.payload
+        products[pid]["model"] = update.UpdatableModel(
+            cfg=products[pid]["prep"].cfg,
+            corpus=products[pid]["prep"].corpus, state=st)
+        print(f" product {pid}: winner seller "
+              f"{rec.result.winner.seller_id} "
+              f"perplexity {rec.result.winner.perplexity:.1f} "
+              f"verified={rec.result.verified} "
+              f"({time.time()-t0:.1f}s wall, {rec.tickets_awarded} tickets)")
+
+    print("\n=== phase 2: new reviews -> incremental updates (§3.2) ===")
+    pid = 0
+    model = products[pid]["model"]
+    helpful = [products[pid]["prep"].helpful]
+    unhelpful = [products[pid]["prep"].unhelpful]
+    for round_i in range(3):
+        corp_new = reviews.generate(reviews.SyntheticSpec(
+            num_reviews=NEW_REVIEWS_PER_UPDATE, vocab_size=400, num_topics=6,
+            seed=100 + round_i))
+        prep_new = rlda.prepare(corp_new.reviews, base_vocab=400,
+                                num_topics=model.cfg.num_topics)
+        helpful.append(prep_new.helpful)
+        unhelpful.append(prep_new.unhelpful)
+        t0 = time.time()
+        model = update.add_documents(
+            model,
+            np.asarray(prep_new.corpus.docs) + model.cfg.num_docs,
+            np.asarray(prep_new.corpus.words),
+            np.asarray(prep_new.corpus.weights),
+            jax.random.PRNGKey(round_i))
+        p = perplexity.perplexity(model.cfg, model.state, model.corpus)
+        kind = ("full recompute" if model.updates_since_recompute == 0
+                else "incremental")
+        print(f" update {round_i}: +{NEW_REVIEWS_PER_UPDATE} reviews, "
+              f"{kind}, perplexity {p:.1f} ({time.time()-t0:.1f}s)")
+
+    print("\n=== phase 3: serve the model view (§4.2) ===")
+    prep = products[pid]["prep"]
+    import dataclasses
+
+    # Per-review metadata grows with the corpus (the updated doc set).
+    prep = dataclasses.replace(
+        prep, cfg=model.cfg,
+        helpful=np.concatenate(helpful),
+        unhelpful=np.concatenate(unhelpful))
+    core, _ = coreset.select_core_set(model.cfg, model.state, max_topics=5)
+    view = views.build_view(prep, model.state, [int(t) for t in core])
+    assert view.validate(), "Chital validation stage failed"
+    payload = view.to_json()
+    print(f" streamed view: {len(view.topics)} topics, {len(payload)} bytes")
+    for t in view.topics[:3]:
+        print(f"  topic {t.topic_id}: w={t.probability:.2f} "
+              f"rating={t.expected_rating:.1f} words={t.top_words[:6]}")
+    print("\nmarketplace after run:",
+          f"{len(mp.history)} tasks,",
+          f"verification rate {mp.verification_rate():.1%},",
+          f"mean time saved {mp.mean_time_saved():.2f}s")
+
+
+if __name__ == "__main__":
+    main()

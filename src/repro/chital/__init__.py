@@ -1,0 +1,10 @@
+"""Chital — the distributed computation marketplace (paper §2.5).
+
+Five components, each mapped 1:1 to a module:
+  marketplace.py   task distribution + buyer/seller lifecycle (§2.5.1)
+  credit.py        zero-sum credit system (§2.5.2)
+  matching.py      real-time online bipartite matching (§2.5.3)
+  lottery.py       optional lottery incentives (§2.5.4)
+  verification.py  validation → selection → verification (§2.5.5, Eq. 6)
+  simulator.py     event-driven network simulation of the whole system
+"""

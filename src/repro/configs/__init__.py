@@ -1,0 +1,29 @@
+"""Architecture configs. Importing this package registers every arch."""
+
+from repro.configs import shapes  # noqa: F401
+from repro.configs.arctic_480b import ARCTIC_480B  # noqa: F401
+from repro.configs.base import ArchConfig, get, names, register  # noqa: F401
+from repro.configs.gemma2_9b import GEMMA2_9B, GEMMA2_9B_SW  # noqa: F401
+from repro.configs.gemma_7b import GEMMA_7B  # noqa: F401
+from repro.configs.llama4_maverick_400b_a17b import LLAMA4_MAVERICK_400B  # noqa: F401
+from repro.configs.llama_3_2_vision_90b import LLAMA_3_2_VISION_90B  # noqa: F401
+from repro.configs.phi3_medium_14b import PHI3_MEDIUM_14B  # noqa: F401
+from repro.configs.qwen2_7b import QWEN2_7B  # noqa: F401
+from repro.configs.rwkv6_1_6b import RWKV6_1_6B  # noqa: F401
+from repro.configs.whisper_base import WHISPER_BASE  # noqa: F401
+from repro.configs.zamba2_2_7b import ZAMBA2_2_7B  # noqa: F401
+
+# The 10 assigned architectures (gemma2-9b-sw is a variant, rlda-amazon is
+# the paper's own model and lives in repro.core).
+ASSIGNED = [
+    "rwkv6-1.6b",
+    "whisper-base",
+    "arctic-480b",
+    "llama-3.2-vision-90b",
+    "qwen2-7b",
+    "llama4-maverick-400b-a17b",
+    "gemma-7b",
+    "zamba2-2.7b",
+    "phi3-medium-14b",
+    "gemma2-9b",
+]

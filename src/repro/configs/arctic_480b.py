@@ -1,0 +1,31 @@
+"""Snowflake Arctic 480B — dense-MoE hybrid: 128-expert top-2 MoE in
+parallel with a dense residual MLP.
+
+[hf:Snowflake/snowflake-arctic-base] 35 layers, d_model 7168, 56 heads
+(GQA kv=8, head_dim 128), expert d_ff 4864, 128 experts top-2, vocab 32000,
+plus the dense residual branch (Arctic's defining dense+MoE composition).
+"""
+
+from repro.configs.base import ArchConfig, register
+
+ARCTIC_480B = register(
+    ArchConfig(
+        name="arctic-480b",
+        arch_type="moe",
+        num_layers=35,
+        d_model=7168,
+        num_heads=56,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=4864,  # per-expert ff
+        vocab_size=32000,
+        num_experts=128,
+        experts_per_token=2,
+        moe_dense_ff=4864,  # dense residual MLP in parallel with the MoE
+        tie_embeddings=False,
+        optimizer="adafactor",  # 480B params: AdamW fp32 states exceed HBM
+        grad_accum_dtype="bfloat16",
+        microbatch=8,
+        citation="hf:Snowflake/snowflake-arctic-base (128e top-2 + dense residual)",
+    )
+)

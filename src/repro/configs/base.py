@@ -1,0 +1,151 @@
+"""Architecture configuration schema + registry.
+
+Every assigned architecture is a frozen ArchConfig constructed in its own
+``src/repro/configs/<id>.py`` with the exact dimensions from its source
+paper/model card (cited there). ``reduced()`` derives the CPU smoke-test
+variant (≤2 layers, d_model ≤ 512, ≤4 experts) of the same family.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    arch_type: str  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # --- MLP / attention variants -------------------------------------------
+    mlp_variant: str = "swiglu"  # swiglu | geglu | gelu
+    qkv_bias: bool = False  # qwen2
+    rope_theta: float = 10000.0
+    embed_scale: bool = False  # gemma: embeddings scaled by sqrt(d_model)
+    attn_softcap: float = 0.0  # gemma2 logit soft-capping
+    final_softcap: float = 0.0  # gemma2 final-logit soft-capping
+    sliding_window: int = 0  # 0 = full attention
+    # "full" | "local_global" (gemma2: alternate sliding/full)
+    attn_pattern: str = "full"
+    post_norms: bool = False  # gemma2 sandwich norms
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+
+    # --- MoE -------------------------------------------------------------------
+    num_experts: int = 0
+    experts_per_token: int = 0
+    # Dense parallel branch: arctic's "dense residual" MLP / llama4's shared
+    # expert. 0 = none.
+    moe_dense_ff: int = 0
+    # MoE on every `moe_every`-th layer (llama4 interleaves dense/MoE, = 2).
+    moe_every: int = 1
+    # FFN width of the NON-MoE layers when moe_every == 2.
+    moe_dense_layer_ff: int = 0
+    router_zloss: float = 1e-3
+    load_balance_loss: float = 1e-2
+    capacity_factor: float = 1.25
+
+    # --- SSM / hybrid -----------------------------------------------------------
+    ssm_variant: str = ""  # rwkv6 | mamba2
+    ssm_state: int = 0  # mamba2 state dim per head
+    ssm_heads: int = 0
+    ssm_head_dim: int = 0
+    conv_width: int = 4  # mamba2 depthwise conv
+    # zamba2: one shared attention block applied every `hybrid_attn_every`
+    # mamba layers (weights shared across applications).
+    hybrid_attn_every: int = 0
+
+    # --- enc-dec / cross-attention ----------------------------------------------
+    encoder_layers: int = 0  # whisper
+    encoder_tokens: int = 0  # stub frontend: frames/patches fed to encoder
+    cross_attn_every: int = 0  # llama-3.2-vision: cross-attn layer interval
+    num_frontend_tokens: int = 0  # vlm: patch embeds consumed by cross-attn
+    max_position: int = 0  # 0 = unlimited (rope)
+
+    # --- training -----------------------------------------------------------------
+    optimizer: str = "adamw"  # adamw | adafactor (giant MoEs)
+    grad_accum_dtype: str = "float32"  # bf16 for the 400B+ MoEs (memory)
+    microbatch: int = 1  # per-device grad-accumulation steps
+    remat: bool = True
+
+    citation: str = ""
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    @property
+    def is_decoder_only(self) -> bool:
+        return self.encoder_layers == 0
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant of the same family (CPU, one step)."""
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            num_layers=2,
+            d_model=min(self.d_model, 128),
+            num_heads=min(self.num_heads, 4),
+            num_kv_heads=min(self.num_kv_heads, 2),
+            head_dim=min(self.head_dim, 32),
+            d_ff=min(self.d_ff, 256),
+            vocab_size=min(self.vocab_size, 512),
+            num_experts=min(self.num_experts, 4) if self.num_experts else 0,
+            experts_per_token=min(self.experts_per_token, 2)
+            if self.experts_per_token
+            else 0,
+            moe_dense_ff=min(self.moe_dense_ff, 128) if self.moe_dense_ff else 0,
+            moe_dense_layer_ff=min(self.moe_dense_layer_ff, 256)
+            if self.moe_dense_layer_ff
+            else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_heads=min(self.ssm_heads, 4) if self.ssm_heads else 0,
+            ssm_head_dim=min(self.ssm_head_dim, 32) if self.ssm_head_dim else 0,
+            hybrid_attn_every=min(self.hybrid_attn_every, 2)
+            if self.hybrid_attn_every
+            else 0,
+            encoder_layers=min(self.encoder_layers, 2) if self.encoder_layers else 0,
+            encoder_tokens=min(self.encoder_tokens, 16) if self.encoder_tokens else 0,
+            cross_attn_every=min(self.cross_attn_every, 2)
+            if self.cross_attn_every
+            else 0,
+            num_frontend_tokens=min(self.num_frontend_tokens, 16)
+            if self.num_frontend_tokens
+            else 0,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            microbatch=1,
+        )
+
+
+_REGISTRY: dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get(name: str) -> ArchConfig:
+    if name not in _REGISTRY:
+        # Import config modules lazily so `--arch <id>` always resolves.
+        import repro.configs  # noqa: F401  (imports all arch modules)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def names() -> list[str]:
+    import repro.configs  # noqa: F401
+
+    return sorted(_REGISTRY)

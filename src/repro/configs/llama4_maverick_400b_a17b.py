@@ -1,0 +1,37 @@
+"""Llama 4 Maverick 400B-A17B — top-1 routed MoE with a shared expert;
+early-fusion multimodal in the original (text backbone exercised here).
+
+[hf:meta-llama/Llama-4-Scout-17B-16E family, per assignment] 48 layers,
+d_model 5120, 40 heads (GQA kv=8, head_dim 128), 128 experts top-1 with
+per-expert d_ff 8192 plus a shared (always-on) expert of the same width,
+vocab 202048.
+"""
+
+from repro.configs.base import ArchConfig, register
+
+LLAMA4_MAVERICK_400B = register(
+    ArchConfig(
+        name="llama4-maverick-400b-a17b",
+        arch_type="moe",
+        num_layers=48,
+        d_model=5120,
+        num_heads=40,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,  # per-expert ff
+        vocab_size=202048,
+        num_experts=128,
+        experts_per_token=1,
+        moe_dense_ff=8192,  # shared expert (always active)
+        # Maverick interleaves dense and MoE layers (interleave_moe_layer_step
+        # = 2): 24 MoE + 24 dense(ff 16384) layers ≈ 400B total / 17B active.
+        moe_every=2,
+        moe_dense_layer_ff=16384,
+        rope_theta=500000.0,
+        tie_embeddings=False,
+        optimizer="adafactor",
+        grad_accum_dtype="bfloat16",
+        microbatch=8,
+        citation="hf:meta-llama/Llama-4-Scout-17B-16E (MoE top-1 + shared expert)",
+    )
+)

@@ -1,0 +1,31 @@
+"""Llama 3.2 Vision 90B backbone — dense decoder with cross-attention image
+layers every 5th layer; ViT/SigLIP encoder + projector stubbed.
+
+[hf:meta-llama/Llama-3.2-11B-Vision, scaled per assignment] 100 layers,
+d_model 8192, 64 heads (GQA kv=8, head_dim 128), d_ff 28672, vocab 128256.
+Every 5th layer is a gated cross-attention layer attending to projected
+image patch embeddings; input_specs() supplies (B, 1024, 8192) patch
+embeddings (the stub carve-out).
+"""
+
+from repro.configs.base import ArchConfig, register
+
+LLAMA_3_2_VISION_90B = register(
+    ArchConfig(
+        name="llama-3.2-vision-90b",
+        arch_type="vlm",
+        num_layers=100,
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=28672,
+        vocab_size=128256,
+        cross_attn_every=5,
+        num_frontend_tokens=1024,
+        rope_theta=500000.0,
+        tie_embeddings=False,
+        microbatch=16,
+        citation="hf:meta-llama/Llama-3.2-11B-Vision (cross-attn image layers)",
+    )
+)

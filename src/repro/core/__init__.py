@@ -1,0 +1,17 @@
+"""The paper's primary contribution: RLDA + fast samplers + model lifecycle.
+
+Layout:
+  types.py       corpus/state/config structures
+  fractional.py  w_bits fixed-point fractional counts (paper §4.3)
+  gibbs.py       TPU-native blocked parallel collapsed Gibbs (Gumbel-max)
+  sparse.py      faithful sequential SparseLDA + dense MALLET-style baseline
+  alias.py       AliasLDA: stale alias proposals + parallel MH
+  rlda.py        RLDA model: tiers, bias correction, token augmentation
+  quality.py     ψ_d logistic review-quality model
+  perplexity.py  evaluation (drives Chital selection/verification)
+  coreset.py     variable-topic-count core-set reduction (paper §3.3)
+  views.py       streamed model views (paper §4.2)
+  update.py      incremental updating + periodic full recompute (paper §3.2)
+"""
+
+from repro.core.types import Corpus, LDAConfig, LDAState, build_counts, init_state

@@ -1,0 +1,136 @@
+"""AliasLDA (Li et al., 2014a) adapted to TPU — stale proposals + parallel MH.
+
+AliasLDA reduces per-token cost to O(k_d) by drawing topic proposals from a
+*stale* per-word alias table (built from a snapshot of the word-topic counts)
+and correcting with Metropolis–Hastings. The paper (§3.1, §4.3) relies on
+RLDA remaining "compatible with preexisting fast sampling techniques such as
+(Yao et al., 2009; Li et al., 2014a)".
+
+TPU adaptation (DESIGN.md §3): staleness is the whole point — the proposal
+distribution is fixed for a sweep, so (i) *all* alias tables are rebuilt once
+per sweep, embarrassingly parallel over words, and (ii) proposal draws and MH
+accept/reject for *all tokens* are elementwise-parallel. We keep the paper's
+estimator and only change the schedule from token-sequential to
+sweep-parallel.
+
+Alias-table construction uses a sort-based variant of Vose's algorithm that
+is branch-free and vmap-able (O(K log K) per word, but fully parallel).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import Corpus, LDAConfig, LDAState, build_counts
+
+
+def build_alias_table(probs: jax.Array, iters: int | None = None):
+    """Branch-free alias table construction for one distribution.
+
+    Standard Vose pairs an underfull bucket with an overfull one via two
+    stacks — inherently sequential. Here we iterate a vectorized pairing:
+    sort by residual mass, pair smallest (underfull) with largest (overfull),
+    settle the underfull ones, repeat. ceil(log2 K)+1 rounds settle every
+    bucket (each round at least halves the unsettled count in expectation;
+    we run a fixed K-safe count so the result is exact).
+
+    Returns (thresh, alias): sample u~U[0,1), j~U{0..K-1}; topic = j if
+    u < thresh[j] else alias[j].
+    """
+    k = probs.shape[-1]
+    if iters is None:
+        # Each iteration settles exactly one underfull bucket; there are at
+        # most k-1 of them over the whole run (donors may become underfull).
+        iters = k
+    p = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-30)
+    mass = p * k  # Vose scaled mass; target 1.0 per bucket
+    thresh = jnp.ones(k, p.dtype)
+    alias = jnp.arange(k, dtype=jnp.int32)
+    settled = jnp.zeros(k, bool)
+
+    def body(carry, _):
+        mass, thresh, alias, settled = carry
+        # Smallest unsettled bucket i is underfull: freeze thresh[i]=mass[i],
+        # alias it to the largest unsettled bucket j, move the deficit to j.
+        i = jnp.argmin(jnp.where(settled, jnp.inf, mass))
+        j = jnp.argmax(jnp.where(settled, -jnp.inf, mass))
+        can = (~settled[i]) & (i != j) & (mass[i] < 1.0 - 1e-9)
+        thresh = thresh.at[i].set(jnp.where(can, mass[i], thresh[i]))
+        alias = alias.at[i].set(jnp.where(can, j, alias[i]))
+        mass = mass.at[j].add(jnp.where(can, mass[i] - 1.0, 0.0))
+        settled = settled.at[i].set(settled[i] | can)
+        return (mass, thresh, alias, settled), None
+
+    (mass, thresh, alias, settled), _ = jax.lax.scan(
+        body, (mass, thresh, alias, settled), None, length=iters
+    )
+    # Unsettled buckets have mass == 1 up to numerical dust: self-alias.
+    return thresh, alias
+
+
+def alias_sample(key: jax.Array, thresh: jax.Array, alias: jax.Array, shape):
+    """Draw from an alias table."""
+    k = thresh.shape[-1]
+    ku, kj = jax.random.split(key)
+    j = jax.random.randint(kj, shape, 0, k)
+    u = jax.random.uniform(ku, shape)
+    return jnp.where(u < thresh[j], j, alias[j]).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnums=(0, 4, 5))
+def mh_sweep(
+    cfg: LDAConfig,
+    state: LDAState,
+    corpus: Corpus,
+    key: jax.Array,
+    mh_steps: int = 2,
+    table_words: int | None = None,
+) -> LDAState:
+    """One AliasLDA-style sweep: stale word-proposal tables + parallel MH.
+
+    Proposal per token: q_w(t) ∝ n_tw + β  (the stale word term). MH accept
+    for move s->t with target p(t) ∝ (n_td+α)(n_tw+β)/(n_t+β̄):
+
+        a = min(1, p(t) q_w(s) / (p(s) q_w(t)))
+
+    All quantities use the sweep-stale snapshot, matching AliasLDA's
+    amortization (tables stale for O(K) draws there; one sweep here).
+    """
+    k = cfg.num_topics
+    n_dt, n_wt, n_t = state.n_dt, state.n_wt, state.n_t
+
+    # Build alias tables for all words (vmap over vocab rows).
+    probs = n_wt + cfg.beta  # (V, K)
+    thresh, alias = jax.vmap(lambda p: build_alias_table(p, iters=k))(probs)
+
+    docs, words, wts = corpus.docs, corpus.words, corpus.weights
+    z = state.z
+
+    def log_p(zt):  # stale target, with self-exclusion of own assignment
+        own = (zt == z) & (wts > 0)  # token's own count sits at its current z
+        sub = jnp.where(own, wts, 0.0)
+        ndt = jnp.maximum(n_dt[docs, zt] - sub, 0.0)
+        nwt = jnp.maximum(n_wt[words, zt] - sub, 0.0)
+        nt = jnp.maximum(n_t[zt] - sub, 1e-9)
+        return (
+            jnp.log(ndt + cfg.alpha) + jnp.log(nwt + cfg.beta) - jnp.log(nt + cfg.beta_bar)
+        )
+
+    def log_q(zt):  # stale proposal density (un-normalized is fine: ratios)
+        return jnp.log(n_wt[words, zt] + cfg.beta)
+
+    def step(z_cur, k_step):
+        kp, ka = jax.random.split(k_step)
+        keys = jax.random.split(kp, words.shape[0])
+        prop = jax.vmap(lambda kk, w: alias_sample(kk, thresh[w], alias[w], ()))(
+            keys, words
+        )
+        log_a = (log_p(prop) + log_q(z_cur)) - (log_p(z_cur) + log_q(prop))
+        accept = jnp.log(jax.random.uniform(ka, z_cur.shape)) < log_a
+        return jnp.where(accept & (wts > 0), prop, z_cur), None
+
+    z_new, _ = jax.lax.scan(step, z, jax.random.split(key, mh_steps))
+    return build_counts(cfg, corpus, z_new)

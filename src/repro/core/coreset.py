@@ -1,0 +1,81 @@
+"""Core-set topic reduction (paper §3.3).
+
+    "To accommodate a variable number of topics, we first perform RLDA
+     sampling with a fixed number of topics k. The number of topics can then
+     be reduced to a smaller core set post-sampling by using techniques in
+     (Feldman et al., 2011) combined with estimating the informativeness of
+     the top words in each topic."
+
+Coreset-style importance selection: a topic's sensitivity is its corpus mass
+(how much probability it explains) and its *informativeness* is how far its
+top-word distribution departs from the corpus background unigram distribution
+(KL divergence restricted to the top-n words — "information-void" topics sit
+close to the background and are pruned, improving small-screen UX, §2.2).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import fractional
+from repro.core.types import LDAConfig, LDAState
+
+
+def topic_mass(cfg: LDAConfig, state: LDAState) -> jnp.ndarray:
+    n_t = state.n_t
+    if cfg.w_bits is not None:
+        n_t = fractional.from_fixed(n_t, cfg.w_bits)
+    return n_t / jnp.maximum(n_t.sum(), 1e-9)
+
+
+def topic_informativeness(cfg: LDAConfig, state: LDAState, top_n: int = 20):
+    """KL(topic || background) restricted to each topic's top-n words."""
+    n_wt = state.n_wt
+    if cfg.w_bits is not None:
+        n_wt = fractional.from_fixed(n_wt, cfg.w_bits)
+    phi = (n_wt + cfg.beta) / (n_wt.sum(0, keepdims=True) + cfg.beta_bar)  # (V,K)
+    bg = n_wt.sum(1) + cfg.beta  # background unigram
+    bg = bg / bg.sum()  # (V,)
+    phi_t = phi.T  # (K, V)
+    top = jnp.argsort(-phi_t, axis=1)[:, :top_n]  # (K, n)
+    p = jnp.take_along_axis(phi_t, top, axis=1)
+    q = bg[top]
+    return jnp.sum(p * (jnp.log(p + 1e-30) - jnp.log(q + 1e-30)), axis=1)  # (K,)
+
+
+def select_core_set(
+    cfg: LDAConfig,
+    state: LDAState,
+    *,
+    mass_coverage: float = 0.9,
+    min_informativeness: float | None = None,
+    max_topics: int | None = None,
+    top_n: int = 20,
+):
+    """Pick the smallest informative topic set covering `mass_coverage`.
+
+    Returns (core_topic_ids sorted by importance, importance scores).
+    Importance = mass × informativeness (sensitivity-style score). The
+    informativeness cutoff is adaptive by default (half the median KL):
+    "information-void" topics sit near the background unigram wherever a
+    corpus's absolute KL scale lands, so a fixed threshold misfires across
+    corpora of different contrast.
+    """
+    mass = topic_mass(cfg, state)
+    info = topic_informativeness(cfg, state, top_n=top_n)
+    if min_informativeness is None:
+        min_informativeness = 0.5 * float(jnp.median(info))
+    score = mass * info
+    order = jnp.argsort(-score)
+
+    mass_sorted = mass[order]
+    cum = jnp.cumsum(mass_sorted)
+    keep_for_mass = cum <= mass_coverage
+    # Always keep at least the first topic; drop info-void ones regardless.
+    keep = (keep_for_mass | (jnp.arange(len(order)) == 0)) & (
+        info[order] >= min_informativeness
+    )
+    ids = [int(t) for t, k in zip(order, keep) if bool(k)]
+    if max_topics is not None:
+        ids = ids[:max_topics]
+    return ids, score

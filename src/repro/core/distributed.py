@@ -1,0 +1,120 @@
+"""Client/server distributed Gibbs — the Chital topology on a pod (§Perf C).
+
+The paper's network: each client holds *its own documents* and samples them
+against a locally-cached copy of the shared word-topic model; the server
+aggregates model updates. The pod rendering via `shard_map`:
+
+  data shards   = client cohorts: token arrays and doc-topic counts are
+                  partitioned by document across ('pod','data');
+  n_wt, n_t     = the model cache: replicated, rebuilt by psum — exactly
+                  the paper's "central model cache and updating server";
+  staleness     = `sync_every`: clients run several local sweeps against
+                  their stale model copy (plus their OWN running deltas)
+                  before the next server sync — AliasLDA-grade staleness
+                  (§2.4) amortizes the sync collective over M sweeps.
+
+Contrast with the naive GSPMD lowering of `gibbs.sweep` (model-sharded
+n_dt): there the partitioner cannot prove doc-locality and all-gathers the
+entire token corpus to every device each sweep — the dominant collective
+in the baseline dry-run. Here doc-locality is structural.
+
+Caller contract: documents are partitioned contiguously across the data
+shards; `docs` holds SHARD-LOCAL doc ids in [0, num_docs/n_shards).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import fractional
+from repro.core.gibbs import resample_block
+from repro.core.types import LDAConfig
+
+
+def _local_sweep(cfg, docs, words, z, wts, n_dt, n_wt, n_t, key, block):
+    """One full resampling pass over this shard's tokens (pure local)."""
+    n = docs.shape[0]
+    nblocks = -(-n // block)
+    pad = nblocks * block - n
+
+    def padded(x, fill=0):
+        return jnp.pad(x, (0, pad), constant_values=fill)
+
+    d_b = padded(docs).reshape(nblocks, block)
+    w_b = padded(words).reshape(nblocks, block)
+    z_b = padded(z).reshape(nblocks, block)
+    wt_b = padded(wts, 0).reshape(nblocks, block)
+    keys = jax.random.split(key, nblocks)
+
+    def body(args):
+        d, w, zz, wt, k = args
+        g = jax.random.gumbel(k, (block, cfg.num_topics), jnp.float32)
+        return resample_block(cfg, d, w, zz, wt, n_dt, n_wt, n_t, g)
+
+    return jax.lax.map(body, (d_b, w_b, z_b, wt_b, keys)).reshape(-1)[:n]
+
+
+def make_client_server_sweep(cfg: LDAConfig, mesh, *, block: int = 8192,
+                             sync_every: int = 1):
+    """Returns jit-able fn(docs, words, z, wts, n_dt_local, n_wt, key) ->
+    (z, n_dt_local, n_wt, n_t), running `sync_every` client-local sweeps
+    per server sync. Counts are real-valued float32 (callers on the w_bits
+    path convert at the boundary)."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = P(data_axes if len(data_axes) > 1 else data_axes[0])
+    n_shards = 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for a in data_axes:
+        n_shards *= sizes[a]
+    assert cfg.num_docs % n_shards == 0, (cfg.num_docs, n_shards)
+    d_local = cfg.num_docs // n_shards
+
+    def shard_fn(docs, words, z, wts, n_dt, n_wt, key):
+        # Distinct randomness per client cohort.
+        idx = jnp.int32(0)
+        for a in data_axes:
+            idx = idx * sizes[a] + jax.lax.axis_index(a)
+        key = jax.random.fold_in(key, idx)
+
+        # The model cache minus this client's own contribution: local
+        # deltas stay fresh while other clients' updates stay stale.
+        def own_contrib(zz):
+            return (jnp.zeros_like(n_wt)
+                    .at[words, zz].add(wts.astype(n_wt.dtype)))
+
+        n_wt_others = n_wt - own_contrib(z)
+
+        for i in range(sync_every):
+            key, sub = jax.random.split(key)
+            cur_wt = n_wt_others + own_contrib(z)
+            cur_t = cur_wt.sum(axis=0)
+            z = _local_sweep(cfg, docs, words, z, wts, n_dt, cur_wt, cur_t,
+                             sub, block)
+            n_dt = (jnp.zeros_like(n_dt)
+                    .at[docs, z].add(wts.astype(n_dt.dtype)))
+
+        # Server sync: aggregate every client's contribution (the paper's
+        # "model cache and updating server", one all-reduce per M sweeps).
+        n_wt_new = jax.lax.psum(own_contrib(z), data_axes)
+        return z, n_dt, n_wt_new, n_wt_new.sum(axis=0)
+
+    mapped = shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(bspec, bspec, bspec, bspec, P(bspec[0], None),
+                  P(None, None), P()),
+        out_specs=(bspec, P(bspec[0], None), P(None, None), P(None)),
+        check_vma=False,
+    )
+
+    def sweep(docs, words, z, wts, n_dt_local, n_wt, key):
+        return mapped(docs, words, z, wts, n_dt_local, n_wt, key)
+
+    sweep.d_local = d_local
+    sweep.n_shards = n_shards
+    return sweep

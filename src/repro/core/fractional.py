@@ -1,0 +1,49 @@
+"""Approximate fractional counts via fixed-point integers (paper §4.3).
+
+    "Approximate weighting is performed by allocating the bottom w_bits bits
+     of review-topic and word-topic counts for fractional counts. What
+     previously would correspond to a count increment of 1 is mapped to an
+     increment of 2^(w_bits+1). Fractional counts can then be approximated as
+     an integer-rounded fraction of 2^(w_bits+1), providing us with
+     1/2^(w_bits+1) precision. Count sparsity can be imposed by reducing the
+     value of w_bits — all fractional counts below 1/2^(w_bits+2) will be
+     treated as a 0-count."
+
+We follow the paper exactly: the fixed-point scale is ``2**(w_bits + 1)``;
+round-to-nearest gives |err| <= 1/2^(w_bits+2) per conversion, and any real
+weight below 1/2^(w_bits+2) rounds to a stored 0 (the sparsity flush).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def scale(w_bits: int) -> int:
+    """Fixed-point scale: a real count of 1.0 is stored as 2^(w_bits+1)."""
+    return 1 << (w_bits + 1)
+
+
+def precision(w_bits: int) -> float:
+    """Representable precision 1/2^(w_bits+1) (paper §4.3)."""
+    return 1.0 / scale(w_bits)
+
+
+def flush_threshold(w_bits: int) -> float:
+    """Real weights below this are stored as exactly 0 (sparsity flush)."""
+    return 1.0 / (1 << (w_bits + 2))
+
+
+def to_fixed(x, w_bits: int):
+    """Real-valued counts/weights -> int32 fixed point (round to nearest)."""
+    return jnp.round(jnp.asarray(x, jnp.float32) * scale(w_bits)).astype(jnp.int32)
+
+
+def from_fixed(n, w_bits: int):
+    """int32 fixed point -> real-valued counts."""
+    return jnp.asarray(n, jnp.float32) / scale(w_bits)
+
+
+def fixed_increment(counts, index, weight, w_bits: int):
+    """Scatter-add a fractional weight into an int32 fixed-point count tensor."""
+    return counts.at[index].add(to_fixed(weight, w_bits))

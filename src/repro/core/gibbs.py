@@ -1,0 +1,152 @@
+"""Collapsed Gibbs sampling for (R)LDA — TPU-native blocked parallel sweep.
+
+The paper's mobile sampler is sequential (SparseLDA buckets, AliasLDA MH).
+On TPU we keep the collapsed-Gibbs estimator (paper Eq. 5)
+
+    p(z_di = t | rest) ∝ (n_td^-di + α_t)(n_tw^-di + β_w) / (n_t^-di + β̄)
+
+but resample *all tokens of a sweep in parallel* against a sweep-stale count
+snapshot with exact self-exclusion (AD-LDA-style; see DESIGN.md §3). Sampling
+is Gumbel-max over the dense (token × topic) score tile — branch-free VPU
+work. Counts are rebuilt by scatter-add and (in the distributed variant)
+word-topic deltas are all-reduced across the data axis, which is the
+jax-native rendering of the paper's central "model cache and updating server".
+
+The per-tile score+sample computation is also available as a Pallas TPU
+kernel (`repro.kernels.lda_gibbs`); this module is the pure-jnp system path
+and the oracle the kernel is tested against.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fractional
+from repro.core.types import Corpus, LDAConfig, LDAState, build_counts
+
+
+def _scores(cfg: LDAConfig, rows_d, rows_w, tot, own):
+    """Log unnormalized p(z=t|rest) for a (TB, K) tile with self-exclusion.
+
+    rows_d/rows_w/tot are *sweep-stale* gathered counts in real units; `own`
+    is the one-hot (weight-scaled) contribution of each token's current
+    assignment, subtracted to realize the ``-di`` superscript of Eq. (5)
+    exactly for the token's own count.
+    """
+    rows_d = jnp.maximum(rows_d - own, 0.0)
+    rows_w = jnp.maximum(rows_w - own, 0.0)
+    tot = jnp.maximum(tot - own, 1e-9)
+    return (
+        jnp.log(rows_d + cfg.alpha)
+        + jnp.log(rows_w + cfg.beta)
+        - jnp.log(tot + cfg.beta_bar)
+    )
+
+
+def resample_block(
+    cfg: LDAConfig,
+    docs_b: jax.Array,
+    words_b: jax.Array,
+    z_b: jax.Array,
+    weights_b: jax.Array,
+    n_dt: jax.Array,
+    n_wt: jax.Array,
+    n_t: jax.Array,
+    gumbel_b: jax.Array,
+) -> jax.Array:
+    """Resample one block of tokens against stale counts (pure jnp oracle)."""
+    k = cfg.num_topics
+    rows_d = n_dt[docs_b]  # (TB, K)
+    rows_w = n_wt[words_b]  # (TB, K)
+    tot = jnp.broadcast_to(n_t[None, :], rows_d.shape)
+    own = jax.nn.one_hot(z_b, k, dtype=rows_d.dtype) * weights_b[:, None]
+    logits = _scores(cfg, rows_d, rows_w, tot, own)
+    z_new = jnp.argmax(logits + gumbel_b, axis=-1).astype(z_b.dtype)
+    # Padding tokens (weight 0) keep their assignment so rebuilds are stable.
+    return jnp.where(weights_b > 0.0, z_new, z_b)
+
+
+@partial(jax.jit, static_argnums=(0, 4))
+def sweep(
+    cfg: LDAConfig,
+    state: LDAState,
+    corpus: Corpus,
+    key: jax.Array,
+    block: int = 4096,
+) -> LDAState:
+    """One full parallel Gibbs sweep; returns the new state.
+
+    Tokens are processed in blocks of `block` via lax.map so peak memory is
+    O(block · K) regardless of corpus size.
+    """
+    n = corpus.num_tokens
+    nblocks = -(-n // block)
+    pad = nblocks * block - n
+
+    def padded(x, fill=0):
+        return jnp.pad(x, (0, pad), constant_values=fill)
+
+    docs = padded(corpus.docs).reshape(nblocks, block)
+    words = padded(corpus.words).reshape(nblocks, block)
+    z = padded(state.z).reshape(nblocks, block)
+    wts = padded(corpus.weights, 0).reshape(nblocks, block)
+    keys = jax.random.split(key, nblocks)
+
+    if cfg.w_bits is not None:
+        n_dt = fractional.from_fixed(state.n_dt, cfg.w_bits)
+        n_wt = fractional.from_fixed(state.n_wt, cfg.w_bits)
+        n_t = fractional.from_fixed(state.n_t, cfg.w_bits)
+    else:
+        n_dt, n_wt, n_t = state.n_dt, state.n_wt, state.n_t
+
+    def body(args):
+        d_b, w_b, z_b, wt_b, k_b = args
+        g = jax.random.gumbel(k_b, (block, cfg.num_topics), jnp.float32)
+        return resample_block(cfg, d_b, w_b, z_b, wt_b, n_dt, n_wt, n_t, g)
+
+    z_new = jax.lax.map(body, (docs, words, z, wts, keys)).reshape(-1)[:n]
+
+    new = build_counts(cfg, corpus, z_new)
+    if cfg.w_bits is not None:
+        # Fixed-point path (paper §4.3): rebuild in real units, store rounded.
+        new = LDAState(
+            z=z_new,
+            n_dt=fractional.to_fixed(new.n_dt, cfg.w_bits),
+            n_wt=fractional.to_fixed(new.n_wt, cfg.w_bits),
+            n_t=fractional.to_fixed(new.n_t, cfg.w_bits),
+        )
+    return new
+
+
+def run(
+    cfg: LDAConfig,
+    corpus: Corpus,
+    key: jax.Array,
+    num_sweeps: int,
+    state: Optional[LDAState] = None,
+    block: int = 4096,
+) -> LDAState:
+    """Run `num_sweeps` full sweeps from scratch or a warm state."""
+    from repro.core.types import init_state
+
+    if state is None:
+        key, sub = jax.random.split(key)
+        state = init_state(cfg, corpus, sub)
+        if cfg.w_bits is not None:
+            state = LDAState(
+                z=state.z,
+                n_dt=fractional.to_fixed(state.n_dt, cfg.w_bits),
+                n_wt=fractional.to_fixed(state.n_wt, cfg.w_bits),
+                n_t=fractional.to_fixed(state.n_t, cfg.w_bits),
+            )
+
+    def body(carry, k):
+        return sweep(cfg, carry, corpus, k, block), None
+
+    keys = jax.random.split(key, num_sweeps)
+    state, _ = jax.lax.scan(body, state, keys)
+    return state

@@ -1,0 +1,84 @@
+"""Review-quality logistic model: {ν_d, u_d, h_d} -> is_relevant (paper §4.3).
+
+    "We train a logistic regression model mapping {ν_d, u_d, h_d} ->
+     is_relevant ... we later chose to hand-label a set of reviews in order
+     to train our classifier."
+
+ψ_d = P(is_relevant) is then used as the review's fractional count weight.
+Trained with full-batch gradient descent in JAX (the dataset is a hand-label
+scale dataset; this is not a bottleneck).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QualityModel:
+    w: jax.Array  # (3,) weights for (ν, u, h) — standardized features
+    b: jax.Array  # scalar bias
+    mean: jax.Array  # (3,) feature standardization
+    std: jax.Array  # (3,)
+
+
+def _features(nu, u, h):
+    # log1p vote counts — raw vote counts are heavy-tailed.
+    return jnp.stack(
+        [jnp.asarray(nu, jnp.float32), jnp.log1p(jnp.asarray(u, jnp.float32)),
+         jnp.log1p(jnp.asarray(h, jnp.float32))],
+        axis=-1,
+    )
+
+
+def default_model() -> QualityModel:
+    """Sensible prior model when no labels are available: quality rises with
+    writing quality and helpful votes, falls with unhelpful votes."""
+    return QualityModel(
+        w=jnp.array([1.5, -1.0, 1.0]),
+        b=jnp.array(1.0),
+        mean=jnp.zeros(3),
+        std=jnp.ones(3),
+    )
+
+
+def predict(model: QualityModel, nu, u, h) -> jax.Array:
+    x = (_features(nu, u, h) - model.mean) / model.std
+    return jax.nn.sigmoid(x @ model.w + model.b)
+
+
+def train(
+    nu, u, h, labels, *, steps: int = 500, lr: float = 0.3, l2: float = 1e-3
+) -> QualityModel:
+    """Full-batch logistic regression on hand-labeled relevance."""
+    x_raw = _features(nu, u, h)
+    mean = x_raw.mean(0)
+    std = jnp.maximum(x_raw.std(0), 1e-6)
+    x = (x_raw - mean) / std
+    y = jnp.asarray(labels, jnp.float32)
+
+    def loss(params):
+        w, b = params
+        logits = x @ w + b
+        nll = jnp.mean(
+            jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+        )
+        return nll + l2 * jnp.sum(w**2)
+
+    grad = jax.jit(jax.grad(loss))
+
+    def body(params, _):
+        g = grad(params)
+        return (params[0] - lr * g[0], params[1] - lr * g[1]), None
+
+    (w, b), _ = jax.lax.scan(body, (jnp.zeros(3), jnp.array(0.0)), None, length=steps)
+    return QualityModel(w=w, b=b, mean=mean, std=std)
+
+
+def accuracy(model: QualityModel, nu, u, h, labels) -> float:
+    p = predict(model, nu, u, h)
+    return float(jnp.mean((p > 0.5) == (jnp.asarray(labels) > 0.5)))

@@ -1,0 +1,123 @@
+"""Core data structures for LDA / RLDA.
+
+The corpus is stored in flat token-parallel form (``docs[i]``, ``words[i]``,
+``z[i]``, ``weights[i]``), which is the layout the TPU samplers tile over.
+Counts live in an :class:`LDAState`; they may be real-valued (float32 path)
+or fixed-point int32 (paper §4.3 approximate weighting, ``w_bits``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LDAConfig:
+    """Hyperparameters of (R)LDA.
+
+    alpha/beta are the symmetric Dirichlet concentration parameters of the
+    doc-topic and topic-word distributions (paper Eq. 1-2).
+    """
+
+    num_topics: int
+    vocab_size: int
+    num_docs: int
+    alpha: float = 0.1
+    beta: float = 0.01
+    # Fixed-point fractional counts (paper §4.3): None => float32 counts.
+    w_bits: Optional[int] = None
+
+    @property
+    def beta_bar(self) -> float:
+        """Joint normalizer  β̄ = Σ_w β_w  (symmetric prior)."""
+        return self.beta * self.vocab_size
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Corpus:
+    """Flat token-parallel corpus.
+
+    Attributes:
+      docs:    (N,) int32 document id per token.
+      words:   (N,) int32 word id per token (already rating-augmented for RLDA).
+      weights: (N,) float32 per-token fractional weight (ψ_d · c_{d,tier});
+               0.0 marks padding tokens.
+    """
+
+    docs: jax.Array
+    words: jax.Array
+    weights: jax.Array
+
+    @property
+    def num_tokens(self) -> int:
+        return int(self.docs.shape[0])
+
+    def tree_flatten(self):
+        return (self.docs, self.words, self.weights), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LDAState:
+    """Collapsed-Gibbs sufficient statistics + assignments.
+
+    n_dt: (D, K) doc-topic counts, n_wt: (V, K) word-topic counts,
+    n_t: (K,) topic totals, z: (N,) current topic assignment per token.
+    Counts are float32 (real units) or int32 (fixed point, see fractional.py).
+    """
+
+    z: jax.Array
+    n_dt: jax.Array
+    n_wt: jax.Array
+    n_t: jax.Array
+
+    def tree_flatten(self):
+        return (self.z, self.n_dt, self.n_wt, self.n_t), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def build_counts(
+    cfg: LDAConfig, corpus: Corpus, z: jax.Array, dtype=jnp.float32
+) -> LDAState:
+    """Rebuild all count tensors from assignments by scatter-add."""
+    w = corpus.weights.astype(dtype)
+    n_dt = jnp.zeros((cfg.num_docs, cfg.num_topics), dtype).at[corpus.docs, z].add(w)
+    n_wt = jnp.zeros((cfg.vocab_size, cfg.num_topics), dtype).at[corpus.words, z].add(w)
+    n_t = n_wt.sum(axis=0)
+    return LDAState(z=z, n_dt=n_dt, n_wt=n_wt, n_t=n_t)
+
+
+@partial(jax.jit, static_argnums=(0,))
+def init_state(cfg: LDAConfig, corpus: Corpus, key: jax.Array) -> LDAState:
+    """Uniform-random topic initialization (standard collapsed-Gibbs init)."""
+    z0 = jax.random.randint(key, (corpus.num_tokens,), 0, cfg.num_topics)
+    return build_counts(cfg, corpus, z0)
+
+
+def corpus_from_docs(doc_word_lists, vocab_size: int, weights=None) -> Corpus:
+    """Build a flat Corpus from a list of per-document word-id lists."""
+    docs, words, wts = [], [], []
+    for d, wl in enumerate(doc_word_lists):
+        for j, w in enumerate(wl):
+            docs.append(d)
+            words.append(w)
+            wts.append(1.0 if weights is None else float(weights[d]))
+    return Corpus(
+        docs=jnp.asarray(np.array(docs, np.int32)),
+        words=jnp.asarray(np.array(words, np.int32)),
+        weights=jnp.asarray(np.array(wts, np.float32)),
+    )

@@ -1,0 +1,118 @@
+"""Incremental model updating (paper §3.2).
+
+    "Model updating follows naturally by performing sampling using the
+     existing model with the new reviews added to the review set. ... To
+     avoid convergence to poor optima, we recompute a product model after
+     every few updates."
+
+New documents' tokens are initialized by sampling from the current topic-word
+posterior (a warm start), appended to the corpus, and only *their* tokens are
+resampled for a few sweeps (old tokens keep their assignments — their counts
+still participate). Every `full_recompute_every` updates, a full recompute
+(all tokens resampled from scratch) restores quality.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fractional, gibbs
+from repro.core.types import Corpus, LDAConfig, LDAState, build_counts
+
+
+@dataclasses.dataclass
+class UpdatableModel:
+    cfg: LDAConfig
+    corpus: Corpus
+    state: LDAState
+    updates_since_recompute: int = 0
+    full_recompute_every: int = 5
+
+
+def _phi(cfg: LDAConfig, state: LDAState):
+    n_wt, n_t = state.n_wt, state.n_t
+    if cfg.w_bits is not None:
+        n_wt = fractional.from_fixed(n_wt, cfg.w_bits)
+        n_t = fractional.from_fixed(n_t, cfg.w_bits)
+    return (n_wt + cfg.beta) / (n_t[None, :] + cfg.beta_bar)  # (V, K)
+
+
+def add_documents(
+    model: UpdatableModel,
+    new_docs: jax.Array,
+    new_words: jax.Array,
+    new_weights: jax.Array,
+    key: jax.Array,
+    update_sweeps: int = 3,
+) -> UpdatableModel:
+    """Append new reviews and incrementally resample only their tokens."""
+    cfg, corpus, state = model.cfg, model.corpus, model.state
+
+    new_docs = jnp.asarray(new_docs, jnp.int32)
+    num_new_docs = int(new_docs.max()) + 1 if new_docs.size else 0
+    new_cfg = dataclasses.replace(cfg, num_docs=max(cfg.num_docs, num_new_docs))
+
+    # Warm-start z for new tokens from the current word posterior φ̂.
+    key, sub = jax.random.split(key)
+    phi = _phi(cfg, state)
+    logits = jnp.log(phi[new_words] + 1e-30)  # (n_new, K)
+    z_new = jax.random.categorical(sub, logits, axis=-1).astype(state.z.dtype)
+
+    merged = Corpus(
+        docs=jnp.concatenate([corpus.docs, new_docs]),
+        words=jnp.concatenate([corpus.words, jnp.asarray(new_words, jnp.int32)]),
+        weights=jnp.concatenate(
+            [corpus.weights, jnp.asarray(new_weights, jnp.float32)]
+        ),
+    )
+    z_all = jnp.concatenate([state.z, z_new])
+    merged_state = build_counts(new_cfg, merged, z_all)
+    if new_cfg.w_bits is not None:
+        merged_state = LDAState(
+            z=z_all,
+            n_dt=fractional.to_fixed(merged_state.n_dt, new_cfg.w_bits),
+            n_wt=fractional.to_fixed(merged_state.n_wt, new_cfg.w_bits),
+            n_t=fractional.to_fixed(merged_state.n_t, new_cfg.w_bits),
+        )
+
+    updates = model.updates_since_recompute + 1
+    if updates >= model.full_recompute_every:
+        # Periodic full recompute (all tokens, from fresh init).
+        state_out = gibbs.run(new_cfg, merged, key, num_sweeps=update_sweeps * 3)
+        updates = 0
+    else:
+        # Incremental: resample only the new tokens (mask = weights of old -> 0
+        # during resampling, but their counts stay in the state).
+        mask = jnp.concatenate(
+            [jnp.zeros_like(corpus.weights), jnp.ones_like(new_weights, jnp.float32)]
+        )
+        frozen = Corpus(
+            docs=merged.docs, words=merged.words, weights=merged.weights * mask
+        )
+        st = merged_state
+        for k_s in jax.random.split(key, update_sweeps):
+            # Resample new tokens against full counts; rebuild from merged
+            # corpus so old tokens keep contributing their true weights.
+            z_step = gibbs.sweep(new_cfg, st, frozen, k_s).z
+            z_keep = jnp.where(mask > 0, z_step, st.z)
+            st2 = build_counts(new_cfg, merged, z_keep)
+            if new_cfg.w_bits is not None:
+                st2 = LDAState(
+                    z=z_keep,
+                    n_dt=fractional.to_fixed(st2.n_dt, new_cfg.w_bits),
+                    n_wt=fractional.to_fixed(st2.n_wt, new_cfg.w_bits),
+                    n_t=fractional.to_fixed(st2.n_t, new_cfg.w_bits),
+                )
+            st = st2
+        state_out = st
+
+    return UpdatableModel(
+        cfg=new_cfg,
+        corpus=merged,
+        state=state_out,
+        updates_since_recompute=updates,
+        full_recompute_every=model.full_recompute_every,
+    )

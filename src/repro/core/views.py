@@ -1,0 +1,127 @@
+"""Model views (paper §4.2) — the bandwidth-frugal serving payload.
+
+    "To reduce bandwidth and protect models from outside use, we avoid
+     sending the entire model to the end user. The initial model view is
+     streamed to the user as a list of topic descriptions (id, probability,
+     expected rating, expected helpfulness, expected unhelpfulness) and their
+     associated top n words."
+
+Expected rating per topic comes from the rating-tier structure folded into
+the augmented vocabulary (tier of augmented word id = id % 5 → stars 1..5);
+expected helpfulness/unhelpfulness are count-weighted document averages.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.core import fractional
+from repro.core.rlda import NUM_TIERS, RLDACorpus, strip_rating
+from repro.core.types import LDAState
+
+
+@dataclasses.dataclass
+class TopicView:
+    topic_id: int
+    probability: float
+    expected_rating: float
+    expected_helpful: float
+    expected_unhelpful: float
+    top_words: list[int]  # base-vocab ids, rating suffix stripped
+    top_word_weights: list[float]
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ModelView:
+    topics: list[TopicView]
+
+    def to_json(self) -> str:
+        return json.dumps([t.to_dict() for t in self.topics])
+
+    @staticmethod
+    def from_json(s: str) -> "ModelView":
+        return ModelView(topics=[TopicView(**d) for d in json.loads(s)])
+
+    def validate(self) -> bool:
+        """Chital validation stage (§2.5.5): basic distribution sanity."""
+        if not self.topics:
+            return False
+        probs = np.array([t.probability for t in self.topics])
+        if (probs < 0).any() or probs.sum() > 1.0 + 1e-6:
+            return False
+        for t in self.topics:
+            w = np.array(t.top_word_weights)
+            if (w < 0).any() or w.sum() > 1.0 + 1e-6:
+                return False
+            if not (1.0 <= t.expected_rating <= 5.0):
+                return False
+        return True
+
+
+def build_view(
+    prep: RLDACorpus,
+    state: LDAState,
+    topic_ids: list[int],
+    top_n: int = 10,
+) -> ModelView:
+    """Compute the streamed model view for a set of (core) topics."""
+    cfg = prep.cfg
+    n_wt = np.asarray(state.n_wt, np.float64)
+    n_dt = np.asarray(state.n_dt, np.float64)
+    if cfg.w_bits is not None:
+        s = float(fractional.scale(cfg.w_bits))
+        n_wt, n_dt = n_wt / s, n_dt / s
+    n_t = n_wt.sum(axis=0)
+    total = max(n_t.sum(), 1e-9)
+
+    views = []
+    for t in topic_ids:
+        # Aggregate augmented-word counts back to base words for display.
+        col = n_wt[:, t]
+        base, tier = strip_rating(np.arange(cfg.vocab_size))
+        base_counts = np.bincount(base, weights=col, minlength=prep.base_vocab)
+        top = np.argsort(-base_counts)[:top_n]
+        denom = max(base_counts.sum(), 1e-9)
+
+        # Expected rating: tier mass within the topic (tiers are 1..5 stars).
+        tier_mass = np.bincount(tier, weights=col, minlength=NUM_TIERS)
+        tw = tier_mass / max(tier_mass.sum(), 1e-9)
+        exp_rating = float(np.dot(tw, np.arange(1, NUM_TIERS + 1)))
+
+        # Expected helpful/unhelpful: doc-count-weighted averages.
+        doc_w = n_dt[:, t]
+        dw = doc_w / max(doc_w.sum(), 1e-9)
+        exp_help = float(np.dot(dw, prep.helpful))
+        exp_unhelp = float(np.dot(dw, prep.unhelpful))
+
+        views.append(
+            TopicView(
+                topic_id=int(t),
+                probability=float(n_t[t] / total),
+                expected_rating=min(max(exp_rating, 1.0), 5.0),
+                expected_helpful=exp_help,
+                expected_unhelpful=exp_unhelp,
+                top_words=[int(w) for w in top],
+                top_word_weights=[float(base_counts[w] / denom) for w in top],
+            )
+        )
+    return ModelView(topics=views)
+
+
+def top_reviews_for_topic(
+    prep: RLDACorpus, state: LDAState, topic_id: int, n: int = 5
+) -> list[int]:
+    """Topic-probability-sorted review ids (the ViewPager ordering, §3.4)."""
+    n_dt = np.asarray(state.n_dt, np.float64)
+    if prep.cfg.w_bits is not None:
+        n_dt = n_dt / fractional.scale(prep.cfg.w_bits)
+    theta = (n_dt + prep.cfg.alpha) / (
+        n_dt.sum(1, keepdims=True) + prep.cfg.alpha * prep.cfg.num_topics
+    )
+    return [int(d) for d in np.argsort(-theta[:, topic_id])[:n]]

@@ -1,0 +1,1 @@
+"""Data substrate: synthetic Amazon-like review generation + tokenization."""

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the paper's compute hot spots. Each subpackage has
+# kernel.py (pl.pallas_call + explicit BlockSpec VMEM tiling), ops.py (jit'd
+# wrapper; interpret=True on CPU), and ref.py (pure-jnp oracle):
+#
+#   lda_gibbs    fused collapsed-Gibbs score + Gumbel-max resample — the
+#                paper's phone-side hot loop, blocked for the VPU/MXU
+#   decode_attn  flash-decode GQA over (ring) KV caches — the serving path
+#   chunk_scan   chunked diagonal-decay linear recurrence (RWKV6 / Mamba2)

@@ -1,0 +1,28 @@
+"""jit'd wrapper for the chunk_scan kernel (interpret=True on CPU).
+
+Drop-in replacement for `repro.models.ssm.chunk_scan` — same signature and
+return values — selected by the model code's `use_kernel=True` path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.chunk_scan.kernel import chunk_scan_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def chunk_scan(w, k, v, q, u, *, include_current: bool, chunk: int = 64,
+               s0=None):
+    """(y, final_state); y matches v.dtype, state is fp32."""
+    return chunk_scan_pallas(
+        w, k, v, q, u,
+        include_current=include_current,
+        chunk=chunk,
+        s0=s0,
+        interpret=_interpret(),
+    )

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the chunk_scan kernel: the sequential recurrence.
+
+Re-exports `repro.models.ssm.chunk_scan_reference`, the token-by-token
+lax.scan evaluation of
+
+    S_t = diag(w_t) · S_{t-1} + k_t v_tᵀ
+    y_t = q_t · S_{t-1} + (q_t · (u ⊙ k_t)) v_t        (rwkv6)
+    y_t = q_t · S_t                                     (mamba2)
+"""
+
+from repro.models.ssm import chunk_scan_reference  # noqa: F401

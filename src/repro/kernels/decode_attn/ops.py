@@ -1,0 +1,23 @@
+"""jit'd wrapper for the decode_attn kernel (interpret=True on CPU).
+
+Signature-compatible with `repro.models.attention.decode_attention`.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attn.kernel import decode_attention_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def decode_attention(q, k_cache, v_cache, *, length, pos, window: int = 0,
+                     ring: bool = False, cap: float = 0.0, kv_block: int = 512):
+    return decode_attention_pallas(
+        q, k_cache, v_cache,
+        length=length, pos=pos, window=window, ring=ring, cap=cap,
+        kv_block=kv_block, interpret=_interpret(),
+    )

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the decode_attn kernel.
+
+Re-exports `repro.models.attention.decode_attention` — single-token GQA
+attention over a (possibly ring) KV cache with sliding-window masking and
+gemma2 logit soft-capping.
+"""
+
+from repro.models.attention import decode_attention  # noqa: F401

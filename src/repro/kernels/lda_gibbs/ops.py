@@ -1,0 +1,93 @@
+"""jit'd wrapper around the lda_gibbs kernel: pad, gather, tile, un-pad.
+
+`sweep_resample(cfg, state, corpus, key)` is a drop-in replacement for the
+score+sample inner stage of `repro.core.gibbs.sweep`: counts are gathered
+(XLA gather — efficient on TPU), the kernel fuses scoring and Gumbel-max
+sampling per VMEM tile, and counts are rebuilt outside. On CPU the kernel
+body runs in interpret mode.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fractional
+from repro.core.types import Corpus, LDAConfig, LDAState, build_counts
+from repro.kernels.lda_gibbs.kernel import gibbs_resample_blocked
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnums=(0, 4))
+def sweep_resample(
+    cfg: LDAConfig,
+    state: LDAState,
+    corpus: Corpus,
+    key: jax.Array,
+    token_block: int = 256,
+) -> jax.Array:
+    """One full resampling pass; returns new z (counts rebuilt by caller)."""
+    n = corpus.num_tokens
+    k = cfg.num_topics
+    kp = -(-k // 128) * 128  # lane-pad K to 128
+    npad = -(-n // token_block) * token_block
+
+    # Fixed-point counts are gathered *as int32* and rescaled inside the
+    # kernel (saves the full (D,K)/(V,K) float materialization of from_fixed).
+    rows_d = state.n_dt[corpus.docs]  # (N, K) gather outside the kernel
+    rows_w = state.n_wt[corpus.words]
+    n_t = state.n_t
+
+    def pad2(x, fill=0):
+        return jnp.pad(
+            x, ((0, npad - n), (0, kp - k)), constant_values=fill
+        )
+
+    def pad1(x, fill=0):
+        return jnp.pad(x, (0, npad - n), constant_values=fill)
+
+    gumbel = jax.random.gumbel(key, (npad, kp), jnp.float32)
+    # Padded topics get -inf scores via zero counts + -inf gumbel.
+    gumbel = jnp.where(jnp.arange(kp)[None, :] < k, gumbel, -jnp.inf)
+
+    z_new = gibbs_resample_blocked(
+        pad2(rows_d),
+        pad2(rows_w),
+        jnp.pad(n_t, (0, kp - k)),
+        pad1(state.z),
+        pad1(corpus.weights, 0.0),
+        gumbel,
+        alpha=cfg.alpha,
+        beta=cfg.beta,
+        beta_bar=cfg.beta_bar,
+        w_bits=cfg.w_bits,
+        token_block=token_block,
+        interpret=_interpret(),
+    )
+    return z_new[:n]
+
+
+@partial(jax.jit, static_argnums=(0, 4))
+def sweep(
+    cfg: LDAConfig,
+    state: LDAState,
+    corpus: Corpus,
+    key: jax.Array,
+    token_block: int = 256,
+) -> LDAState:
+    """Full kernel-path Gibbs sweep (resample + count rebuild)."""
+    z_new = sweep_resample(cfg, state, corpus, key, token_block)
+    new = build_counts(cfg, corpus, z_new)
+    if cfg.w_bits is not None:
+        new = LDAState(
+            z=z_new,
+            n_dt=fractional.to_fixed(new.n_dt, cfg.w_bits),
+            n_wt=fractional.to_fixed(new.n_wt, cfg.w_bits),
+            n_t=fractional.to_fixed(new.n_t, cfg.w_bits),
+        )
+    return new

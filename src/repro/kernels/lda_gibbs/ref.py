@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the lda_gibbs kernel.
+
+Semantics are exactly `repro.core.gibbs.resample_block`: collapsed-Gibbs
+scores (paper Eq. 5) with exact self-exclusion, Gumbel-max sampling, and
+padding tokens (weight 0) keeping their assignment.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def resample_tile(
+    rows_d: jnp.ndarray,  # (TB, K) gathered doc-topic counts (real units)
+    rows_w: jnp.ndarray,  # (TB, K) gathered word-topic counts
+    tot: jnp.ndarray,  # (K,) topic totals
+    z: jnp.ndarray,  # (TB,) current assignments
+    weights: jnp.ndarray,  # (TB,) fractional token weights (0 = padding)
+    gumbel: jnp.ndarray,  # (TB, K) pre-drawn Gumbel noise
+    alpha: float,
+    beta: float,
+    beta_bar: float,
+) -> jnp.ndarray:
+    k = rows_d.shape[1]
+    own = (jnp.arange(k)[None, :] == z[:, None]).astype(jnp.float32) * weights[:, None]
+    rd = jnp.maximum(rows_d.astype(jnp.float32) - own, 0.0)
+    rw = jnp.maximum(rows_w.astype(jnp.float32) - own, 0.0)
+    tt = jnp.maximum(tot.astype(jnp.float32)[None, :] - own, 1e-9)
+    logits = (
+        jnp.log(rd + alpha) + jnp.log(rw + beta) - jnp.log(tt + beta_bar)
+    )
+    z_new = jnp.argmax(logits + gumbel, axis=-1).astype(z.dtype)
+    return jnp.where(weights > 0.0, z_new, z)

@@ -1,0 +1,301 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo.
+
+The two lines above MUST run before any other import (jax locks device
+count at first init): the dry-run builds the production meshes out of 512
+placeholder host devices. Nothing else in the repo sets this flag — smoke
+tests and benchmarks see one device.
+
+Per combo this lowers the appropriate step (train_4k -> train_step,
+prefill_32k -> prefill, decode_* -> decode_step) with full in/out
+shardings, compiles it, and records:
+
+  memory_analysis()        bytes per device (proves the config fits HBM)
+  cost_analysis()          HLO FLOPs + bytes accessed (roofline numerator)
+  HLO collective scan      per-collective bytes from the optimized module
+
+Results go to experiments/dryrun/<arch>__<shape>__<mesh>.json, which
+benchmarks/roofline.py turns into EXPERIMENTS.md §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all [--multi-pod]
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.configs import shapes as shapes_lib
+from repro.launch import mesh as mesh_lib
+from repro.models import model as M
+from repro.sharding.specs import activation_specs, use_activation_specs
+from repro.train.optim import OptConfig, make_optimizer
+from repro.train.step import make_train_step
+
+# long_500k needs sub-quadratic attention (DESIGN.md §Arch-applicability):
+# run for SSM/hybrid and the sliding-window dense variant only.
+LONG_OK = {"rwkv6-1.6b", "zamba2-2.7b", "gemma2-9b-sw"}
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_HLO_OP_RE = re.compile(
+    r"=\s+(\w+)\[([\d,]*)\][^\s]*\s+(" + "|".join(COLLECTIVES) + r")\("
+)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective in the optimized HLO.
+
+    Methodology note (EXPERIMENTS.md §Roofline): we count the *result*
+    buffer of each collective as its traffic proxy. Ring all-reduce moves
+    ~2x this, all-gather exactly this per device; the proxy is uniform
+    across variants and good to the factor the roofline needs.
+    """
+    out = {c: 0 for c in COLLECTIVES}
+    counts = {c: 0 for c in COLLECTIVES}
+    for m in _HLO_OP_RE.finditer(hlo_text):
+        dtype, dims, op = m.groups()
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        for d in filter(None, dims.split(",")):
+            nbytes *= int(d)
+        out[op] += nbytes
+        counts[op] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": int(sum(out.values()))}
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def lower_combo(arch: str, shape_name: str, mesh, *, impl: str = "masked",
+                embed_impl: str = "gather"):
+    """Build + lower + compile one (arch, shape, mesh) step.
+
+    Returns (lowered, compiled, meta) — meta records batch layout choices.
+    """
+    from repro.models.layers import use_embed_impl
+
+    cfg = configs.get(arch)
+    shp = shapes_lib.get(shape_name)
+    kind = shp.kind
+    b, s = shp.global_batch, shp.seq_len
+
+    pspecs = M.model_pspecs(cfg, mesh)
+    params_sh = named(mesh, pspecs)
+    abs_params = M.abstract_model(cfg)
+    act = activation_specs(cfg, mesh, kind, global_batch=b)
+    batch_sh = named(mesh, M.batch_pspecs(cfg, mesh, kind, b))
+    abs_batch = M.abstract_batch(cfg, kind, b, s)
+
+    with use_activation_specs(act), use_embed_impl(embed_impl):
+        if kind == "train":
+            opt = make_optimizer(OptConfig(name=cfg.optimizer))
+            step_fn = make_train_step(cfg, opt, impl=impl)
+            opt_sh = named(mesh, opt.state_pspecs(pspecs))
+            abs_opt = opt.abstract_state(abs_params)
+            rep = NamedSharding(mesh, P())
+            fn = jax.jit(
+                step_fn,
+                in_shardings=(params_sh, opt_sh, batch_sh, rep),
+                out_shardings=(params_sh, opt_sh, None),
+            )
+            lowered = fn.lower(
+                abs_params, abs_opt, abs_batch,
+                jax.ShapeDtypeStruct((), jnp.int32),
+            )
+        elif kind == "prefill":
+            cache_sh = named(mesh, M.cache_pspecs(cfg, mesh, b, s, kind="prefill"))
+            fn = jax.jit(
+                lambda p, batch: M.prefill(p, cfg, batch, s, impl=impl),
+                in_shardings=(params_sh, batch_sh),
+                out_shardings=(cache_sh, NamedSharding(mesh, P())),
+            )
+            lowered = fn.lower(abs_params, abs_batch)
+        elif kind == "decode":
+            cache_sh = named(mesh, M.cache_pspecs(cfg, mesh, b, s, kind="decode"))
+            abs_cache = M.abstract_cache(cfg, b, s)
+            rep = NamedSharding(mesh, P())
+            fn = jax.jit(
+                lambda p, cache, toks, pos: M.decode_step(p, cfg, cache, toks, pos),
+                in_shardings=(params_sh, cache_sh, batch_sh["tokens"], rep),
+                out_shardings=(cache_sh, None),
+            )
+            lowered = fn.lower(
+                abs_params, abs_cache,
+                M.abstract_batch(cfg, "decode", b, s)["tokens"],
+                jax.ShapeDtypeStruct((), jnp.int32),
+            )
+        else:
+            raise ValueError(kind)
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    return lowered, compiled, {"compile_s": compile_s, "kind": kind}
+
+
+def analyze(lowered, compiled, mesh, meta) -> dict:
+    chips = mesh_lib.mesh_chips(mesh)
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(mem, "peak_memory_in_bytes", 0)),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_info = {"error": str(e)}
+
+    coll = collective_bytes(compiled.as_text())
+
+    # Roofline terms (per-chip seconds; HLO numbers are per-device already
+    # under SPMD — cost_analysis reports the partitioned module).
+    compute_s = flops / mesh_lib.PEAK_FLOPS_BF16
+    memory_s = bytes_accessed / mesh_lib.HBM_BW
+    collective_s = coll["total_bytes"] / mesh_lib.ICI_BW
+
+    return {
+        "chips": chips,
+        "compile_s": meta["compile_s"],
+        "kind": meta["kind"],
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_accessed,
+        "collectives": coll,
+        "memory": mem_info,
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "bottleneck": max(
+                ("compute_s", compute_s),
+                ("memory_s", memory_s),
+                ("collective_s", collective_s),
+                key=lambda kv: kv[1],
+            )[0],
+        },
+    }
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, outdir: str,
+            impl: str = "masked", tag: str = "",
+            embed_impl: str = "gather") -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if shape_name == "long_500k" and arch not in LONG_OK:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "skipped": "full-attention arch at 524k decode "
+                          "(DESIGN.md long_500k policy)"}
+        print(f"[dryrun] SKIP {arch} x {shape_name}: {rec['skipped']}")
+        if outdir:
+            os.makedirs(outdir, exist_ok=True)
+            suffix = f"__{tag}" if tag else ""
+            with open(os.path.join(
+                    outdir,
+                    f"{arch}__{shape_name}__{mesh_name}{suffix}.json"),
+                    "w") as f:
+                json.dump(rec, f, indent=1)
+        return rec
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    print(f"[dryrun] {arch} x {shape_name} on {mesh_name} ...", flush=True)
+    t0 = time.time()
+    with mesh:
+        lowered, compiled, meta = lower_combo(arch, shape_name, mesh, impl=impl,
+                                              embed_impl=embed_impl)
+        rec = analyze(lowered, compiled, mesh, meta)
+    rec.update(arch=arch, shape=shape_name, mesh=mesh_name, impl=impl,
+               embed_impl=embed_impl, wall_s=time.time() - t0)
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        path = os.path.join(
+            outdir, f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    r = rec["roofline"]
+    print(
+        f"[dryrun]   ok in {rec['wall_s']:.1f}s (compile {rec['compile_s']:.1f}s) "
+        f"flops={rec['hlo_flops']:.3g} bytes={rec['hlo_bytes']:.3g} "
+        f"coll={rec['collectives']['total_bytes']:.3g}B -> "
+        f"compute {r['compute_s']*1e3:.2f}ms | memory {r['memory_s']*1e3:.2f}ms "
+        f"| collective {r['collective_s']*1e3:.2f}ms  [{r['bottleneck']}]",
+        flush=True,
+    )
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--impl", default="masked", choices=["masked", "triangular"])
+    ap.add_argument("--embed", default="gather", choices=["gather", "onehot"])
+    ap.add_argument("--tag", default="", help="suffix for output files")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    archs = (configs.ASSIGNED + ["gemma2-9b-sw"]
+             if args.arch == "all" else [args.arch])
+    shape_names = (list(shapes_lib.SHAPES) if args.shape == "all"
+                   else [args.shape])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shape_names:
+            for mp in meshes:
+                try:
+                    run_one(arch, shape_name, mp, args.outdir,
+                            impl=args.impl, tag=args.tag,
+                            embed_impl=args.embed)
+                except Exception as e:
+                    failures.append((arch, shape_name, mp, repr(e)))
+                    print(f"[dryrun] FAIL {arch} x {shape_name} "
+                          f"multi_pod={mp}: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for f in failures:
+            print("   ", f)
+        sys.exit(1)
+    print("[dryrun] all combinations lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,212 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run for the paper's own model: a distributed RLDA Gibbs sweep.
+
+This is the Vedalia workload itself at production scale, lowered onto the
+same meshes as the transformer zoo: the token-parallel corpus shards over
+the data axes (each shard = one "device cohort" of the paper's client
+network), count tensors are replicated (the paper's central "model cache"),
+and GSPMD turns the count rebuild into the all-reduce the paper's
+"updating server" performs.
+
+Production sizing (SNAP-scale slice): 250k augmented vocab (50k base x 5
+tiers), 200k reviews in flight, K=256 topics, 16M tokens per sweep step.
+
+  PYTHONPATH=src python -m repro.launch.dryrun_rlda [--multi-pod]
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import gibbs
+from repro.core.types import Corpus, LDAConfig, LDAState
+from repro.launch import mesh as mesh_lib
+from repro.launch.dryrun import analyze
+
+
+def production_lda_config(w_bits=8) -> LDAConfig:
+    return LDAConfig(
+        num_topics=256,
+        vocab_size=50_000 * 5,  # rating-augmented base vocab (paper §4.3)
+        num_docs=200_000,
+        w_bits=w_bits,
+    )
+
+
+def abstract_corpus(cfg: LDAConfig, num_tokens: int) -> Corpus:
+    sds = jax.ShapeDtypeStruct
+    return Corpus(
+        docs=sds((num_tokens,), jnp.int32),
+        words=sds((num_tokens,), jnp.int32),
+        weights=sds((num_tokens,), jnp.float32),
+    )
+
+
+def abstract_state(cfg: LDAConfig, num_tokens: int) -> LDAState:
+    sds = jax.ShapeDtypeStruct
+    cdt = jnp.int32 if cfg.w_bits is not None else jnp.float32
+    return LDAState(
+        z=sds((num_tokens,), jnp.int32),
+        n_dt=sds((cfg.num_docs, cfg.num_topics), cdt),
+        n_wt=sds((cfg.vocab_size, cfg.num_topics), cdt),
+        n_t=sds((cfg.num_topics,), cdt),
+    )
+
+
+def run_one(multi_pod: bool, num_tokens: int = 16_777_216,
+            outdir: str = "experiments/dryrun", block: int = 8192,
+            shard_docs: bool = True, shard_vocab: bool = False,
+            client_server: bool = False, sync_every: int = 1,
+            tag: str = "") -> dict:
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cfg = production_lda_config()
+
+    if client_server:
+        return _run_client_server(mesh, mesh_name, cfg, num_tokens, block,
+                                  sync_every, outdir, tag)
+
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    tok = P(bspec)
+    corpus_sh = Corpus(docs=NamedSharding(mesh, tok),
+                       words=NamedSharding(mesh, tok),
+                       weights=NamedSharding(mesh, tok))
+    # Counts: the "model cache". n_dt rows can shard over the model axis
+    # (documents are disjoint across shards); n_wt is the shared model and
+    # stays replicated — its rebuild is the paper's server update,
+    # GSPMD-rendered as an all-reduce.
+    ndt_spec = P("model", None) if shard_docs else P(None, None)
+    # §Perf C: vocab-sharding n_wt turns the model-cache all-reduce into a
+    # reduce-scatter + per-token row gathers.
+    nwt_spec = P("model", None) if shard_vocab else P(None, None)
+    state_sh = LDAState(
+        z=NamedSharding(mesh, tok),
+        n_dt=NamedSharding(mesh, ndt_spec),
+        n_wt=NamedSharding(mesh, nwt_spec),
+        n_t=NamedSharding(mesh, P(None)),
+    )
+    rep = NamedSharding(mesh, P())
+
+    print(f"[dryrun-rlda] K={cfg.num_topics} V={cfg.vocab_size} "
+          f"D={cfg.num_docs} tokens={num_tokens} on {mesh_name} ...",
+          flush=True)
+    t0 = time.time()
+    with mesh:
+        fn = jax.jit(
+            lambda st, corpus, key: gibbs.sweep(cfg, st, corpus, key, block),
+            in_shardings=(state_sh, corpus_sh, rep),
+            out_shardings=state_sh,
+            static_argnums=(),
+        )
+        key_sds = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
+        lowered = fn.lower(
+            abstract_state(cfg, num_tokens),
+            abstract_corpus(cfg, num_tokens),
+            key_sds,
+        )
+        compiled = lowered.compile()
+        meta = {"compile_s": time.time() - t0, "kind": "gibbs_sweep"}
+        rec = analyze(lowered, compiled, mesh, meta)
+    rec.update(arch="rlda-amazon", shape=f"sweep_{num_tokens//2**20}m",
+               mesh=mesh_name, wall_s=time.time() - t0,
+               shard_docs=shard_docs)
+    os.makedirs(outdir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    with open(os.path.join(
+            outdir, f"rlda-amazon__{rec['shape']}__{mesh_name}{suffix}.json"),
+            "w") as f:
+        json.dump(rec, f, indent=1)
+    r = rec["roofline"]
+    print(f"[dryrun-rlda]   ok in {rec['wall_s']:.1f}s "
+          f"flops={rec['hlo_flops']:.3g} bytes={rec['hlo_bytes']:.3g} "
+          f"coll={rec['collectives']['total_bytes']:.3g}B -> "
+          f"compute {r['compute_s']*1e3:.2f}ms | memory "
+          f"{r['memory_s']*1e3:.2f}ms | collective "
+          f"{r['collective_s']*1e3:.2f}ms [{r['bottleneck']}]", flush=True)
+    return rec
+
+
+def _run_client_server(mesh, mesh_name, cfg, num_tokens, block, sync_every,
+                       outdir, tag):
+    """§Perf C: the Chital client/server sweep via shard_map."""
+    from repro.core import distributed
+
+    sds = jax.ShapeDtypeStruct
+    print(f"[dryrun-rlda] client/server sync_every={sync_every} on "
+          f"{mesh_name} ...", flush=True)
+    t0 = time.time()
+    with mesh:
+        sweep = distributed.make_client_server_sweep(
+            cfg, mesh, block=block, sync_every=sync_every)
+        fn = jax.jit(sweep)
+        lowered = fn.lower(
+            sds((num_tokens,), jnp.int32),  # docs (shard-local ids)
+            sds((num_tokens,), jnp.int32),  # words
+            sds((num_tokens,), jnp.int32),  # z
+            sds((num_tokens,), jnp.float32),  # weights
+            sds((cfg.num_docs, cfg.num_topics), jnp.float32),  # n_dt
+            sds((cfg.vocab_size, cfg.num_topics), jnp.float32),
+            sds((), jax.random.key(0).dtype),
+        )
+        compiled = lowered.compile()
+        meta = {"compile_s": time.time() - t0,
+                "kind": f"client_server_sweep_x{sync_every}"}
+        rec = analyze(lowered, compiled, mesh, meta)
+    # Per-sweep normalization: the step runs `sync_every` sweeps.
+    for term in ("compute_s", "memory_s", "collective_s"):
+        rec["roofline"][term] /= sync_every
+    rec["roofline"]["bottleneck"] = max(
+        ("compute_s", rec["roofline"]["compute_s"]),
+        ("memory_s", rec["roofline"]["memory_s"]),
+        ("collective_s", rec["roofline"]["collective_s"]),
+        key=lambda kv: kv[1])[0]
+    rec.update(arch="rlda-amazon",
+               shape=f"sweep_{num_tokens//2**20}m",
+               mesh=mesh_name, wall_s=time.time() - t0,
+               client_server=True, sync_every=sync_every)
+    os.makedirs(outdir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    with open(os.path.join(
+            outdir, f"rlda-amazon__{rec['shape']}__{mesh_name}{suffix}.json"),
+            "w") as f:
+        json.dump(rec, f, indent=1)
+    r = rec["roofline"]
+    print(f"[dryrun-rlda]   ok in {rec['wall_s']:.1f}s (per-sweep terms) "
+          f"compute {r['compute_s']*1e3:.2f}ms | memory "
+          f"{r['memory_s']*1e3:.2f}ms | collective "
+          f"{r['collective_s']*1e3:.2f}ms [{r['bottleneck']}]", flush=True)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--tokens", type=int, default=16_777_216)
+    ap.add_argument("--block", type=int, default=8192)
+    ap.add_argument("--replicate-docs", action="store_true")
+    ap.add_argument("--shard-vocab", action="store_true")
+    ap.add_argument("--client-server", action="store_true")
+    ap.add_argument("--sync-every", type=int, default=1)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        run_one(mp, num_tokens=args.tokens, block=args.block,
+                shard_docs=not args.replicate_docs,
+                shard_vocab=args.shard_vocab,
+                client_server=args.client_server,
+                sync_every=args.sync_every, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

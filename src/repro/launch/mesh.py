@@ -1,0 +1,34 @@
+"""Production meshes for the TPU v5e target.
+
+Single pod: (data=16, model=16) = 256 chips. Multi-pod: (pod=2, data=16,
+model=16) = 512 chips, where the 'pod' axis carries pure data parallelism
+(DCN-attached; only gradient all-reduce crosses pods).
+
+`make_production_mesh` is a FUNCTION so importing this module never touches
+jax device state — the dry-run sets `--xla_force_host_platform_device_count`
+before any jax initialization and only then builds the mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (roofline terms, EXPERIMENTS.md §Roofline).
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke paths (axis names match production)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_chips(mesh) -> int:
+    return int(mesh.devices.size)

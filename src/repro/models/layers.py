@@ -1,0 +1,129 @@
+"""Shared neural layers: norms, rope, MLP variants, embeddings."""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+
+# Embedding lookup strategy. "gather" (default) is XLA's native take(); on a
+# vocab-sharded table GSPMD turns it into an all-gather of the full table
+# (vocab_size x d_model), which dominates the decode collective term for the
+# 256k-vocab archs. "onehot" contracts a one-hot matrix against the table:
+# the contraction dim is the sharded vocab dim, so each chip does a local
+# matmul and all-reduces only the (tokens x d_model) result. §Perf in
+# EXPERIMENTS.md measures the swap.
+_EMBED_IMPL = "gather"
+
+
+@contextlib.contextmanager
+def use_embed_impl(impl: str):
+    global _EMBED_IMPL
+    assert impl in ("gather", "onehot"), impl
+    prev = _EMBED_IMPL
+    _EMBED_IMPL = impl
+    try:
+        yield
+    finally:
+        _EMBED_IMPL = prev
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm in fp32, (1 + scale) convention (gemma-style zero-init safe)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embeddings. x: (..., S, H, hd); positions: (..., S)."""
+    if theta <= 0.0:
+        return x
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def mlp(x: jax.Array, p: dict, variant: str) -> jax.Array:
+    """Gated/plain MLP. p holds 'up' (and 'gate'), 'down' (+ optional bias)."""
+    if variant == "swiglu":
+        h = jax.nn.silu(x @ p["gate"]) * (x @ p["up"])
+    elif variant == "geglu":
+        h = jax.nn.gelu(x @ p["gate"], approximate=True) * (x @ p["up"])
+    elif variant == "gelu":
+        h = jax.nn.gelu(x @ p["up"], approximate=True)
+    elif variant == "rwkv_channel_mix":
+        # RWKV channel mix: relu(x W_k)^2 W_v (token shift applied by caller).
+        h = jnp.square(jax.nn.relu(x @ p["up"]))
+    else:
+        raise ValueError(f"unknown mlp variant {variant}")
+    return h @ p["down"]
+
+
+def embed(tokens: jax.Array, table: jax.Array, scale: bool) -> jax.Array:
+    if _EMBED_IMPL == "onehot":
+        oh = jax.nn.one_hot(tokens, table.shape[0], dtype=table.dtype)
+        x = jnp.einsum("...v,vd->...d", oh, table)
+    else:
+        x = jnp.take(table, tokens, axis=0)
+    if scale:
+        x = x * jnp.asarray(table.shape[1] ** 0.5, x.dtype)
+    return x
+
+
+def unembed_chunked(
+    h: jax.Array,
+    table: jax.Array,
+    labels: jax.Array,
+    chunk: int = 512,
+    final_cap: float = 0.0,
+) -> jax.Array:
+    """Cross-entropy against a huge vocab without materializing full logits.
+
+    Scans over sequence chunks; per chunk computes logits (B, chunk, V) in
+    fp32, the label log-prob, and discards. Returns summed NLL.
+    """
+    b, s, d = h.shape
+    assert s % chunk == 0, (s, chunk)
+    nchunk = s // chunk
+    hc = h.reshape(b, nchunk, chunk, d).swapaxes(0, 1)  # (n, B, c, d)
+    lc = labels.reshape(b, nchunk, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        hq, lb = xs
+        logits = jnp.einsum(
+            "bcd,vd->bcv", hq, table, preferred_element_type=jnp.float32
+        )
+        logits = softcap(logits, final_cap)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    nll, _ = jax.lax.scan(body, jnp.float32(0.0), (hc, lc))
+    return nll
+
+
+def logits_last(
+    h_last: jax.Array, table: jax.Array, final_cap: float = 0.0
+) -> jax.Array:
+    """Full logits for the last position only (decode). h_last: (B, d)."""
+    logits = jnp.einsum(
+        "bd,vd->bv", h_last, table, preferred_element_type=jnp.float32
+    )
+    return softcap(logits, final_cap)

@@ -1,0 +1,1076 @@
+"""Model assembly: schema, forward, loss, prefill and decode for every arch.
+
+One entry point per step kind, uniform across the 10 assigned architectures:
+
+  build_schema(cfg)                  parameter declarations (PDef tree)
+  init_model(cfg, key)               real params (CPU smoke tests)
+  abstract_model(cfg)                ShapeDtypeStruct params (dry-run)
+  model_pspecs(cfg, mesh)            PartitionSpec tree for the params
+  forward_loss(params, cfg, batch)   (mean NLL, aux) — training objective
+  prefill(params, cfg, batch, cache_len)        -> (cache, last-token logits)
+  decode_step(params, cfg, cache, tokens, pos)  -> (cache, logits)
+  init_cache / abstract_cache / cache_pspecs    decode-state management
+
+Layer stacks are `lax.scan`-scanned (homogeneous params, bounded compile
+time for 100-layer configs) with `jax.checkpoint` in training. Heterogeneous
+layer patterns are *static* grouping around/inside the scan:
+
+  gemma2 local/global alternation   scan over (local, global) layer pairs
+  llama-3.2-vision cross-attn       scan over groups of 4 self + 1 cross
+  zamba2 shared attention block     scan over groups of 6 mamba layers with
+                                    the (weight-shared) attn block between
+  whisper enc-dec                   two scans + cross-attention caches
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import params as plib
+from repro.models.attention import decode_attention, flash_attention
+from repro.models.layers import (
+    embed,
+    logits_last,
+    mlp,
+    rms_norm,
+    rope,
+    softcap,
+    unembed_chunked,
+)
+from repro.models.moe import moe_layer
+from repro.models.params import PDef
+from repro.models import ssm
+from repro.sharding.specs import batch_axes, constrain
+
+ACT_DTYPE = jnp.bfloat16
+
+
+# ===========================================================================
+# Schema
+# ===========================================================================
+
+
+def _stack(schema, n: int):
+    """Prepend a (n,)-'layers' stack dim to every PDef in a subtree."""
+
+    def rec(node):
+        if isinstance(node, PDef):
+            return PDef(
+                shape=(n,) + node.shape,
+                axes=("layers",) + node.axes,
+                init=node.init,
+                dtype=node.dtype,
+            )
+        return {k: rec(v) for k, v in node.items()}
+
+    return rec(schema)
+
+
+def _attn_schema(cfg: ArchConfig) -> dict:
+    d, q, kv = cfg.d_model, cfg.qkv_dim, cfg.kv_dim
+    s = {
+        "wq": PDef((d, q), ("embed", "qkv")),
+        "wk": PDef((d, kv), ("embed", "kv")),
+        "wv": PDef((d, kv), ("embed", "kv")),
+        "wo": PDef((q, d), ("qkv", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = PDef((q,), ("qkv",), init="zeros")
+        s["bk"] = PDef((kv,), ("kv",), init="zeros")
+        s["bv"] = PDef((kv,), ("kv",), init="zeros")
+    return s
+
+
+def _mlp_schema(cfg: ArchConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    s = {
+        "up": PDef((d, f), ("embed", "ff")),
+        "down": PDef((f, d), ("ff", "embed")),
+    }
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        s["gate"] = PDef((d, f), ("embed", "ff"))
+    return s
+
+
+def _moe_schema(cfg: ArchConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    s = {
+        "router": PDef((d, e), ("embed", "experts"), dtype="float32"),
+        "w_gate": PDef((e, d, f), ("experts", "embed", "expert_ff")),
+        "w_up": PDef((e, d, f), ("experts", "embed", "expert_ff")),
+        "w_down": PDef((e, f, d), ("experts", "expert_ff", "embed")),
+    }
+    if cfg.moe_dense_ff:
+        s["dense"] = {
+            "gate": PDef((d, cfg.moe_dense_ff), ("embed", "ff")),
+            "up": PDef((d, cfg.moe_dense_ff), ("embed", "ff")),
+            "down": PDef((cfg.moe_dense_ff, d), ("ff", "embed")),
+        }
+    return s
+
+
+def _block_schema(cfg: ArchConfig, *, cross: bool = False) -> dict:
+    """One decoder block: (pre-)norms + attention + MLP/MoE (+ post-norms)."""
+    d = cfg.d_model
+    s = {
+        "ln_attn": PDef((d,), ("embed",), init="zeros"),
+        "attn": _attn_schema(cfg),
+        "ln_mlp": PDef((d,), ("embed",), init="zeros"),
+    }
+    if cfg.post_norms:
+        s["ln_post_attn"] = PDef((d,), ("embed",), init="zeros")
+        s["ln_post_mlp"] = PDef((d,), ("embed",), init="zeros")
+    if cfg.num_experts:
+        s["moe"] = _moe_schema(cfg)
+    else:
+        s["mlp"] = _mlp_schema(cfg)
+    if cross:
+        # llama-3.2-vision gated cross-attention layer: zero-init gates make
+        # the layer a no-op at init (the model-card recipe).
+        s["gate_attn"] = PDef((1,), (None,), init="zeros", dtype="float32")
+        s["gate_mlp"] = PDef((1,), (None,), init="zeros", dtype="float32")
+    return s
+
+
+def _rwkv_block_schema(cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    h, dk = cfg.ssm_heads, cfg.ssm_head_dim
+    lora = max(32, d // 32)
+    att = {
+        "w_r": PDef((d, h * dk), ("embed", "qkv")),
+        "w_k": PDef((d, h * dk), ("embed", "qkv")),
+        "w_v": PDef((d, h * dk), ("embed", "qkv")),
+        "w_g": PDef((d, h * dk), ("embed", "qkv")),
+        "w_o": PDef((h * dk, d), ("qkv", "embed")),
+        "w0": PDef((h * dk,), ("qkv",), init="decay", dtype="float32"),
+        "w_lora_a": PDef((d, lora), ("embed", None)),
+        "w_lora_b": PDef((lora, h * dk), (None, "qkv"), init="small_normal"),
+        "u": PDef((h, dk), (None, None), init="small_normal", dtype="float32"),
+        "ln_x": PDef((h * dk,), ("qkv",), init="zeros"),
+    }
+    for m in ("r", "k", "v", "g", "w"):
+        att[f"mu_{m}"] = PDef((d,), ("embed",), init="small_normal")
+    ffn = {
+        "mu_ck": PDef((d,), ("embed",), init="small_normal"),
+        "up": PDef((d, f), ("embed", "ff")),
+        "down": PDef((f, d), ("ff", "embed")),
+    }
+    return {
+        "ln1": PDef((d,), ("embed",), init="zeros"),
+        "ln2": PDef((d,), ("embed",), init="zeros"),
+        "att": att,
+        "ffn": ffn,
+    }
+
+
+def _mamba_block_schema(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    h, hd, ns = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    inner = h * hd
+    width = 2 * inner + 2 * ns + h
+    return {
+        "ln": PDef((d,), ("embed",), init="zeros"),
+        "in_proj": PDef((d, width), ("embed", None)),
+        "conv_w": PDef((cfg.conv_width, inner + 2 * ns), (None, None), init="small_normal"),
+        "dt_bias": PDef((h,), (None,), init="zeros", dtype="float32"),
+        "a_log": PDef((h,), (None,), init="decay", dtype="float32"),
+        "d_skip": PDef((h,), (None,), init="ones", dtype="float32"),
+        "ln_y": PDef((inner,), ("qkv",), init="zeros"),
+        "out_proj": PDef((inner, d), ("qkv", "embed")),
+    }
+
+
+def n_cross(cfg: ArchConfig) -> int:
+    """Number of (self+...+cross) groups for a VLM config."""
+    assert cfg.num_layers % cfg.cross_attn_every == 0, cfg.name
+    return cfg.num_layers // cfg.cross_attn_every
+
+
+def build_schema(cfg: ArchConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_size
+    s: dict = {
+        "embed": PDef((v, d), ("vocab", "embed")),
+        "ln_f": PDef((d,), ("embed",), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        s["head"] = PDef((v, d), ("vocab", "embed"))
+
+    at = cfg.arch_type
+    if at in ("dense", "moe"):
+        if cfg.attn_pattern == "local_global":
+            half = cfg.num_layers // 2
+            s["local"] = _stack(_block_schema(cfg), half)
+            s["global"] = _stack(_block_schema(cfg), half)
+        elif cfg.num_experts and cfg.moe_every == 2:
+            # llama4: alternating dense / MoE layers, scanned as pairs.
+            half = cfg.num_layers // 2
+            s["dense_blk"] = _stack(_block_schema(_pair_dense_cfg(cfg)), half)
+            s["moe_blk"] = _stack(_block_schema(cfg), half)
+        else:
+            s["blk"] = _stack(_block_schema(cfg), cfg.num_layers)
+    elif at == "vlm":
+        groups = n_cross(cfg)
+        self_per = cfg.cross_attn_every - 1
+        s["blk"] = _stack(_stack(_block_schema(cfg), self_per), groups)
+        s["xblk"] = _stack(_block_schema(cfg, cross=True), groups)
+    elif at == "audio":
+        s["enc"] = _stack(_block_schema(cfg), cfg.encoder_layers)
+        s["enc_ln_f"] = PDef((d,), ("embed",), init="zeros")
+        dec = _block_schema(cfg)
+        dec["ln_cross"] = PDef((d,), ("embed",), init="zeros")
+        dec["xattn"] = _attn_schema(cfg)
+        s["dec"] = _stack(dec, cfg.num_layers)
+    elif at == "ssm":
+        s["ln0"] = PDef((d,), ("embed",), init="zeros")
+        s["blk"] = _stack(_rwkv_block_schema(cfg), cfg.num_layers)
+    elif at == "hybrid":
+        groups, per = _hybrid_groups(cfg)
+        s["blk"] = _stack(_stack(_mamba_block_schema(cfg), per), groups)
+        s["shared"] = _block_schema(cfg)  # ONE weight-shared attention block
+    else:
+        raise ValueError(f"unknown arch_type {at}")
+    return s
+
+
+def _pair_dense_cfg(cfg: ArchConfig) -> ArchConfig:
+    """Config view for the NON-MoE layers of an interleaved (llama4) MoE."""
+    import dataclasses
+
+    return dataclasses.replace(
+        cfg, num_experts=0, experts_per_token=0, moe_dense_ff=0,
+        d_ff=cfg.moe_dense_layer_ff or cfg.d_ff,
+    )
+
+
+def _hybrid_groups(cfg: ArchConfig) -> tuple[int, int]:
+    per = cfg.hybrid_attn_every
+    assert cfg.num_layers % per == 0, (cfg.name, cfg.num_layers, per)
+    return cfg.num_layers // per, per
+
+
+def init_model(cfg: ArchConfig, key: jax.Array):
+    return plib.init_params(build_schema(cfg), key)
+
+
+def abstract_model(cfg: ArchConfig):
+    return plib.abstract_params(build_schema(cfg))
+
+
+def model_pspecs(cfg: ArchConfig, mesh):
+    from repro.sharding.specs import build_rules
+
+    return plib.partition_specs(build_schema(cfg), build_rules(cfg, mesh))
+
+
+# ===========================================================================
+# Attention pieces
+# ===========================================================================
+
+
+def _project_qkv(p, h, cfg: ArchConfig, positions):
+    b, s, _ = h.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = rope(q.reshape(b, s, hq, hd), positions, cfg.rope_theta)
+    k = rope(k.reshape(b, s, hkv, hd), positions, cfg.rope_theta)
+    return q, k, v.reshape(b, s, hkv, hd)
+
+
+def _attn_full(p, h, cfg: ArchConfig, *, positions, window=0, causal=True,
+               cross_src=None, impl="masked"):
+    """Full-sequence attention. Returns (out, (k, v)) for KV caching."""
+    b, s, _ = h.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if cross_src is not None:
+        q = h @ p["wq"]
+        if "bq" in p:
+            q = q + p["bq"]
+        q = q.reshape(b, s, hq, hd)  # no rope on cross-attn queries
+        k = (cross_src @ p["wk"]).reshape(b, -1, hkv, hd)
+        v = (cross_src @ p["wv"]).reshape(b, -1, hkv, hd)
+        causal = False
+    else:
+        q, k, v = _project_qkv(p, h, cfg, positions)
+    q = constrain(q, "heads")
+    out = flash_attention(
+        q, k, v, causal=causal, window=window, cap=cfg.attn_softcap, impl=impl
+    )
+    return out.reshape(b, s, hq * hd) @ p["wo"], (k, v)
+
+
+def _attn_decode(p, h1, cfg: ArchConfig, ck, cv, pos, *, window=0, ring=False,
+                 cross=False):
+    """One-token attention against a cache. h1: (B, 1, D). Updates the cache
+    in place (functional) unless `cross` (static encoder/image cache)."""
+    b = h1.shape[0]
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if cross:
+        q = (h1 @ p["wq"]).reshape(b, hq, hd)
+        out = decode_attention(
+            q, ck, cv, length=ck.shape[1], pos=ck.shape[1], cap=cfg.attn_softcap
+        )
+        return out.reshape(b, 1, hq * hd) @ p["wo"], ck, cv
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, h1, cfg, positions)
+    slot = (pos % ck.shape[1]) if ring else pos
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), slot, axis=1)
+    ck = constrain(ck, "kv_cache")
+    cv = constrain(cv, "kv_cache")
+    out = decode_attention(
+        q.reshape(b, hq, hd), ck, cv, length=pos + 1, pos=pos,
+        window=window, ring=ring, cap=cfg.attn_softcap,
+    )
+    return out.reshape(b, 1, hq * hd) @ p["wo"], ck, cv
+
+
+# ===========================================================================
+# Blocks (full-sequence and decode variants)
+# ===========================================================================
+
+
+def _mlp_or_moe(p, x, cfg: ArchConfig, aux, *, train=True):
+    if cfg.num_experts:
+        # Capacity policy: training uses the configured factor (drops allowed,
+        # load-balance loss keeps them rare). Decode (single token per seq,
+        # few tokens total) uses exact no-drop capacity so serving is exact.
+        # Prefill uses a relaxed 2x factor: true no-drop at 1M tokens would
+        # make every expert buffer the full token set (compute blow-up), but
+        # tightening to the training factor (1.25) drops real tokens and
+        # breaks prefill/decode exactness (§Perf B2: measured -7% collective,
+        # rejected — serving correctness beats a marginal buffer saving).
+        if train:
+            cf = None
+        elif x.shape[1] == 1:  # decode
+            cf = float(cfg.num_experts)
+        else:  # prefill / eval
+            cf = 2.0
+        out, a = moe_layer(p["moe"], x, cfg, capacity_factor=cf)
+        aux = {k: aux[k] + a[k] for k in aux}
+        return out, aux
+    return mlp(x, p["mlp"], cfg.mlp_variant), aux
+
+
+def _block_full(p, x, cfg: ArchConfig, aux, *, positions, window=0,
+                causal=True, cross_src=None, impl="masked", train=True):
+    """(residual) -> attn -> (residual) -> mlp. Returns (x, kv, aux)."""
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    attn_out, kv = _attn_full(
+        p["attn"], h, cfg, positions=positions, window=window, causal=causal,
+        cross_src=cross_src, impl=impl,
+    )
+    if cfg.post_norms:
+        attn_out = rms_norm(attn_out, p["ln_post_attn"], cfg.norm_eps)
+    if "gate_attn" in p:
+        attn_out = jnp.tanh(p["gate_attn"]).astype(x.dtype) * attn_out
+    x = constrain(x + attn_out, "residual")
+    h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    m, aux = _mlp_or_moe(p, h, cfg, aux, train=train)
+    if cfg.post_norms:
+        m = rms_norm(m, p["ln_post_mlp"], cfg.norm_eps)
+    if "gate_mlp" in p:
+        m = jnp.tanh(p["gate_mlp"]).astype(x.dtype) * m
+    x = constrain(x + m, "residual")
+    return x, kv, aux
+
+
+def _block_decode(p, x, cfg: ArchConfig, ck, cv, pos, *, window=0, ring=False,
+                  cross=False):
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    attn_out, ck, cv = _attn_decode(
+        p["attn"] if not cross else p["attn"], h, cfg, ck, cv, pos,
+        window=window, ring=ring, cross=cross,
+    )
+    if cfg.post_norms:
+        attn_out = rms_norm(attn_out, p["ln_post_attn"], cfg.norm_eps)
+    if "gate_attn" in p:
+        attn_out = jnp.tanh(p["gate_attn"]).astype(x.dtype) * attn_out
+    x = x + attn_out
+    h = rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    m, _ = _mlp_or_moe(p, h, cfg, {"load_balance": 0.0, "router_z": 0.0},
+                       train=False)
+    if cfg.post_norms:
+        m = rms_norm(m, p["ln_post_mlp"], cfg.norm_eps)
+    if "gate_mlp" in p:
+        m = jnp.tanh(p["gate_mlp"]).astype(x.dtype) * m
+    return x + m, ck, cv
+
+
+def _zero_aux():
+    return {"load_balance": jnp.float32(0.0), "router_z": jnp.float32(0.0)}
+
+
+def _sinusoid(s: int, d: int, offset=0) -> jax.Array:
+    """Whisper-style sinusoidal positions (computed, no table)."""
+    pos = offset + jnp.arange(s)[:, None].astype(jnp.float32)
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = pos * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(ACT_DTYPE)
+
+
+def _maybe_ckpt(fn, cfg: ArchConfig, train: bool):
+    return jax.checkpoint(fn, prevent_cse=False) if (train and cfg.remat) else fn
+
+
+# ===========================================================================
+# Full-sequence forward (training / prefill), per arch family
+# ===========================================================================
+
+
+def _embed_in(params, cfg: ArchConfig, tokens):
+    x = embed(tokens, params["embed"], cfg.embed_scale).astype(ACT_DTYPE)
+    return constrain(x, "residual")
+
+
+def _forward_dense(params, cfg, tokens, *, train, collect_kv=False, impl="masked"):
+    """dense + moe families (incl. gemma2 local/global pairs)."""
+    b, s = tokens.shape
+    x = _embed_in(params, cfg, tokens)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    if cfg.attn_pattern == "local_global":
+        def body(carry, pp):
+            x, aux = carry
+            x, kv_l, aux = _block_full(
+                pp["local"], x, cfg, aux, positions=positions,
+                window=cfg.sliding_window, impl=impl, train=train)
+            x, kv_g, aux = _block_full(
+                pp["global"], x, cfg, aux, positions=positions, impl=impl,
+                train=train)
+            ys = (kv_l, kv_g) if collect_kv else None
+            return (x, aux), ys
+
+        (x, aux), kvs = jax.lax.scan(
+            _maybe_ckpt(body, cfg, train), (x, _zero_aux()),
+            {"local": params["local"], "global": params["global"]},
+        )
+    elif cfg.num_experts and cfg.moe_every == 2:
+        dense_cfg = _pair_dense_cfg(cfg)
+
+        def body(carry, pp):
+            x, aux = carry
+            x, kv_d, aux = _block_full(
+                pp["dense"], x, dense_cfg, aux, positions=positions,
+                impl=impl, train=train)
+            x, kv_m, aux = _block_full(
+                pp["moe"], x, cfg, aux, positions=positions, impl=impl,
+                train=train)
+            ys = (kv_d, kv_m) if collect_kv else None
+            return (x, aux), ys
+
+        (x, aux), kvs = jax.lax.scan(
+            _maybe_ckpt(body, cfg, train), (x, _zero_aux()),
+            {"dense": params["dense_blk"], "moe": params["moe_blk"]},
+        )
+    else:
+        window = cfg.sliding_window if cfg.attn_pattern == "local" else 0
+
+        def body(carry, p):
+            x, aux = carry
+            x, kv, aux = _block_full(
+                p, x, cfg, aux, positions=positions, window=window, impl=impl,
+                train=train)
+            return (x, aux), (kv if collect_kv else None)
+
+        (x, aux), kvs = jax.lax.scan(
+            _maybe_ckpt(body, cfg, train), (x, _zero_aux()), params["blk"])
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x, aux, kvs
+
+
+def _forward_vlm(params, cfg, tokens, patches, *, train, collect_kv=False,
+                 impl="masked"):
+    b, s = tokens.shape
+    x = _embed_in(params, cfg, tokens)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    patches = patches.astype(ACT_DTYPE)
+
+    def group(carry, pp):
+        x, aux = carry
+
+        def inner(c, p):
+            x, aux = c
+            x, kv, aux = _block_full(p, x, cfg, aux, positions=positions,
+                                     impl=impl, train=train)
+            return (x, aux), (kv if collect_kv else None)
+
+        (x, aux), kv_self = jax.lax.scan(inner, (x, aux), pp["self"])
+        x, kv_cross, aux = _block_full(
+            pp["cross"], x, cfg, aux, positions=positions, cross_src=patches,
+            impl=impl, train=train)
+        ys = (kv_self, kv_cross) if collect_kv else None
+        return (x, aux), ys
+
+    (x, aux), kvs = jax.lax.scan(
+        _maybe_ckpt(group, cfg, train), (x, _zero_aux()),
+        {"self": params["blk"], "cross": params["xblk"]},
+    )
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x, aux, kvs
+
+
+def _encode_audio(params, cfg, frames, *, train):
+    """Whisper encoder over stub frame embeddings (B, T, D)."""
+    x = frames.astype(ACT_DTYPE) + _sinusoid(frames.shape[1], cfg.d_model)[None]
+    positions = jnp.broadcast_to(
+        jnp.arange(frames.shape[1])[None], frames.shape[:2])
+
+    def body(carry, p):
+        x, aux = carry
+        x, _, aux = _block_full(p, x, cfg, aux, positions=positions,
+                                causal=False, train=train)
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(
+        _maybe_ckpt(body, cfg, train), (x, _zero_aux()), params["enc"])
+    return rms_norm(x, params["enc_ln_f"], cfg.norm_eps), aux
+
+
+def _forward_audio(params, cfg, tokens, frames, *, train, collect_kv=False):
+    b, s = tokens.shape
+    enc, aux = _encode_audio(params, cfg, frames, train=train)
+    x = _embed_in(params, cfg, tokens) + _sinusoid(s, cfg.d_model)[None]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(carry, p):
+        x, aux = carry
+        x, kv_self, aux = _block_full(p, x, cfg, aux, positions=positions,
+                                      train=train)
+        # Cross-attention to the encoder output, pre-norm.
+        h = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+        co, kv_cross = _attn_full(
+            p["xattn"], h, cfg, positions=positions, cross_src=enc)
+        x = constrain(x + co, "residual")
+        ys = (kv_self, kv_cross) if collect_kv else None
+        return (x, aux), ys
+
+    (x, aux), kvs = jax.lax.scan(
+        _maybe_ckpt(body, cfg, train), (x, aux), params["dec"])
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x, aux, kvs
+
+
+def _forward_rwkv(params, cfg, tokens, *, train, collect_state=False,
+                  use_kernel=False):
+    b, s = tokens.shape
+    x = rms_norm(_embed_in(params, cfg, tokens), params["ln0"], cfg.norm_eps)
+    zero_prev = jnp.zeros((b, 1, cfg.d_model), ACT_DTYPE)
+
+    def body(carry, p):
+        x, aux = carry
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        y, (ax_last, S) = ssm.rwkv6_time_mix(
+            p["att"], h, zero_prev, None, cfg, use_kernel=use_kernel)
+        x = constrain(x + y, "residual")
+        h = rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, fx_last = ssm.rwkv6_channel_mix(p["ffn"], h, zero_prev)
+        x = constrain(x + y, "residual")
+        ys = (S, ax_last, fx_last) if collect_state else None
+        return (x, aux), ys
+
+    (x, aux), states = jax.lax.scan(
+        _maybe_ckpt(body, cfg, train), (x, _zero_aux()), params["blk"])
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x, aux, states
+
+
+def _forward_hybrid(params, cfg, tokens, *, train, collect_state=False,
+                    use_kernel=False, impl="masked"):
+    """zamba2: groups of mamba2 layers with a weight-shared attention block."""
+    b, s = tokens.shape
+    x = _embed_in(params, cfg, tokens)
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    shared = params["shared"]
+
+    def group(carry, pp):
+        x, aux = carry
+        # Weight-shared attention block (sliding window for long context).
+        x, kv, aux = _block_full(
+            shared, x, cfg, aux, positions=positions,
+            window=cfg.sliding_window, impl=impl, train=train)
+
+        def inner(c, p):
+            x, aux = c
+            h = rms_norm(x, p["ln"], cfg.norm_eps)
+            y, (S, conv) = ssm.mamba2_mix(p, h, None, None, cfg,
+                                          use_kernel=use_kernel)
+            x = constrain(x + y, "residual")
+            return (x, aux), ((S, conv) if collect_state else None)
+
+        (x, aux), sts = jax.lax.scan(inner, (x, aux), pp)
+        ys = (kv, sts) if collect_state else None
+        return (x, aux), ys
+
+    (x, aux), states = jax.lax.scan(
+        _maybe_ckpt(group, cfg, train), (x, _zero_aux()), params["blk"])
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x, aux, states
+
+
+def forward_hidden(params, cfg: ArchConfig, batch, *, train: bool,
+                   collect=False, impl="masked", use_kernel=False):
+    """Dispatch to the family forward. Returns (hidden, aux, caches-raw)."""
+    at = cfg.arch_type
+    if at in ("dense", "moe"):
+        return _forward_dense(params, cfg, batch["tokens"], train=train,
+                              collect_kv=collect, impl=impl)
+    if at == "vlm":
+        return _forward_vlm(params, cfg, batch["tokens"], batch["patches"],
+                            train=train, collect_kv=collect, impl=impl)
+    if at == "audio":
+        return _forward_audio(params, cfg, batch["tokens"], batch["frames"],
+                              train=train, collect_kv=collect)
+    if at == "ssm":
+        return _forward_rwkv(params, cfg, batch["tokens"], train=train,
+                             collect_state=collect, use_kernel=use_kernel)
+    if at == "hybrid":
+        return _forward_hybrid(params, cfg, batch["tokens"], train=train,
+                               collect_state=collect, use_kernel=use_kernel,
+                               impl=impl)
+    raise ValueError(at)
+
+
+# ===========================================================================
+# Loss
+# ===========================================================================
+
+
+def unembed_table(params, cfg: ArchConfig):
+    return params["embed"] if cfg.tie_embeddings else params["head"]
+
+
+def forward_loss(params, cfg: ArchConfig, batch, *, impl="masked",
+                 use_kernel=False):
+    """Mean next-token NLL + MoE aux losses. batch: tokens, labels (+extras)."""
+    h, aux, _ = forward_hidden(params, cfg, batch, train=True, impl=impl,
+                               use_kernel=use_kernel)
+    b, s = batch["labels"].shape
+    chunk = s if s <= 512 else 512
+    while s % chunk:
+        chunk //= 2
+    nll = unembed_chunked(
+        h, unembed_table(params, cfg), batch["labels"], chunk=chunk,
+        final_cap=cfg.final_softcap,
+    )
+    loss = nll / (b * s)
+    aux = dict(aux)
+    aux["nll"] = loss
+    if cfg.num_experts:
+        loss = (loss
+                + cfg.load_balance_loss * aux["load_balance"] / cfg.num_layers
+                + cfg.router_zloss * aux["router_z"] / cfg.num_layers)
+    return loss, aux
+
+
+# ===========================================================================
+# Decode caches
+# ===========================================================================
+
+
+def _cache_desc(cfg: ArchConfig, b: int, cache_len: int) -> dict:
+    """name -> (shape, dtype, logical axes) for the decode state.
+
+    Logical cache axes: 'batch' (data parallel), 'kv_seq' (sharded over
+    'model' at decode — flash-decode partial softmax), None otherwise.
+    """
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    w = min(cfg.sliding_window, cache_len) if cfg.sliding_window else cache_len
+    at = cfg.arch_type
+    kvdt = "bfloat16"
+
+    def kv(nl, s):
+        return ((nl, b, s, hkv, hd), kvdt,
+                ("layers", "batch", "kv_seq", "kv_heads", None))
+
+    if at in ("dense", "moe"):
+        if cfg.attn_pattern == "local_global":
+            half = cfg.num_layers // 2
+            return {"k_local": kv(half, w), "v_local": kv(half, w),
+                    "k_global": kv(half, cache_len), "v_global": kv(half, cache_len)}
+        if cfg.num_experts and cfg.moe_every == 2:
+            half = cfg.num_layers // 2
+            return {"k_dense": kv(half, cache_len), "v_dense": kv(half, cache_len),
+                    "k_moe": kv(half, cache_len), "v_moe": kv(half, cache_len)}
+        s = w if cfg.attn_pattern == "local" else cache_len
+        return {"k": kv(cfg.num_layers, s), "v": kv(cfg.num_layers, s)}
+    if at == "vlm":
+        g = n_cross(cfg)
+        sp = cfg.cross_attn_every - 1
+        return {
+            "k": ((g, sp, b, cache_len, hkv, hd), kvdt,
+                  ("layers", "layers", "batch", "kv_seq", "kv_heads", None)),
+            "v": ((g, sp, b, cache_len, hkv, hd), kvdt,
+                  ("layers", "layers", "batch", "kv_seq", "kv_heads", None)),
+            "xk": ((g, b, cfg.num_frontend_tokens, hkv, hd), kvdt,
+                   ("layers", "batch", None, None, None)),
+            "xv": ((g, b, cfg.num_frontend_tokens, hkv, hd), kvdt,
+                   ("layers", "batch", None, None, None)),
+        }
+    if at == "audio":
+        nl = cfg.num_layers
+        return {
+            "k": kv(nl, cache_len), "v": kv(nl, cache_len),
+            "xk": ((nl, b, cfg.encoder_tokens, hkv, hd), kvdt,
+                   ("layers", "batch", None, None, None)),
+            "xv": ((nl, b, cfg.encoder_tokens, hkv, hd), kvdt,
+                   ("layers", "batch", None, None, None)),
+        }
+    if at == "ssm":
+        h, dk = cfg.ssm_heads, cfg.ssm_head_dim
+        nl, d = cfg.num_layers, cfg.d_model
+        return {
+            "S": ((nl, b, h, dk, dk), "float32",
+                  ("layers", "batch", None, None, None)),
+            "ax": ((nl, b, 1, d), "bfloat16", ("layers", "batch", None, None)),
+            "fx": ((nl, b, 1, d), "bfloat16", ("layers", "batch", None, None)),
+        }
+    if at == "hybrid":
+        g, per = _hybrid_groups(cfg)
+        h, hd_s, ns = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+        cw = cfg.conv_width
+        cdim = h * hd_s + 2 * ns
+        return {
+            "S": ((g, per, b, h, ns, hd_s), "float32",
+                  ("layers", "layers", "batch", None, None, None)),
+            "conv": ((g, per, b, cw - 1, cdim), "bfloat16",
+                     ("layers", "layers", "batch", None, None)),
+            "ak": ((g, b, w, hkv, hd), kvdt,
+                   ("layers", "batch", "kv_seq", "kv_heads", None)),
+            "av": ((g, b, w, hkv, hd), kvdt,
+                   ("layers", "batch", "kv_seq", "kv_heads", None)),
+        }
+    raise ValueError(at)
+
+
+def init_cache(cfg: ArchConfig, b: int, cache_len: int):
+    return {k: jnp.zeros(sh, jnp.dtype(dt))
+            for k, (sh, dt, _) in _cache_desc(cfg, b, cache_len).items()}
+
+
+def abstract_cache(cfg: ArchConfig, b: int, cache_len: int):
+    return {k: jax.ShapeDtypeStruct(sh, jnp.dtype(dt))
+            for k, (sh, dt, _) in _cache_desc(cfg, b, cache_len).items()}
+
+
+def cache_pspecs(cfg: ArchConfig, mesh, b: int, cache_len: int, *,
+                 kind: str = "decode"):
+    bx = batch_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    nb = int(np.prod([sizes[a] for a in bx])) if bx else 1
+    bspec = None
+    if bx and b % nb == 0:
+        bspec = bx if len(bx) > 1 else bx[0]
+    msize = sizes.get("model", 0)
+    out = {}
+    for k, (sh, _, axes) in _cache_desc(cfg, b, cache_len).items():
+        # Prefill caches shard KV heads over 'model' — the natural layout of
+        # TP-computed k/v, avoiding a full-cache all-gather at the prefill
+        # output (23x collective win, §Perf). Decode keeps the cache
+        # sequence-sharded (flash-decode partial softmax): the serving
+        # engine reshards once after prefill (one cheap all-to-all).
+        dims = dict(zip(axes, sh))
+        head_ok = (kind != "decode" and msize
+                   and dims.get("kv_heads", 0) % msize == 0
+                   and dims.get("kv_heads", 0) > 0)
+        # When heads don't divide the model axis, shard the cache sequence
+        # dim instead: at prefill this turns the full-cache head all-gather
+        # into per-layer all-to-alls (17.9 GiB -> ~1.1 GiB on arctic, §Perf
+        # B3); at decode it is the flash-decode layout. Ring (windowed)
+        # caches are exempt at prefill — resharding the ring-tail slice
+        # measured 6x WORSE on gemma2-9b-sw (§Perf B3 follow-up).
+        seq_len = dims.get("kv_seq", 0)
+        seq_ok = (msize and seq_len % msize == 0
+                  and (kind == "decode" or seq_len >= cache_len))
+        spec = []
+        for dim, ax in zip(sh, axes):
+            if ax == "batch":
+                spec.append(bspec)
+            elif ax == "kv_heads" and head_ok:
+                spec.append("model")
+            elif ax == "kv_seq" and not head_ok and seq_ok:
+                spec.append("model")
+            else:
+                spec.append(None)
+        out[k] = P(*spec)
+    return out
+
+
+# ===========================================================================
+# Prefill (full forward + cache extraction)
+# ===========================================================================
+
+
+def _ring_tail(k_full, w):
+    """Last `w` positions of (L?, B, S, H, hd), ring-aligned (S % w == 0)."""
+    s = k_full.shape[-3]
+    if s <= w:
+        pad = [(0, 0)] * k_full.ndim
+        pad[-3] = (0, w - s)
+        return jnp.pad(k_full, pad)
+    return jax.lax.slice_in_dim(k_full, s - w, s, axis=k_full.ndim - 3)
+
+
+def prefill(params, cfg: ArchConfig, batch, cache_len: int, *, impl="masked",
+            use_kernel=False):
+    """Full forward over the prompt; returns (cache, last-token logits)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    assert s <= cache_len
+    h, _, raw = forward_hidden(params, cfg, batch, train=False, collect=True,
+                               impl=impl, use_kernel=use_kernel)
+    logits = logits_last(h[:, -1], unembed_table(params, cfg),
+                         cfg.final_softcap)
+
+    def pad_to(x, n):  # pad kv seq dim (axis -3) to the cache length
+        return jnp.pad(x, [(0, 0)] * (x.ndim - 3) + [(0, n - x.shape[-3]), (0, 0), (0, 0)])
+
+    at = cfg.arch_type
+    w = min(cfg.sliding_window, cache_len) if cfg.sliding_window else cache_len
+    if at in ("dense", "moe"):
+        if cfg.attn_pattern == "local_global":
+            (kl, vl), (kg, vg) = raw
+            cache = {"k_local": _ring_tail(kl, w), "v_local": _ring_tail(vl, w),
+                     "k_global": pad_to(kg, cache_len),
+                     "v_global": pad_to(vg, cache_len)}
+        elif cfg.num_experts and cfg.moe_every == 2:
+            (kd, vd), (km, vm) = raw
+            cache = {"k_dense": pad_to(kd, cache_len),
+                     "v_dense": pad_to(vd, cache_len),
+                     "k_moe": pad_to(km, cache_len),
+                     "v_moe": pad_to(vm, cache_len)}
+        else:
+            k, v = raw
+            if cfg.attn_pattern == "local":
+                cache = {"k": _ring_tail(k, w), "v": _ring_tail(v, w)}
+            else:
+                cache = {"k": pad_to(k, cache_len), "v": pad_to(v, cache_len)}
+    elif at == "vlm":
+        (ks, vs), (kx, vx) = raw
+        cache = {"k": pad_to(ks, cache_len), "v": pad_to(vs, cache_len),
+                 "xk": kx, "xv": vx}
+    elif at == "audio":
+        (ks, vs), (kx, vx) = raw
+        cache = {"k": pad_to(ks, cache_len), "v": pad_to(vs, cache_len),
+                 "xk": kx, "xv": vx}
+    elif at == "ssm":
+        S, ax, fx = raw
+        cache = {"S": S, "ax": ax.astype(ACT_DTYPE), "fx": fx.astype(ACT_DTYPE)}
+    elif at == "hybrid":
+        (kv_shared, sts) = raw
+        k_sh, v_sh = kv_shared
+        S, conv = sts
+        cache = {"S": S, "conv": conv.astype(ACT_DTYPE),
+                 "ak": _ring_tail(k_sh, w), "av": _ring_tail(v_sh, w)}
+    else:
+        raise ValueError(at)
+    desc = _cache_desc(cfg, b, cache_len)
+    cache = {k: v.astype(jnp.dtype(desc[k][1])) for k, v in cache.items()}
+    return cache, logits
+
+
+# ===========================================================================
+# Decode step (one new token, per arch family)
+# ===========================================================================
+
+
+def decode_step(params, cfg: ArchConfig, cache, tokens, pos):
+    """One serving step: tokens (B,) at position `pos` -> (cache, logits)."""
+    b = tokens.shape[0]
+    x = embed(tokens[:, None], params["embed"], cfg.embed_scale).astype(ACT_DTYPE)
+    at = cfg.arch_type
+
+    if at in ("dense", "moe"):
+        if cfg.attn_pattern == "local_global":
+            def body(x, xs):
+                pl, pg, ckl, cvl, ckg, cvg = xs
+                x, ckl, cvl = _block_decode(pl, x, cfg, ckl, cvl, pos,
+                                            window=cfg.sliding_window, ring=True)
+                x, ckg, cvg = _block_decode(pg, x, cfg, ckg, cvg, pos)
+                return x, (ckl, cvl, ckg, cvg)
+
+            x, (ckl, cvl, ckg, cvg) = jax.lax.scan(
+                body, x, (params["local"], params["global"], cache["k_local"],
+                          cache["v_local"], cache["k_global"], cache["v_global"]))
+            cache = {"k_local": ckl, "v_local": cvl,
+                     "k_global": ckg, "v_global": cvg}
+        elif cfg.num_experts and cfg.moe_every == 2:
+            dense_cfg = _pair_dense_cfg(cfg)
+
+            def body(x, xs):
+                pd, pm, ckd, cvd, ckm, cvm = xs
+                x, ckd, cvd = _block_decode(pd, x, dense_cfg, ckd, cvd, pos)
+                x, ckm, cvm = _block_decode(pm, x, cfg, ckm, cvm, pos)
+                return x, (ckd, cvd, ckm, cvm)
+
+            x, (ckd, cvd, ckm, cvm) = jax.lax.scan(
+                body, x, (params["dense_blk"], params["moe_blk"],
+                          cache["k_dense"], cache["v_dense"],
+                          cache["k_moe"], cache["v_moe"]))
+            cache = {"k_dense": ckd, "v_dense": cvd, "k_moe": ckm, "v_moe": cvm}
+        else:
+            window = cfg.sliding_window if cfg.attn_pattern == "local" else 0
+            ring = cfg.attn_pattern == "local"
+
+            def body(x, xs):
+                p, ck, cv = xs
+                x, ck, cv = _block_decode(p, x, cfg, ck, cv, pos,
+                                          window=window, ring=ring)
+                return x, (ck, cv)
+
+            x, (ck, cv) = jax.lax.scan(
+                body, x, (params["blk"], cache["k"], cache["v"]))
+            cache = {"k": ck, "v": cv}
+
+    elif at == "vlm":
+        def group(x, xs):
+            pp, px, ck, cv, xk, xv = xs
+
+            def inner(x, ys):
+                p, ck1, cv1 = ys
+                x, ck1, cv1 = _block_decode(p, x, cfg, ck1, cv1, pos)
+                return x, (ck1, cv1)
+
+            x, (ck, cv) = jax.lax.scan(inner, x, (pp, ck, cv))
+            x, _, _ = _block_decode(px, x, cfg, xk, xv, pos, cross=True)
+            return x, (ck, cv)
+
+        x, (ck, cv) = jax.lax.scan(
+            group, x, (params["blk"], params["xblk"], cache["k"], cache["v"],
+                       cache["xk"], cache["xv"]))
+        cache = dict(cache, k=ck, v=cv)
+
+    elif at == "audio":
+        x = x + _sinusoid(1, cfg.d_model, offset=pos)[None]
+
+        def body(x, xs):
+            p, ck, cv, xk, xv = xs
+            x, ck, cv = _block_decode(p, x, cfg, ck, cv, pos)
+            h = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+            co, _, _ = _attn_decode(p["xattn"], h, cfg, xk, xv, pos, cross=True)
+            return x + co, (ck, cv)
+
+        x, (ck, cv) = jax.lax.scan(
+            body, x, (params["dec"], cache["k"], cache["v"], cache["xk"],
+                      cache["xv"]))
+        cache = dict(cache, k=ck, v=cv)
+
+    elif at == "ssm":
+        x = rms_norm(x, params["ln0"], cfg.norm_eps)
+
+        def body(x, xs):
+            p, S, ax, fx = xs
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            y, (ax_new, S) = ssm.rwkv6_time_mix_step(
+                p["att"], h, ax.astype(h.dtype), S, cfg)
+            x = x + y
+            h = rms_norm(x, p["ln2"], cfg.norm_eps)
+            y, fx_new = ssm.rwkv6_channel_mix(p["ffn"], h, fx.astype(h.dtype))
+            return x + y, (S, ax_new.astype(ACT_DTYPE), fx_new.astype(ACT_DTYPE))
+
+        x, (S, ax, fx) = jax.lax.scan(
+            body, x, (params["blk"], cache["S"], cache["ax"], cache["fx"]))
+        cache = {"S": S, "ax": ax, "fx": fx}
+
+    elif at == "hybrid":
+        shared = params["shared"]
+
+        def group(x, xs):
+            pp, S, conv, ak, av = xs
+            x, ak, av = _block_decode(shared, x, cfg, ak, av, pos,
+                                      window=cfg.sliding_window, ring=True)
+
+            def inner(x, ys):
+                p, S1, c1 = ys
+                h = rms_norm(x, p["ln"], cfg.norm_eps)
+                y, (S1, c1) = ssm.mamba2_mix_step(p, h, S1, c1.astype(h.dtype),
+                                                  cfg)
+                return x + y, (S1, c1.astype(ACT_DTYPE))
+
+            x, (S, conv) = jax.lax.scan(inner, x, (pp, S, conv))
+            return x, (S, conv, ak, av)
+
+        x, (S, conv, ak, av) = jax.lax.scan(
+            group, x, (params["blk"], cache["S"], cache["conv"], cache["ak"],
+                       cache["av"]))
+        cache = {"S": S, "conv": conv, "ak": ak, "av": av}
+    else:
+        raise ValueError(at)
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = logits_last(x[:, 0], unembed_table(params, cfg), cfg.final_softcap)
+    return cache, constrain(logits, "logits")
+
+
+# ===========================================================================
+# Abstract inputs (dry-run, no allocation)
+# ===========================================================================
+
+
+def abstract_batch(cfg: ArchConfig, kind: str, b: int, s: int) -> dict:
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if kind == "train":
+        batch = {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+    elif kind == "prefill":
+        batch = {"tokens": sds((b, s), i32)}
+    elif kind == "decode":
+        return {"tokens": sds((b,), i32)}
+    else:
+        raise ValueError(kind)
+    if cfg.arch_type == "vlm":
+        batch["patches"] = sds((b, cfg.num_frontend_tokens, cfg.d_model),
+                               ACT_DTYPE)
+    if cfg.arch_type == "audio":
+        batch["frames"] = sds((b, cfg.encoder_tokens, cfg.d_model), ACT_DTYPE)
+    return batch
+
+
+def batch_pspecs(cfg: ArchConfig, mesh, kind: str, b: int) -> dict:
+    bx = batch_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    nb = int(np.prod([sizes[a] for a in bx])) if bx else 1
+    bspec = None
+    if bx and b % nb == 0:
+        bspec = bx if len(bx) > 1 else bx[0]
+    if kind == "decode":
+        return {"tokens": P(bspec)}
+    out = {"tokens": P(bspec, None)}
+    if kind == "train":
+        out["labels"] = P(bspec, None)
+    if cfg.arch_type == "vlm":
+        out["patches"] = P(bspec, None, None)
+    if cfg.arch_type == "audio":
+        out["frames"] = P(bspec, None, None)
+    return out
+
+
+def real_batch(cfg: ArchConfig, kind: str, b: int, s: int, key) -> dict:
+    """Materialized random batch (smoke tests / examples)."""
+    ks = jax.random.split(key, 3)
+    batch = {}
+    if kind == "decode":
+        return {"tokens": jax.random.randint(ks[0], (b,), 0, cfg.vocab_size)}
+    batch["tokens"] = jax.random.randint(ks[0], (b, s), 0, cfg.vocab_size)
+    if kind == "train":
+        batch["labels"] = jax.random.randint(ks[1], (b, s), 0, cfg.vocab_size)
+    if cfg.arch_type == "vlm":
+        batch["patches"] = jax.random.normal(
+            ks[2], (b, cfg.num_frontend_tokens, cfg.d_model), ACT_DTYPE) * 0.02
+    if cfg.arch_type == "audio":
+        batch["frames"] = jax.random.normal(
+            ks[2], (b, cfg.encoder_tokens, cfg.d_model), ACT_DTYPE) * 0.02
+    return batch

@@ -1,0 +1,91 @@
+"""Mixture-of-Experts layer: top-k routing with capacity + expert parallel.
+
+Dispatch uses the scatter/gather formulation (never materializing the
+(tokens × experts × capacity) one-hot): tokens are scattered into per-expert
+buffers sized by the capacity factor, expert matmuls run batched over the
+expert dim (sharded over the 'model' axis = expert parallelism; XLA lowers
+the scatter/gather across expert shards to all-to-alls), and results are
+combined with the router weights. Overflowed tokens are dropped (standard
+capacity-factor semantics); the auxiliary load-balance loss keeps the router
+near-uniform so drops stay rare.
+
+Arctic's "dense residual" / Llama4's "shared expert" is a parallel dense MLP
+added to the routed output (cfg.moe_dense_ff).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import mlp
+from repro.sharding.specs import constrain
+
+
+def router_probs(x, w_router):
+    logits = jnp.einsum(
+        "btd,de->bte", x, w_router, preferred_element_type=jnp.float32
+    )
+    return jax.nn.softmax(logits, axis=-1), logits
+
+
+def moe_layer(p, x, cfg, *, capacity_factor: float | None = None):
+    """x: (B,S,D) -> (out, aux) with aux = {load_balance, router_z} losses."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    n = b * s
+    cf = capacity_factor if capacity_factor is not None else cfg.capacity_factor
+    cap = max(1, int(n * k * cf / e))
+
+    xt = x.reshape(n, d)
+    probs, logits = router_probs(x, p["router"])  # (B,S,E)
+    probs_t = probs.reshape(n, e)
+
+    gate_vals, topk_idx = jax.lax.top_k(probs_t, k)  # (n, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Position of each (token, choice) within its expert's buffer.
+    flat_expert = topk_idx.reshape(-1)  # (n*k,)
+    onehot = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)  # (n*k, E)
+    pos_in_expert = ((jnp.cumsum(onehot, axis=0) - onehot) * onehot).sum(axis=-1)
+    keep = pos_in_expert < cap
+
+    # Scatter tokens into (E, cap, D) buffers.
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    src = jnp.repeat(xt, k, axis=0)  # (n*k, D)
+    safe_pos = jnp.where(keep, pos_in_expert, cap - 1)
+    buf = buf.at[flat_expert, safe_pos].add(
+        jnp.where(keep[:, None], src, 0).astype(x.dtype), mode="drop"
+    )
+    # Expert-parallel layout: XLA lowers the scatter across expert shards to
+    # an all-to-all (the MoE dispatch collective visible in the roofline).
+    buf = constrain(buf, "moe_buf")
+
+    # Batched expert MLP over the expert dim (expert-parallel sharded).
+    h = {
+        "gate": jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]),
+        "up": jnp.einsum("ecd,edf->ecf", buf, p["w_up"]),
+    }
+    act = jax.nn.silu(h["gate"]) * h["up"]
+    out_buf = jnp.einsum("ecf,efd->ecd", act, p["w_down"])  # (E, cap, D)
+
+    # Gather back + combine with gates.
+    gathered = out_buf[flat_expert, safe_pos]  # (n*k, D)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    combined = (
+        gathered.reshape(n, k, d) * gate_vals[..., None].astype(x.dtype)
+    ).sum(axis=1)
+    # Keep the residual stream in the activation dtype: f32 leaking out of
+    # the gate multiply doubles every downstream TP all-reduce (§Perf B4).
+    out = combined.reshape(b, s, d).astype(x.dtype)
+
+    # Dense residual branch (arctic) / shared expert (llama4).
+    if cfg.moe_dense_ff:
+        out = out + mlp(x, p["dense"], "swiglu")
+
+    # Aux losses (Switch-style load balance + router z-loss).
+    me = probs_t.mean(axis=0)  # mean router prob per expert
+    ce = jnp.zeros(e, jnp.float32).at[flat_expert].add(1.0) / max(n * k, 1)
+    load_balance = e * jnp.sum(me * ce)
+    router_z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return out, {"load_balance": load_balance, "router_z": router_z}

@@ -1,0 +1,129 @@
+"""Parameter schema: declare each weight once with shape + logical axes.
+
+From one schema we derive (a) real initialized params, (b) abstract
+ShapeDtypeStructs for the dry-run, (c) PartitionSpecs via the sharding rules
+(t5x-style logical-axis indirection). Logical axis names:
+
+  layers      scan-stacked layer dim (never sharded)
+  embed       d_model            -> 'data'   (FSDP-style 2D weight sharding)
+  qkv         flattened H*hd     -> 'model'  (always divisible by axis size)
+  kv          flattened Hkv*hd   -> 'model' if divisible else None
+  ff          MLP hidden         -> 'model'
+  vocab       vocabulary         -> 'model'
+  experts     MoE expert count   -> 'model'  (expert parallel)
+  expert_ff   per-expert hidden  -> 'data'
+  frontend/pos/conv/state/heads  -> None (small / replicated)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class PDef:
+    """One parameter's declaration."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones | decay | small_normal
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Schema = dict  # nested dict[str, PDef | Schema]
+
+
+def _fan_in(shape: tuple[int, ...]) -> int:
+    # For stacked (layers-leading) weights, fan-in excludes the stack dim and
+    # the output (last) dim.
+    if len(shape) == 1:
+        return shape[0]
+    return int(np.prod(shape[:-1]))
+
+
+def init_params(schema: Schema, key: jax.Array, stacked_axes: int = 0):
+    """Materialize real parameters (truncated-normal fan-in scaled)."""
+    leaves = []
+
+    def collect(node, path):
+        if isinstance(node, PDef):
+            leaves.append((path, node))
+        else:
+            for k in sorted(node):
+                collect(node[k], path + (k,))
+
+    collect(schema, ())
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    out: dict = {}
+    for (path, pdef), k in zip(leaves, keys):
+        dtype = jnp.dtype(pdef.dtype)
+        if pdef.init == "zeros":
+            arr = jnp.zeros(pdef.shape, dtype)
+        elif pdef.init == "ones":
+            arr = jnp.ones(pdef.shape, dtype)
+        elif pdef.init == "decay":
+            # SSM decay-ish params: init in a stable negative band.
+            arr = jnp.asarray(
+                jax.random.uniform(k, pdef.shape, jnp.float32, -6.0, -2.0), dtype
+            )
+        else:
+            scale = 1.0 / math.sqrt(max(_fan_in(pdef.shape), 1))
+            if pdef.init == "small_normal":
+                scale *= 0.1
+            arr = jnp.asarray(
+                scale * jax.random.truncated_normal(k, -2.0, 2.0, pdef.shape, jnp.float32),
+                dtype,
+            )
+        node = out
+        for p in path[:-1]:
+            node = node.setdefault(p, {})
+        node[path[-1]] = arr
+    return out
+
+
+def abstract_params(schema: Schema):
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+
+    def conv(node):
+        if isinstance(node, PDef):
+            return jax.ShapeDtypeStruct(node.shape, jnp.dtype(node.dtype))
+        return {k: conv(v) for k, v in node.items()}
+
+    return conv(schema)
+
+
+def partition_specs(schema: Schema, rules: dict[str | None, str | None]):
+    """PartitionSpec tree from logical-axis rules.
+
+    A logical axis maps through `rules`; unknown axes replicate. If a
+    dimension is not divisible by the mesh-axis size the rule must have
+    already excluded it (rules are built per-config; see sharding/specs.py).
+    """
+
+    def conv(node):
+        if isinstance(node, PDef):
+            return P(*(rules.get(a, None) for a in node.axes))
+        return {k: conv(v) for k, v in node.items()}
+
+    return conv(schema)
+
+
+def tree_bytes(tree) -> int:
+    return sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(tree)
+    )
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))

@@ -1,0 +1,294 @@
+"""Linear-recurrence layers: the shared chunked scan + RWKV6 + Mamba2.
+
+Both architectures are instances of the diagonal-decay recurrence
+
+    S_t = diag(w_t) · S_{t-1} + k_t v_tᵀ            (S: (dk, dv) per head)
+    y_t = q_t · (diag(d_t) · S_{t-1}) + (q_t · (u_t ⊙ k_t)) v_t
+
+  RWKV6 ("Finch"): d_t = 1, u_t = u (learned bonus), w_t = per-channel
+    data-dependent decay (the defining Finch feature, arXiv:2404.05892).
+  Mamba2 (SSD):    d_t = w_t = exp(-Δt·exp(A_log)) (scalar per head,
+    broadcast over dk), u_t = 1, k = B, q = C, v = Δt·x.
+
+`chunk_scan` processes the sequence in chunks: intra-chunk terms use
+bounded decay *ratios* exp(L_{t-1} - L_i) ≤ 1 (L = cumulative log decay), so
+everything is fp32-stable without log-space gymnastics; cross-chunk state is
+carried by lax.scan. The Pallas `chunk_scan` kernel mirrors this tiling.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+LOG_W_MIN = -20.0  # decays below e^-20 are numerically zero already
+
+
+def chunk_scan_reference(w, k, v, q, u, *, include_current: bool, s0=None):
+    """Sequential oracle. Shapes: w,k,q: (B,S,H,dk); v: (B,S,H,dv);
+    u: (H, dk) bonus (ignored when include_current). Returns (y, S_final)."""
+    b, s, h, dk = k.shape
+    dv = v.shape[-1]
+    wf, kf, vf, qf = (x.astype(jnp.float32) for x in (w, k, v, q))
+
+    def step(S, xs):
+        wt, kt, vt, qt = xs  # (B,H,dk) ...
+        if include_current:  # mamba2: read after update
+            S_new = wt[..., None] * S + kt[..., None] * vt[..., None, :]
+            y = jnp.einsum("bhd,bhde->bhe", qt, S_new)
+        else:  # rwkv6: read S_{t-1} plus u-bonus on the current token
+            y = jnp.einsum("bhd,bhde->bhe", qt, S) + jnp.einsum(
+                "bhd,hd,bhd,bhe->bhe", qt, u.astype(jnp.float32), kt, vt
+            )
+            S_new = wt[..., None] * S + kt[..., None] * vt[..., None, :]
+        return S_new, y
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    S, ys = jax.lax.scan(
+        step, s0, tuple(x.swapaxes(0, 1) for x in (wf, kf, vf, qf))
+    )
+    return ys.swapaxes(0, 1).astype(v.dtype), S
+
+
+def chunk_scan(w, k, v, q, u, *, include_current: bool, chunk: int = 32, s0=None):
+    """Chunked evaluation of the same recurrence (system path).
+
+    All decay factors appear as ratios bounded in (0, 1]:
+      y_state[t] = (q_t ⊙ d_t ⊙ exp(Lprev_t)) @ S0
+      A[t,i]     = Σ_d q_t d_t k_i exp(Lprev_t - L_i)   (i < t; masked)
+      A[t,t]     = Σ_d q_t u k_t                (rwkv) or q_t w_t... (mamba2
+                   include_current folds d_t = w_t into the i == t term)
+      S_next     = diag(exp(L_C)) S0 + Σ_i (k_i ⊙ exp(L_C - L_i)) v_iᵀ
+    """
+    b, s, h, dk = k.shape
+    dv = v.shape[-1]
+    if s % chunk:  # fall back to the largest divisor of s (ragged tails)
+        chunk = max(c for c in range(1, min(chunk, s) + 1) if s % c == 0)
+    n = s // chunk
+
+    wf = jnp.clip(jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-30)), LOG_W_MIN, 0.0)
+    kf, vf, qf = (x.astype(jnp.float32) for x in (k, v, q))
+
+    # (n, B, H, C, d*) chunked layout
+    def chunked(x, d):
+        return x.reshape(b, n, chunk, h, d).transpose(1, 0, 3, 2, 4)
+
+    wc, kc, vc, qc = chunked(wf, dk), chunked(kf, dk), chunked(vf, dv), chunked(qf, dk)
+
+    tri_lower = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # i < t
+    eye = jnp.eye(chunk, dtype=jnp.float32)
+
+    def body(S, xs):
+        lw, kt, vt, qt = xs  # (B,H,C,d)
+        L = jnp.cumsum(lw, axis=-2)  # inclusive cumulative log decay
+        Lprev = L - lw
+
+        if include_current:
+            # mamba2: y_t = q_t @ S_t = q_t ⊙ exp(L_t) @ S0 + Σ_{i<=t} ...
+            qs = qt * jnp.exp(L)
+            ratio = L[..., :, None, :] - L[..., None, :, :]  # (B,H,C,C,dk)
+            mask = (tri_lower | (eye > 0))[None, None, :, :, None]
+            A = jnp.sum(
+                jnp.where(mask, jnp.exp(ratio), 0.0)
+                * qt[..., :, None, :]
+                * kt[..., None, :, :],
+                axis=-1,
+            )
+        else:
+            # rwkv6: y_t reads S_{t-1}; diagonal uses the u bonus.
+            qs = qt * jnp.exp(Lprev)
+            ratio = Lprev[..., :, None, :] - L[..., None, :, :]
+            off = jnp.sum(
+                jnp.where(tri_lower[None, None, :, :, None], jnp.exp(ratio), 0.0)
+                * qt[..., :, None, :]
+                * kt[..., None, :, :],
+                axis=-1,
+            )
+            diag = jnp.einsum("bhcd,hd,bhcd->bhc", qt, u.astype(jnp.float32), kt)
+            A = off + diag[..., :, None] * eye[None, None]
+
+        y = jnp.einsum("bhcd,bhde->bhce", qs, S) + jnp.einsum(
+            "bhct,bhte->bhce", A, vt
+        )
+
+        Lc = L[..., -1:, :]  # (B,H,1,dk) total chunk decay
+        k_dec = kt * jnp.exp(Lc - L)
+        S_new = jnp.exp(Lc[..., 0, :])[..., None] * S + jnp.einsum(
+            "bhcd,bhce->bhde", k_dec, vt
+        )
+        return S_new, y
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    S, ys = jax.lax.scan(body, s0, (wc, kc, vc, qc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, h, dv)
+    return y.astype(v.dtype), S
+
+
+def recurrence_step(S, w, k, v, q, u, *, include_current: bool):
+    """Single-token decode step. S: (B,H,dk,dv); w,k,q: (B,H,dk); v: (B,H,dv)."""
+    Sf = S.astype(jnp.float32)
+    wf, kf, vf, qf = (x.astype(jnp.float32) for x in (w, k, v, q))
+    kv = kf[..., None] * vf[..., None, :]
+    if include_current:
+        S_new = wf[..., None] * Sf + kv
+        y = jnp.einsum("bhd,bhde->bhe", qf, S_new)
+    else:
+        y = jnp.einsum("bhd,bhde->bhe", qf, Sf) + jnp.einsum(
+            "bhd,hd,bhd,bhe->bhe", qf, u.astype(jnp.float32), kf, vf
+        )
+        S_new = wf[..., None] * Sf + kv
+    return S_new, y.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time mix / channel mix
+# ---------------------------------------------------------------------------
+
+
+def _token_shift(x, x_prev):
+    """RWKV token shift: previous token's activation (x_prev: (B,1,D) state)."""
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def rwkv6_time_mix(p, x, x_prev, state, cfg, *, chunk=32, use_kernel=False):
+    """RWKV6 attention replacement. x: (B,S,D). Returns (y, (x_last, S))."""
+    b, s, d = x.shape
+    h, dk = cfg.ssm_heads, cfg.ssm_head_dim
+    xs = _token_shift(x, x_prev)
+
+    def mix(name):
+        return x + p[f"mu_{name}"].astype(x.dtype) * (xs - x)
+
+    r = (mix("r") @ p["w_r"]).reshape(b, s, h, dk)
+    k = (mix("k") @ p["w_k"]).reshape(b, s, h, dk)
+    v = (mix("v") @ p["w_v"]).reshape(b, s, h, dk)
+    g = mix("g") @ p["w_g"]
+
+    # Data-dependent decay (the Finch feature): low-rank w(x).
+    xw = mix("w")
+    w_log = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(b, s, h, dk)  # (0,1) per channel
+
+    if use_kernel:
+        from repro.kernels.chunk_scan import ops as cs_ops
+
+        y, S = cs_ops.chunk_scan(
+            w, k, v, r, p["u"], include_current=False, chunk=chunk, s0=state
+        )
+    else:
+        y, S = chunk_scan(
+            w, k, v, r, p["u"], include_current=False, chunk=chunk, s0=state
+        )
+
+    # Per-head group norm, gate, output projection.
+    y = rms_norm(y.reshape(b, s, h, dk), p["ln_x"].reshape(h, dk), cfg.norm_eps)
+    y = y.reshape(b, s, d) * jax.nn.silu(g)
+    return y @ p["w_o"], (x[:, -1:], S)
+
+
+def rwkv6_time_mix_step(p, x, x_prev, state, cfg):
+    """Single-token decode. x: (B,1,D)."""
+    b, _, d = x.shape
+    h, dk = cfg.ssm_heads, cfg.ssm_head_dim
+
+    def mix(name):
+        return x + p[f"mu_{name}"].astype(x.dtype) * (x_prev - x)
+
+    r = (mix("r") @ p["w_r"]).reshape(b, h, dk)
+    k = (mix("k") @ p["w_k"]).reshape(b, h, dk)
+    v = (mix("v") @ p["w_v"]).reshape(b, h, dk)
+    g = mix("g") @ p["w_g"]
+    xw = mix("w")
+    w_log = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log)).reshape(b, h, dk)
+
+    S, y = recurrence_step(state, w, k, v, r, p["u"], include_current=False)
+    y = rms_norm(y.reshape(b, 1, h, dk), p["ln_x"].reshape(h, dk), cfg.norm_eps)
+    y = y.reshape(b, 1, d) * jax.nn.silu(g)
+    return y @ p["w_o"], (x, S)
+
+
+def rwkv6_channel_mix(p, x, x_prev):
+    """RWKV channel mix with token shift: relu(x_k W_up)² W_down.
+
+    x_prev: (B,1,D) last token of the previous segment (zeros at start).
+    Returns (out, new x_prev). Works for full sequences and decode (S=1).
+    """
+    xs = _token_shift(x, x_prev)
+    xk = x + p["mu_ck"].astype(x.dtype) * (xs - x)
+    h = jnp.square(jax.nn.relu(xk @ p["up"]))
+    return h @ p["down"], x[:, -1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x, conv_w, conv_state=None):
+    """Depthwise causal conv1d, width W. x: (B,S,C); conv_w: (W,C).
+
+    conv_state: (B, W-1, C) trailing context (decode); returns new state.
+    """
+    width = conv_w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * conv_w[i][None, None, :] for i in range(width)
+    )
+    new_state = xp[:, -(width - 1) :] if width > 1 else conv_state
+    return jax.nn.silu(out), new_state
+
+
+def mamba2_mix(p, x, state, conv_state, cfg, *, chunk=32, use_kernel=False):
+    """Mamba2 block core. x: (B,S,D). Returns (y, (S, conv_state))."""
+    b, s, d = x.shape
+    h, hd, ns = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    inner = h * hd
+
+    proj = x @ p["in_proj"]  # (B,S, inner*2 + 2*ns + h)
+    z, xz, Bc, Cc, dt = jnp.split(
+        proj, [inner, 2 * inner, 2 * inner + ns, 2 * inner + 2 * ns], axis=-1
+    )
+    conv_in = jnp.concatenate([xz, Bc, Cc], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], conv_state)
+    xz, Bc, Cc = jnp.split(conv_out, [inner, inner + ns], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = jnp.exp(-jnp.exp(p["a_log"].astype(jnp.float32)) * dt)  # (B,S,H) decay
+
+    k = jnp.broadcast_to(Bc[:, :, None, :], (b, s, h, ns))
+    q = jnp.broadcast_to(Cc[:, :, None, :], (b, s, h, ns))
+    v = xz.reshape(b, s, h, hd) * dt[..., None].astype(xz.dtype)
+    w = jnp.broadcast_to(a[..., None], (b, s, h, ns))  # scalar/head -> dk
+
+    if use_kernel:
+        from repro.kernels.chunk_scan import ops as cs_ops
+
+        y, S = cs_ops.chunk_scan(
+            w, k, v, q, None, include_current=True, chunk=chunk, s0=state
+        )
+    else:
+        y, S = chunk_scan(w, k, v, q, None, include_current=True, chunk=chunk, s0=state)
+
+    y = y.reshape(b, s, inner) + xz * p["d_skip"].astype(x.dtype).repeat(hd)[None, None]
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["ln_y"], cfg.norm_eps)
+    return y @ p["out_proj"], (S, conv_state)
+
+
+def mamba2_mix_step(p, x, state, conv_state, cfg):
+    """Single-token Mamba2 decode. x: (B,1,D)."""
+    y, (S, conv_state) = mamba2_mix(
+        p, x, state, conv_state, cfg, chunk=1, use_kernel=False
+    )
+    return y, (S, conv_state)

@@ -1,0 +1,135 @@
+"""Batched serving engine: length-bucketed waves of prefill + lockstep decode.
+
+Requests are grouped into waves of identical prompt length (classic length
+bucketing), so a wave shares one `pos` scalar and the KV cache layout stays
+rectangular — the same `prefill`/`decode_step` functions the multi-pod
+dry-run lowers. Greedy or temperature sampling per step.
+
+This is the serving half of the paper's system re-hosted: where Vedalia
+streams *model views* (topic summaries) to phones, the transformer zoo
+streams generated tokens; both flow through the Chital marketplace when
+offload is enabled (see repro.chital and examples/serve_reviews.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (L,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0  # 0 => greedy
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    tokens: np.ndarray  # generated tokens
+    prefill_s: float
+    decode_s: float
+    tokens_per_s: float
+
+
+class Engine:
+    """Length-bucketed batch serving over a fixed-size KV cache."""
+
+    def __init__(self, cfg, params, *, cache_len: int = 256, max_batch: int = 8,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.cache_len = cache_len
+        self.max_batch = max_batch
+        self.queue: list[Request] = []
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(
+            lambda p, batch: M.prefill(p, cfg, batch, cache_len),
+        )
+        self._decode = jax.jit(
+            lambda p, cache, toks, pos: M.decode_step(p, cfg, cache, toks, pos)
+        )
+
+    def submit(self, req: Request) -> None:
+        assert len(req.prompt) + req.max_new_tokens <= self.cache_len, (
+            "request exceeds cache")
+        self.queue.append(req)
+
+    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / temperature).astype(jnp.int32)
+
+    def _extra_inputs(self, b: int) -> dict:
+        cfg = self.cfg
+        extras = {}
+        if cfg.arch_type == "vlm":
+            extras["patches"] = jnp.zeros(
+                (b, cfg.num_frontend_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.arch_type == "audio":
+            extras["frames"] = jnp.zeros(
+                (b, cfg.encoder_tokens, cfg.d_model), jnp.bfloat16)
+        return extras
+
+    def _run_wave(self, wave: list[Request]) -> list[Result]:
+        b = len(wave)
+        plen = len(wave[0].prompt)
+        prompts = jnp.asarray(np.stack([r.prompt for r in wave]), jnp.int32)
+        batch = {"tokens": prompts, **self._extra_inputs(b)}
+
+        t0 = time.time()
+        cache, logits = self._prefill(self.params, batch)
+        logits = jax.block_until_ready(logits)
+        prefill_s = time.time() - t0
+
+        max_new = max(r.max_new_tokens for r in wave)
+        temp = wave[0].temperature
+        out = np.zeros((b, max_new), np.int32)
+        tok = self._sample(logits, temp)
+        t1 = time.time()
+        for i in range(max_new):
+            out[:, i] = np.asarray(tok)
+            if i == max_new - 1:
+                break
+            cache, logits = self._decode(
+                self.params, cache, tok, jnp.int32(plen + i))
+            tok = self._sample(logits, temp)
+        jax.block_until_ready(tok)
+        decode_s = time.time() - t1
+
+        results = []
+        for j, r in enumerate(wave):
+            n = r.max_new_tokens
+            results.append(Result(
+                uid=r.uid,
+                tokens=out[j, :n],
+                prefill_s=prefill_s,
+                decode_s=decode_s,
+                tokens_per_s=b * max_new / max(decode_s, 1e-9),
+            ))
+        return results
+
+    def run(self) -> list[Result]:
+        """Drain the queue: bucket by prompt length, serve in waves."""
+        buckets: dict[int, list[Request]] = defaultdict(list)
+        for r in self.queue:
+            buckets[len(r.prompt)].append(r)
+        self.queue.clear()
+
+        results = []
+        for plen in sorted(buckets):
+            reqs = buckets[plen]
+            for i in range(0, len(reqs), self.max_batch):
+                results.extend(self._run_wave(reqs[i : i + self.max_batch]))
+        return results

@@ -1,0 +1,1 @@
+"""Sharding rules: logical axes -> mesh axes, activation constraints."""

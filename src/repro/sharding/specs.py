@@ -1,0 +1,130 @@
+"""Logical-axis → mesh-axis rules and activation sharding constraints.
+
+Weight sharding is 2D "FSDP × TP": the d_model (embed) dim shards over
+'data' and the head/ff/vocab/expert dims over 'model'; the 'pod' axis (when
+present) carries pure data parallelism (weights replicated across pods,
+gradients all-reduced over 'pod'). Rules are *per-config*: any logical dim
+whose size is not divisible by its mesh axis falls back to replication
+(GSPMD rejects uneven input sharding), recorded by `build_rules`.
+
+Activation constraints are communicated to model code through a module
+global set by the launcher (`use_activation_specs`), keeping model code
+mesh-agnostic: on CPU smoke tests nothing is constrained.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# Logical weight axes -> preferred mesh axis (None = replicate).
+BASE_RULES: dict[Optional[str], Optional[str]] = {
+    "layers": None,
+    "embed": "data",  # FSDP-ish weight sharding
+    "qkv": "model",  # flattened num_heads*head_dim — always divisible
+    "kv": "model",  # flattened num_kv_heads*head_dim
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",  # expert parallelism
+    # Per-expert weights are (experts, embed, ff): experts x embed already
+    # give the full 256-way sharding; a second 'data' entry would collide.
+    "expert_ff": None,
+    None: None,
+}
+
+
+def build_rules(cfg, mesh) -> dict[Optional[str], Optional[str]]:
+    """Specialize BASE_RULES to a config + mesh, dropping non-divisible axes."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dims = {
+        "embed": cfg.d_model,
+        "qkv": cfg.qkv_dim,
+        "kv": cfg.kv_dim,
+        "ff": cfg.d_ff,
+        "vocab": cfg.vocab_size,
+        "experts": cfg.num_experts,
+        "expert_ff": cfg.d_ff,
+    }
+    rules = dict(BASE_RULES)
+    for axis, dim in dims.items():
+        mesh_axis = rules.get(axis)
+        if mesh_axis is None:
+            continue
+        if mesh_axis not in sizes or dim == 0 or dim % sizes[mesh_axis] != 0:
+            rules[axis] = None
+    return rules
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes carrying the batch dim: ('pod','data') multi-pod else ('data',)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def activation_specs(cfg, mesh, kind: str, global_batch: int = 0) -> dict[str, P]:
+    """Named activation constraint specs for a (config, mesh, step-kind).
+
+    If `global_batch` is given and not divisible by the batch mesh axes
+    (e.g. long_500k's batch of 1), the batch dim replicates — recorded in
+    the roofline table rather than hidden.
+    """
+    b = batch_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    nb = 1
+    for a in b:
+        nb *= sizes[a]
+    if global_batch and global_batch % max(nb, 1) != 0:
+        b = ()
+    bspec = b if len(b) > 1 else (b[0] if b else None)
+    model_ok = lambda dim: dim and "model" in sizes and dim % sizes["model"] == 0
+
+    specs = {
+        "residual": P(bspec, None, None),  # (B, S, D)
+        "logits": P(bspec, None, "model" if model_ok(cfg.vocab_size) else None),
+        "ffh": P(bspec, None, "model" if model_ok(cfg.d_ff) else None),
+        # (E, cap, D) MoE dispatch buffers: experts over 'model', capacity
+        # over the batch ('data') axis during training. At inference the
+        # capacity dim stays replicated: dispatch positions come from a
+        # GLOBAL cumsum, so forcing a capacity-sharded buffer makes GSPMD
+        # emit cross-shard scatters (measured 5x regression, §Perf B1); the
+        # shard-local-dispatch rewrite (shard_map) is logged as future work.
+        "moe_buf": P(
+            "model" if model_ok(cfg.num_experts) else None,
+            bspec if kind == "train" else None,
+            None,
+        ),
+        # KV cache (B, S, Hkv, hd): batch over data; decode caches shard the
+        # sequence dim over 'model' (flash-decode style partial softmax).
+        "kv_cache": P(bspec, "model" if kind == "decode" else None, None, None),
+    }
+    # Attention heads shard over 'model' only when divisible.
+    h = "model" if model_ok(cfg.num_heads) and cfg.num_heads else None
+    specs["heads"] = P(bspec, None, h, None)
+    return specs
+
+
+# --- module-global activation-constraint context ---------------------------------
+_ACT: Optional[dict[str, P]] = None
+
+
+@contextlib.contextmanager
+def use_activation_specs(specs: Optional[dict[str, P]]):
+    global _ACT
+    prev = _ACT
+    _ACT = specs
+    try:
+        yield
+    finally:
+        _ACT = prev
+
+
+def constrain(x: jax.Array, kind: str) -> jax.Array:
+    """Apply a named activation constraint when a context is active."""
+    if _ACT is None or kind not in _ACT:
+        return x
+    spec = _ACT[kind]
+    if len(spec) != x.ndim:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

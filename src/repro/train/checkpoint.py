@@ -1,0 +1,84 @@
+"""Checkpointing: flat-key npz snapshots of (params, opt_state, step).
+
+A deliberately simple, dependency-free format: every pytree leaf is stored
+under its '/'-joined key path. Restores verify structure against a template
+tree (shape + dtype), so a config change is caught at load time instead of
+producing silently-wrong training.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        arr = np.asarray(tree)
+        if "bfloat16" in str(arr.dtype):  # npz has no bf16: store as f32
+            arr = arr.astype(np.float32)
+        out[prefix[:-1]] = arr
+    return out
+
+
+def save(path: str, params, opt_state=None, step: int = 0) -> None:
+    flat = {f"params/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        flat.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
+    flat["step"] = np.asarray(step, np.int64)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    # Atomic write: tmp + rename, so a crash never leaves a torn checkpoint.
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".", suffix=".tmp")
+    os.close(fd)
+    try:
+        np.savez(tmp, **flat)
+        os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    finally:
+        for t in (tmp, tmp + ".npz"):
+            if os.path.exists(t):
+                os.remove(t)
+
+
+def _unflatten(flat: dict, template):
+    def rec(node, prefix):
+        if isinstance(node, dict):
+            return {k: rec(v, f"{prefix}{k}/") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(rec(v, f"{prefix}{i}/") for i, v in enumerate(node))
+        key = prefix[:-1]
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(node.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != expected {node.shape}")
+        return jnp.asarray(arr, dtype=node.dtype)
+
+    return rec(template, "")
+
+
+def restore(path: str, params_template, opt_template=None):
+    """Returns (params, opt_state | None, step)."""
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    params = _unflatten(
+        {k[len("params/"):]: v for k, v in flat.items() if k.startswith("params/")},
+        params_template,
+    )
+    opt_state = None
+    if opt_template is not None:
+        opt_state = _unflatten(
+            {k[len("opt/"):]: v for k, v in flat.items() if k.startswith("opt/")},
+            opt_template,
+        )
+    return params, opt_state, int(flat["step"])

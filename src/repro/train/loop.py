@@ -1,0 +1,63 @@
+"""Training loop: data -> jit(train_step) -> metrics/checkpoints.
+
+Used by examples/ (CPU, reduced configs) and launch/train.py (mesh path).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.lm import batches_for
+from repro.models import model as M
+from repro.train import checkpoint as ckpt_lib
+from repro.train.optim import OptConfig, make_optimizer
+from repro.train.step import make_train_step
+
+
+def train(
+    cfg,
+    *,
+    num_steps: int,
+    seq_len: int,
+    global_batch: int,
+    opt_cfg: Optional[OptConfig] = None,
+    seed: int = 0,
+    log_every: int = 10,
+    ckpt_path: Optional[str] = None,
+    ckpt_every: int = 0,
+    on_metrics: Optional[Callable[[int, dict], None]] = None,
+):
+    """Train `cfg` on the synthetic bigram stream. Returns (params, history)."""
+    opt_cfg = opt_cfg or OptConfig(name=cfg.optimizer, warmup_steps=min(20, num_steps))
+    opt = make_optimizer(opt_cfg)
+
+    key = jax.random.PRNGKey(seed)
+    params = M.init_model(cfg, key)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+
+    data = batches_for(cfg, seq_len, global_batch, seed=seed)
+    history = []
+    t0 = time.time()
+    for step, batch in zip(range(num_steps), data):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = step_fn(
+            params, opt_state, batch, jnp.int32(step)
+        )
+        if step % log_every == 0 or step == num_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            m["wall_s"] = time.time() - t0
+            history.append(m)
+            if on_metrics:
+                on_metrics(step, m)
+        if ckpt_path and ckpt_every and step and step % ckpt_every == 0:
+            ckpt_lib.save(ckpt_path, params, opt_state, step)
+    if ckpt_path:
+        ckpt_lib.save(ckpt_path, params, opt_state, num_steps)
+    return params, history

@@ -1,0 +1,191 @@
+"""Optimizers: AdamW (fp32 moments) and Adafactor (factored second moment).
+
+AdamW is the default. The 400B-class MoE configs use Adafactor because fp32
+AdamW moments exceed per-chip HBM at the production sharding (DESIGN.md §5):
+AdamW state is 8 bytes/param vs Adafactor's ~0 (row+col statistics only).
+
+State is laid out per *parameter leaf* (a dict of moment arrays), so
+optimizer state inherits the parameter PartitionSpecs with no extra
+sharding rules (factored stats drop the factored dim's axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"  # adamw | adafactor
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    eps2: float = 1e-30  # adafactor
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    # (step+1)/warmup so the very first step takes a (small) real update.
+    warm = (step + 1.0) / jnp.maximum(cfg.warmup_steps, 1)
+    t = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    clipped = jax.tree.map(
+        lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree
+    )
+    return clipped, g
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf update rules
+# ---------------------------------------------------------------------------
+
+
+def _adamw_leaf_init(p):
+    z = lambda: jnp.zeros(p.shape, jnp.float32)
+    return {"m": z(), "v": z()}
+
+
+def _adamw_leaf(cfg, g, s, p, step):
+    lr = schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    gf = g.astype(jnp.float32)
+    m = cfg.b1 * s["m"] + (1 - cfg.b1) * gf
+    v = cfg.b2 * s["v"] + (1 - cfg.b2) * gf * gf
+    u = (m / (1 - cfg.b1**t)) / (jnp.sqrt(v / (1 - cfg.b2**t)) + cfg.eps)
+    if p.ndim >= 2:  # decoupled weight decay on matrices only
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+    return (p.astype(jnp.float32) - lr * u).astype(p.dtype), {"m": m, "v": v}
+
+
+def _adafactor_leaf_init(p):
+    if p.ndim >= 2:
+        return {
+            "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+            "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+        }
+    return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+
+def _adafactor_leaf(cfg, g, s, p, step):
+    lr = schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    beta2 = 1.0 - t**-0.8  # standard Adafactor second-moment schedule
+    gf = g.astype(jnp.float32)
+    g2 = gf * gf + cfg.eps2
+    if p.ndim >= 2:
+        vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+        vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+        denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), cfg.eps2)
+        vhat = (vr / denom)[..., None] * vc[..., None, :]
+        u = gf / jnp.sqrt(vhat + cfg.eps2)
+        new_s = {"vr": vr, "vc": vc}
+    else:
+        v = beta2 * s["v"] + (1 - beta2) * g2
+        u = gf / jnp.sqrt(v + cfg.eps2)
+        new_s = {"v": v}
+    rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+    u = u / jnp.maximum(1.0, rms)  # Adafactor update clipping (RMS <= 1)
+    if p.ndim >= 2:
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+    return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_s
+
+
+# ---------------------------------------------------------------------------
+# Optimizer facade
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    cfg: OptConfig
+    _leaf_init: Callable
+    _leaf: Callable
+
+    def init(self, params):
+        gl, treedef = jax.tree.flatten(params)
+        return treedef.unflatten([self._leaf_init(p) for p in gl])
+
+    def update(self, grads, state, params, step):
+        """Returns (new_params, new_state)."""
+        if self.cfg.grad_clip > 0:
+            grads, _ = clip_by_global_norm(grads, self.cfg.grad_clip)
+        gl, treedef = jax.tree.flatten(grads)
+        pl = treedef.flatten_up_to(params)
+        sl = treedef.flatten_up_to(state)
+        out = [self._leaf(self.cfg, g, s, p, step) for g, s, p in zip(gl, sl, pl)]
+        return treedef.unflatten([o[0] for o in out]), treedef.unflatten(
+            [o[1] for o in out]
+        )
+
+    def abstract_state(self, abstract_params):
+        """ShapeDtypeStruct state tree (dry-run, no allocation)."""
+        sds = lambda sh: jax.ShapeDtypeStruct(sh, jnp.float32)
+
+        def conv(p):
+            if self._leaf is _adamw_leaf:
+                return {"m": sds(p.shape), "v": sds(p.shape)}
+            if len(p.shape) >= 2:
+                return {"vr": sds(p.shape[:-1]), "vc": sds(p.shape[:-2] + p.shape[-1:])}
+            return {"v": sds(p.shape)}
+
+        gl, treedef = jax.tree.flatten(abstract_params)
+        return treedef.unflatten([conv(p) for p in gl])
+
+    def state_pspecs(self, param_pspecs):
+        """Optimizer state inherits parameter specs; factored stats drop the
+        factored dim's mesh axis."""
+
+        def conv(spec):
+            if self._leaf is _adamw_leaf:
+                return {"m": spec, "v": spec}
+            if len(spec) >= 2:
+                return {
+                    "vr": type(spec)(*spec[:-1]),
+                    "vc": type(spec)(*(tuple(spec[:-2]) + (spec[-1],))),
+                }
+            return {"v": spec}
+
+        gl, treedef = jax.tree.flatten(
+            param_pspecs, is_leaf=lambda s: not isinstance(s, dict)
+        )
+        return treedef.unflatten([conv(s) for s in gl])
+
+
+def make_optimizer(cfg: OptConfig) -> Optimizer:
+    if cfg.name == "adamw":
+        return Optimizer(cfg, _adamw_leaf_init, _adamw_leaf)
+    if cfg.name == "adafactor":
+        return Optimizer(cfg, _adafactor_leaf_init, _adafactor_leaf)
+    raise ValueError(cfg.name)
+
+
+def for_arch(arch_cfg, **overrides) -> Optimizer:
+    return make_optimizer(OptConfig(name=arch_cfg.optimizer, **overrides))

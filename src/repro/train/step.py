@@ -1,0 +1,71 @@
+"""Train step factory: value_and_grad + microbatch accumulation + optimizer.
+
+`make_train_step(cfg, opt)` returns a pure function
+
+    (params, opt_state, batch, step) -> (params, opt_state, metrics)
+
+suitable for `jax.jit` with in/out shardings. Gradient accumulation splits
+the global batch into `cfg.microbatch` sequential microbatches (lax.scan),
+accumulating in `cfg.grad_accum_dtype` — bf16 for the 400B MoEs where fp32
+accumulators would not fit (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.train.optim import Optimizer, global_norm
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def f(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return {k: f(v) for k, v in batch.items()}
+
+
+def make_train_step(cfg, opt: Optimizer, *, impl: str = "masked",
+                    use_kernel: bool = False):
+    accum_dtype = jnp.dtype(cfg.grad_accum_dtype)
+
+    def loss_fn(params, mb):
+        return M.forward_loss(params, cfg, mb, impl=impl, use_kernel=use_kernel)
+
+    def train_step(params, opt_state, batch, step):
+        if cfg.microbatch > 1:
+            mbs = _split_microbatches(batch, cfg.microbatch)
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb
+                )
+                gacc = jax.tree.map(
+                    lambda a, g: a + g.astype(accum_dtype), gacc, grads
+                )
+                return (gacc, lacc + loss), aux
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params
+            )
+            (grads, loss_sum), auxs = jax.lax.scan(body, (g0, jnp.float32(0.0)), mbs)
+            grads = jax.tree.map(lambda g: g / cfg.microbatch, grads)
+            loss = loss_sum / cfg.microbatch
+            aux = jax.tree.map(lambda a: a.mean(), auxs)
+        else:
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+
+        gnorm = global_norm(grads)
+        params, opt_state = opt.update(grads, opt_state, params, step)
+        metrics = dict(aux, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step

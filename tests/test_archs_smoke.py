@@ -1,0 +1,130 @@
+"""Per-architecture smoke tests (deliverable f): reduced variant of each
+assigned family runs one train step + one serving step on CPU, asserting
+output shapes and no NaNs; prefill->decode agrees with the full forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.models.layers import logits_last
+from repro.models.params import count_params
+from repro.train.optim import OptConfig, make_optimizer
+from repro.train.step import make_train_step
+
+ALL_ARCHS = configs.ASSIGNED + ["gemma2-9b-sw"]
+
+
+@pytest.fixture(scope="module")
+def arch_state():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = configs.get(name).reduced()
+            params = M.init_model(cfg, jax.random.PRNGKey(0))
+            cache[name] = (cfg, params)
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_full_config_matches_assignment(name):
+    """The registered full config carries the exact assigned dimensions."""
+    cfg = configs.get(name)
+    assigned = {
+        "rwkv6-1.6b": (24, 2048, 7168, 65536),
+        "whisper-base": (6, 512, 2048, 51865),
+        "arctic-480b": (35, 7168, 4864, 32000),
+        "llama-3.2-vision-90b": (100, 8192, 28672, 128256),
+        "qwen2-7b": (28, 3584, 18944, 152064),
+        "llama4-maverick-400b-a17b": (48, 5120, 8192, 202048),
+        "gemma-7b": (28, 3072, 24576, 256000),
+        "zamba2-2.7b": (54, 2560, 10240, 32000),
+        "phi3-medium-14b": (40, 5120, 17920, 100352),
+        "gemma2-9b": (42, 3584, 14336, 256000),
+        "gemma2-9b-sw": (42, 3584, 14336, 256000),
+    }[name]
+    assert (cfg.num_layers, cfg.d_model, cfg.d_ff, cfg.vocab_size) == assigned
+    assert cfg.citation
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_train_step(arch_state, name):
+    cfg, params = arch_state(name)
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+    opt = make_optimizer(OptConfig(name=cfg.optimizer, warmup_steps=1))
+    step = make_train_step(cfg, opt)
+    batch = {k: jnp.asarray(v)
+             for k, v in M.real_batch(cfg, "train", 2, 64,
+                                      jax.random.PRNGKey(1)).items()}
+    opt_state = opt.init(params)
+    new_params, new_opt, metrics = jax.jit(step)(
+        params, opt_state, batch, jnp.int32(0))
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"])) and float(metrics["grad_norm"]) > 0
+    # params actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        params, new_params)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_prefill_decode_consistency(arch_state, name):
+    cfg, params = arch_state(name)
+    b, s = 2, 64
+    key = jax.random.PRNGKey(2)
+    full = M.real_batch(cfg, "prefill", b, s + 1, key)
+    pre = dict(full)
+    pre["tokens"] = full["tokens"][:, :s]
+    cache, logits_p = M.prefill(params, cfg, pre, cache_len=128)
+    assert np.all(np.isfinite(np.asarray(logits_p, np.float32)))
+    cache2, dec_logits = M.decode_step(
+        params, cfg, cache, full["tokens"][:, s], jnp.int32(s))
+    assert dec_logits.shape == (b, cfg.vocab_size)
+
+    h, _, _ = M.forward_hidden(params, cfg, full, train=False)
+    ref = logits_last(h[:, -1], M.unembed_table(params, cfg), cfg.final_softcap)
+    err = float(jnp.max(jnp.abs(dec_logits - ref)))
+    rel = err / (float(jnp.max(jnp.abs(ref))) + 1e-9)
+    assert rel < 0.02, (name, rel)
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_multi_step_decode_no_nans(arch_state, name):
+    cfg, params = arch_state(name)
+    b, s = 2, 16
+    batch = M.real_batch(cfg, "prefill", b, s, jax.random.PRNGKey(3))
+    cache, logits = M.prefill(params, cfg, batch, cache_len=64)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for i in range(4):
+        cache, logits = M.decode_step(params, cfg, cache, tok, jnp.int32(s + i))
+        assert np.all(np.isfinite(np.asarray(logits, np.float32))), (name, i)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+def test_param_counts_full_configs():
+    """Full-config parameter counts are in the advertised ballpark."""
+    import math
+
+    expected = {  # (low, high) bounds in billions
+        "qwen2-7b": (6, 9), "gemma-7b": (7, 10), "phi3-medium-14b": (12, 16),
+        "gemma2-9b": (8, 11), "rwkv6-1.6b": (1.2, 2.2),
+        "zamba2-2.7b": (2, 4), "whisper-base": (0.04, 0.12),
+        "arctic-480b": (420, 520), "llama4-maverick-400b-a17b": (350, 450),
+        "llama-3.2-vision-90b": (75, 105),
+    }
+    for name, (lo, hi) in expected.items():
+        cfg = configs.get(name)
+        n = 0
+        for leaf in jax.tree.leaves(M.build_schema(cfg)):
+            n += math.prod(leaf.shape)
+        nb = n / 1e9
+        assert lo <= nb <= hi, (name, nb)

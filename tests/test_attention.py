@@ -1,0 +1,102 @@
+"""flash_attention / decode_attention vs naive softmax reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import decode_attention, flash_attention
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, cap=0.0, q_offset=0):
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) * hd**-0.5
+    if cap > 0:
+        s = cap * jnp.tanh(s / cap)
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, hd).astype(q.dtype)
+
+
+def _qkv(rng, b, sq, skv, hq, hkv, hd):
+    q = jnp.asarray(rng.standard_normal((b, sq, hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, skv, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, skv, hkv, hd)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("impl", ["masked", "triangular"])
+@pytest.mark.parametrize("case", [
+    dict(b=2, sq=128, skv=128, hq=4, hkv=2, hd=32, causal=True, window=0, cap=0.0),
+    dict(b=1, sq=96, skv=96, hq=4, hkv=4, hd=64, causal=True, window=32, cap=0.0),
+    dict(b=2, sq=64, skv=64, hq=8, hkv=1, hd=32, causal=True, window=0, cap=50.0),
+    dict(b=1, sq=64, skv=160, hq=2, hkv=2, hd=32, causal=False, window=0, cap=0.0),
+])
+def test_flash_matches_naive(impl, case):
+    rng = np.random.default_rng(0)
+    q, k, v = _qkv(rng, case["b"], case["sq"], case["skv"], case["hq"],
+                   case["hkv"], case["hd"])
+    out = flash_attention(q, k, v, causal=case["causal"], window=case["window"],
+                          cap=case["cap"], q_block=32, kv_block=32, impl=impl)
+    ref = naive_attention(q, k, v, causal=case["causal"],
+                          window=case["window"], cap=case["cap"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_triangular_equals_masked():
+    """The triangular (block-skipping) strategy is numerically identical to
+    the masked baseline — it only skips provably-masked tiles."""
+    rng = np.random.default_rng(1)
+    q, k, v = _qkv(rng, 2, 256, 256, 4, 2, 32)
+    for window in (0, 64):
+        a = flash_attention(q, k, v, causal=True, window=window,
+                            q_block=64, kv_block=64, impl="masked")
+        b = flash_attention(q, k, v, causal=True, window=window,
+                            q_block=64, kv_block=64, impl="triangular")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-6, rtol=2e-6)
+
+
+def test_decode_matches_full_last_row():
+    """decode_attention(q_last) == last row of full flash attention."""
+    rng = np.random.default_rng(2)
+    b, s, hq, hkv, hd = 2, 64, 4, 2, 32
+    q, k, v = _qkv(rng, b, s, s, hq, hkv, hd)
+    full = flash_attention(q, k, v, causal=True)
+    dec = decode_attention(q[:, -1], k, v, length=s, pos=s - 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full[:, -1]),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_ring_cache_equals_linear_cache():
+    """Ring-buffer decode over a window-sized cache == linear decode with
+    window masking over the full cache."""
+    rng = np.random.default_rng(3)
+    b, hq, hkv, hd, w = 1, 2, 2, 16, 32
+    total = 48  # positions seen so far
+    kf = jnp.asarray(rng.standard_normal((b, total, hkv, hd)), jnp.float32)
+    vf = jnp.asarray(rng.standard_normal((b, total, hkv, hd)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((b, hq, hd)), jnp.float32)
+    # build the ring cache: slot p % w holds position p for recent positions
+    kr = jnp.zeros((b, w, hkv, hd))
+    vr = jnp.zeros((b, w, hkv, hd))
+    for p in range(total):
+        kr = kr.at[:, p % w].set(kf[:, p])
+        vr = vr.at[:, p % w].set(vf[:, p])
+    pos = total - 1
+    ref = decode_attention(q, kf, vf, length=total, pos=pos, window=w)
+    out = decode_attention(q, kr, vr, length=total, pos=pos, window=w, ring=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)

@@ -1,0 +1,119 @@
+"""Chital marketplace: Eq. (6), credit economics, matching, simulation."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.chital.credit import CreditLedger
+from repro.chital.matching import MATCHERS, BuyerRequest, Matcher, Seller
+from repro.chital.simulator import SimSpec
+from repro.chital.simulator import run as simulate
+from repro.chital.verification import Submission, evaluate, verification_probability
+
+
+def test_eq6_exact_values():
+    """Paper Eq. 6 spot checks."""
+    # c1+c2=0, equal perplexities: 1 - (1/3)(0.5 + 2*1) = 1/6
+    assert abs(verification_probability(0, 0, 100, 100) - (1 - 2.5 / 3)) < 1e-12
+    # very high credit, equal perplexity: -> 1 - (1/3)(1+2) = 0
+    assert verification_probability(50, 50, 100, 100) < 1e-6
+    # terrible mismatch, very low credit -> -> 1 - (1/3)(0 + ~0) ~ 1
+    assert verification_probability(-50, -50, 1.0, 1e9) > 0.99
+
+
+@given(
+    c1=st.floats(-10, 10), c2=st.floats(-10, 10),
+    p1=st.floats(1.0, 1e4), p2=st.floats(1.0, 1e4),
+)
+@settings(max_examples=200, deadline=None)
+def test_eq6_bounds_and_monotonicity(c1, c2, p1, p2):
+    pv = verification_probability(c1, c2, p1, p2)
+    assert -1e-9 <= pv <= 1.0
+    # more credit => never more verification
+    assert verification_probability(c1 + 1, c2, p1, p2) <= pv + 1e-12
+    # tighter perplexity match => never more verification
+    lo, hi = min(p1, p2), max(p1, p2)
+    assert verification_probability(c1, c2, hi, hi) <= pv + 1e-12
+
+
+def test_credit_zero_sum():
+    ledger = CreditLedger()
+    for i in range(5):
+        ledger.register(i)
+    rng = np.random.default_rng(0)
+    for _ in range(100):
+        a, b = rng.choice(5, 2, replace=False)
+        ledger.transfer(int(a), int(b), 1.0)
+    total = sum(ledger.get(i) for i in range(5))
+    assert abs(total) < 1e-9  # zero-sum invariant (paper §2.5.2)
+
+
+def test_evaluate_selects_lower_perplexity():
+    rng = np.random.default_rng(0)
+    s1 = Submission(seller_id=1, perplexity=120.0, tokens_processed=1000,
+                    iterations=50, converged_perplexity=120.0)
+    s2 = Submission(seller_id=2, perplexity=100.0, tokens_processed=1000,
+                    iterations=50, converged_perplexity=100.0)
+    res = evaluate(s1, s2, 5.0, 5.0, rng)
+    assert res.winner.seller_id == 2 and res.loser.seller_id == 1
+    assert not res.rejected
+
+
+def test_evaluate_rejects_invalid_and_unconverged():
+    rng = np.random.default_rng(0)
+    bad = Submission(seller_id=1, perplexity=50.0, tokens_processed=10,
+                     iterations=5, valid=False)
+    ok = Submission(seller_id=2, perplexity=100.0, tokens_processed=10,
+                    iterations=5, converged_perplexity=100.0)
+    res = evaluate(bad, ok, 0.0, 0.0, rng)
+    assert res.winner.seller_id == 2  # invalid one never wins
+
+    # phony low perplexity caught by forced verification (credit very low)
+    phony = Submission(seller_id=3, perplexity=10.0, tokens_processed=10,
+                       iterations=5, converged_perplexity=500.0)
+    res2 = evaluate(phony, ok, -50.0, -50.0, rng)
+    assert res2.verified and res2.rejected
+
+
+def test_matcher_requires_two_available_sellers():
+    m = MATCHERS["greedy_gain"]()
+    buyer = BuyerRequest(buyer_id=0, task_tokens=1000, arrival=0.0, local_speed=100.0)
+    sellers = [Seller(seller_id=0, speed=500.0)]
+    assert m.match(buyer, sellers, now=0.0, rng=np.random.default_rng(0)) is None
+    sellers.append(Seller(seller_id=1, speed=800.0))
+    match = m.match(buyer, sellers, now=0.0, rng=np.random.default_rng(0))
+    assert match is not None and len(match.sellers) == 2
+
+
+def test_matcher_respects_busy_period():
+    m = MATCHERS["greedy_gain"]()
+    buyer = BuyerRequest(buyer_id=0, task_tokens=1000, arrival=0.0, local_speed=100.0)
+    sellers = [Seller(seller_id=0, speed=500.0, busy_until=10.0),
+               Seller(seller_id=1, speed=800.0),
+               Seller(seller_id=2, speed=100.0)]
+    match = m.match(buyer, sellers, now=5.0, rng=np.random.default_rng(0))
+    ids = {s.seller_id for s in match.sellers}
+    assert 0 not in ids  # busy seller excluded until its period elapses
+
+
+def test_simulation_reproduces_paper_claims():
+    """§2.5.2: credit flows bad->good; verification concentrates on bad
+    users; §2.5.4: users save time by a large margin."""
+    res = simulate(SimSpec(num_sellers=40, malicious_frac=0.25,
+                           num_queries=300, seed=1))
+    assert res.honest_credit > 0 > res.malicious_credit
+    assert (res.malicious_involved_verification_rate
+            > res.honest_verification_rate)
+    assert res.mean_time_saved > 0
+    assert res.mean_speedup > 2.0  # "a large margin"
+    assert res.matched_rate > 0.5
+
+
+def test_simulation_all_honest_keeps_credit_near_zero():
+    res = simulate(SimSpec(num_sellers=30, malicious_frac=0.0,
+                           num_queries=200, seed=2))
+    assert abs(res.honest_credit) < 1.5  # zero-sum, no drain direction
+    assert res.rejected_rate < 0.05

@@ -1,0 +1,49 @@
+"""Data pipelines: bigram LM stream + synthetic review corpus."""
+
+import numpy as np
+
+from repro.data import reviews
+from repro.data.lm import BigramStream, LMSpec, batches_for
+from repro import configs
+
+
+def test_bigram_stream_deterministic_and_learnable():
+    spec = LMSpec(vocab_size=100, seq_len=32, global_batch=4, seed=7)
+    a = BigramStream(spec).next_batch()
+    b = BigramStream(spec).next_batch()
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"][:, :-1], a["tokens"][:, 1:])
+    # every successor is one of the `branching` planted choices
+    s = BigramStream(spec)
+    succ = s.successors
+    batch = s.next_batch()
+    for row in range(4):
+        for t in range(31):
+            assert batch["tokens"][row, t + 1] in succ[batch["tokens"][row, t]]
+
+
+def test_batches_for_adds_modality_stubs():
+    vlm = configs.get("llama-3.2-vision-90b").reduced()
+    batch = next(iter(batches_for(vlm, seq_len=16, global_batch=2)))
+    assert batch["patches"].shape == (2, vlm.num_frontend_tokens, vlm.d_model)
+    audio = configs.get("whisper-base").reduced()
+    batch = next(iter(batches_for(audio, seq_len=16, global_batch=2)))
+    assert batch["frames"].shape == (2, audio.encoder_tokens, audio.d_model)
+
+
+def test_review_generator_structure():
+    spec = reviews.SyntheticSpec(num_reviews=100, vocab_size=200, seed=1)
+    corp = reviews.generate(spec)
+    assert len(corp.reviews) == 100
+    rts = np.array([r.rating for r in corp.reviews])
+    assert rts.min() >= 1 and rts.max() <= 5
+    assert corp.relevant.mean() > 0.7  # ~10% irrelevant
+    for r in corp.reviews[:10]:
+        assert r.tokens.max() < 200
+        assert r.helpful >= 0 and r.unhelpful >= 0
+        assert 0 <= r.writing_quality <= 1
+    # negative reviews hit the planted negative topics more
+    neg_topics = np.arange(6, 8)  # last 25% of 8 topics
+    neg_mass = corp.doc_topic[rts <= 2, :][:, neg_topics].sum(1).mean()
+    pos_mass = corp.doc_topic[rts >= 4, :][:, neg_topics].sum(1).mean()
+    assert neg_mass > pos_mass

@@ -1,0 +1,63 @@
+"""Client/server distributed Gibbs (core/distributed.py, §Perf C)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import distributed, gibbs, perplexity
+from repro.core.types import Corpus, LDAConfig, LDAState, build_counts, init_state
+
+
+def _setup(n=4096, v=120, d=40, k=12, seed=0):
+    rng = np.random.default_rng(seed)
+    cfg = LDAConfig(num_topics=k, vocab_size=v, num_docs=d)
+    corpus = Corpus(
+        docs=jnp.asarray(rng.integers(0, d, n), jnp.int32),
+        words=jnp.asarray(rng.integers(0, v, n), jnp.int32),
+        weights=jnp.ones(n, jnp.float32),
+    )
+    return cfg, corpus
+
+
+@pytest.mark.parametrize("sync_every", [1, 3])
+def test_counts_stay_consistent(sync_every):
+    cfg, corpus = _setup()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sweep = distributed.make_client_server_sweep(
+        cfg, mesh, block=1024, sync_every=sync_every)
+    st = init_state(cfg, corpus, jax.random.PRNGKey(0))
+    z, n_dt, n_wt = st.z, st.n_dt, st.n_wt
+    with mesh:
+        f = jax.jit(sweep)
+        for i in range(4):
+            z, n_dt, n_wt, n_t = f(corpus.docs, corpus.words, z,
+                                   corpus.weights, n_dt, n_wt,
+                                   jax.random.PRNGKey(i))
+    rebuilt = build_counts(cfg, corpus, z)
+    np.testing.assert_allclose(np.asarray(n_wt), np.asarray(rebuilt.n_wt),
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(n_dt), np.asarray(rebuilt.n_dt),
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(n_t), np.asarray(rebuilt.n_t),
+                               atol=1e-2)
+
+
+def test_matches_plain_sweep_quality():
+    cfg, corpus = _setup()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sweep = distributed.make_client_server_sweep(
+        cfg, mesh, block=1024, sync_every=2)
+    st = init_state(cfg, corpus, jax.random.PRNGKey(0))
+    z, n_dt, n_wt = st.z, st.n_dt, st.n_wt
+    with mesh:
+        f = jax.jit(sweep)
+        for i in range(10):  # 20 effective sweeps
+            z, n_dt, n_wt, n_t = f(corpus.docs, corpus.words, z,
+                                   corpus.weights, n_dt, n_wt,
+                                   jax.random.PRNGKey(i))
+    p_cs = perplexity.perplexity(
+        cfg, LDAState(z=z, n_dt=n_dt, n_wt=n_wt, n_t=n_t), corpus)
+    st_ref = gibbs.run(cfg, corpus, jax.random.PRNGKey(1), 20)
+    p_ref = perplexity.perplexity(cfg, st_ref, corpus)
+    assert abs(np.log(p_cs) - np.log(p_ref)) < 0.2, (p_cs, p_ref)

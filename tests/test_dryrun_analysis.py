@@ -1,0 +1,63 @@
+"""Dry-run analysis machinery: HLO collective parsing + roofline math.
+
+The dry-run itself needs 512 forced host devices (its own process); here we
+test the pure pieces it is built from.
+"""
+
+import numpy as np
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def _collective_bytes(hlo):
+    # import inside: repro.launch.dryrun sets XLA_FLAGS at import time; the
+    # parsing helpers live on the module but only touch strings.
+    from repro.launch.dryrun import collective_bytes
+
+    return collective_bytes(hlo)
+
+
+FAKE_HLO = """
+  %ag = f32[128,256]{1,0} all-gather(%x), replica_groups=...
+  %ar = bf16[64,64]{1,0} all-reduce(%y), to_apply=%add
+  %rs = f32[32]{0} reduce-scatter(%z), dimensions={0}
+  %aa = s32[16,8]{1,0} all-to-all(%w), dimensions={0}
+  %cp = f32[4]{0} collective-permute(%v), source_target_pairs=...
+  %not_a_collective = f32[9999]{0} add(%a, %b)
+"""
+
+
+def test_collective_parsing_counts_and_bytes():
+    out = _collective_bytes(FAKE_HLO)
+    assert out["bytes"]["all-gather"] == 128 * 256 * 4
+    assert out["bytes"]["all-reduce"] == 64 * 64 * 2  # bf16
+    assert out["bytes"]["reduce-scatter"] == 32 * 4
+    assert out["bytes"]["all-to-all"] == 16 * 8 * 4
+    assert out["bytes"]["collective-permute"] == 4 * 4
+    assert out["counts"]["all-gather"] == 1
+    assert out["total_bytes"] == sum(out["bytes"].values())
+    # the non-collective op contributes nothing
+    assert out["total_bytes"] < 9999 * 4 + 200000
+
+
+def test_hardware_constants_are_v5e():
+    assert PEAK_FLOPS_BF16 == 197e12
+    assert HBM_BW == 819e9
+    assert ICI_BW == 50e9
+
+
+def test_model_flops_moe_active():
+    import sys, os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.roofline import active_param_count, param_count
+    from repro import configs
+
+    dense = configs.get("qwen2-7b")
+    assert active_param_count(dense) == param_count(dense)
+    moe = configs.get("arctic-480b")
+    # top-2 of 128 experts: active far below total
+    assert active_param_count(moe) < 0.2 * param_count(moe)
+    ll4 = configs.get("llama4-maverick-400b-a17b")
+    # ~17B active of ~395B total
+    assert 10e9 < active_param_count(ll4) < 30e9
+    assert 350e9 < param_count(ll4) < 450e9

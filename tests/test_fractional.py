@@ -1,0 +1,62 @@
+"""Property tests for the paper's §4.3 fixed-point approximate weighting."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import fractional
+
+
+@given(
+    w_bits=st.integers(min_value=0, max_value=16),
+    x=st.floats(min_value=0.0, max_value=1e4, allow_nan=False),
+)
+@settings(max_examples=200, deadline=None)
+def test_roundtrip_precision_bound(w_bits, x):
+    """|from_fixed(to_fixed(x)) - x| <= 1/2^(w_bits+2)  (paper's precision)."""
+    back = float(fractional.from_fixed(fractional.to_fixed(x, w_bits), w_bits))
+    # round-to-nearest: half the representable step 1/2^(w_bits+1)
+    assert abs(back - x) <= fractional.flush_threshold(w_bits) + 1e-6 * x
+
+
+@given(
+    w_bits=st.integers(min_value=0, max_value=16),
+    x=st.floats(min_value=0.0, max_value=1.0, allow_nan=False),
+)
+@settings(max_examples=200, deadline=None)
+def test_sparsity_flush(w_bits, x):
+    """Weights below 1/2^(w_bits+2) are stored as exactly 0 (paper §4.3)."""
+    stored = int(fractional.to_fixed(x, w_bits))
+    if x < fractional.flush_threshold(w_bits):
+        assert stored == 0
+    if x > fractional.flush_threshold(w_bits) * (1 + 1e-6):
+        assert stored >= 1
+
+
+def test_scale_convention():
+    """Increment of 1 maps to 2^(w_bits+1) stored units (paper text)."""
+    for w_bits in (0, 4, 8):
+        assert int(fractional.to_fixed(1.0, w_bits)) == 2 ** (w_bits + 1)
+
+
+@given(
+    w_bits=st.integers(min_value=2, max_value=12),
+    weights=st.lists(
+        st.floats(min_value=0.0, max_value=10.0, allow_nan=False),
+        min_size=1,
+        max_size=50,
+    ),
+)
+@settings(max_examples=100, deadline=None)
+def test_scatter_accumulation_error_is_bounded(w_bits, weights):
+    """Accumulated fixed-point scatter-adds stay within n·step of the
+    real-valued sum (rounding errors add at worst linearly)."""
+    counts = jnp.zeros(4, jnp.int32)
+    idx = jnp.zeros(len(weights), jnp.int32)
+    counts = fractional.fixed_increment(
+        counts, idx, jnp.asarray(weights, jnp.float32), w_bits
+    )
+    real = float(np.sum(weights, dtype=np.float64))
+    back = float(fractional.from_fixed(counts, w_bits)[0])
+    assert abs(back - real) <= len(weights) * fractional.precision(w_bits)

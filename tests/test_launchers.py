@@ -1,0 +1,44 @@
+"""CLI launchers (launch/train.py, launch/serve.py) end-to-end on reduced
+configs — the driver layer the dry-run does not cover."""
+
+import json
+import os
+
+import numpy as np
+
+from repro.launch import serve as serve_cli
+from repro.launch import train as train_cli
+
+
+def test_train_cli_runs_and_logs(tmp_path):
+    metrics = os.path.join(tmp_path, "metrics.json")
+    ckpt = os.path.join(tmp_path, "ckpt.npz")
+    history = train_cli.main([
+        "--arch", "qwen2-7b", "--steps", "8", "--seq-len", "32",
+        "--global-batch", "4", "--ckpt", ckpt, "--metrics-out", metrics,
+    ])
+    assert len(history) >= 2
+    assert all(np.isfinite(h["loss"]) for h in history)
+    assert os.path.exists(ckpt)
+    with open(metrics) as f:
+        logged = json.load(f)
+    assert logged[-1]["step"] == 7
+
+
+def test_train_cli_ssm_arch(tmp_path):
+    history = train_cli.main([
+        "--arch", "rwkv6-1.6b", "--steps", "4", "--seq-len", "32",
+        "--global-batch", "2",
+    ])
+    assert np.isfinite(history[-1]["loss"])
+
+
+def test_serve_cli_runs():
+    results = serve_cli.main([
+        "--arch", "gemma2-9b", "--requests", "3", "--prompt-len", "16",
+        "--max-new", "4", "--cache-len", "64", "--max-batch", "2",
+    ])
+    assert len(results) == 3
+    for r in results:
+        assert r.tokens.shape == (4,)
+        assert r.tokens.min() >= 0

@@ -1,0 +1,106 @@
+"""Training subsystem: optimizers, grad accumulation, checkpointing, loop."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.train import checkpoint as ckpt
+from repro.train.loop import train
+from repro.train.optim import OptConfig, make_optimizer, schedule
+from repro.train.step import make_train_step
+
+
+def test_schedule_shape():
+    cfg = OptConfig(lr=1e-3, warmup_steps=10, decay_steps=100, min_lr_frac=0.1)
+    lrs = [float(schedule(cfg, jnp.int32(s))) for s in (0, 5, 10, 50, 100, 200)]
+    assert abs(lrs[0] - 1e-4) < 1e-9  # (0+1)/10 of peak: first step is real
+    assert abs(lrs[2] - 1e-3) < 1e-9  # peak at end of warmup
+    assert lrs[3] < lrs[2]
+    assert abs(lrs[4] - 1e-4) < 1e-9  # floor
+    assert lrs[5] == lrs[4]
+
+
+@pytest.mark.parametrize("opt_name", ["adamw", "adafactor"])
+def test_optimizer_reduces_loss(opt_name):
+    cfg = configs.get("qwen2-7b").reduced()
+    import dataclasses
+
+    cfg = dataclasses.replace(cfg, optimizer=opt_name)
+    params, hist = train(cfg, num_steps=40, seq_len=64, global_batch=8,
+                         opt_cfg=OptConfig(name=opt_name, lr=1e-3,
+                                           warmup_steps=5, decay_steps=40),
+                         log_every=39)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.05
+
+
+def test_microbatch_equals_full_batch_grads():
+    """Gradient accumulation (fp32 accum) matches the single-shot step."""
+    import dataclasses
+
+    cfg = configs.get("phi3-medium-14b").reduced()
+    cfg1 = dataclasses.replace(cfg, microbatch=1)
+    cfg4 = dataclasses.replace(cfg, microbatch=4, grad_accum_dtype="float32")
+    params = M.init_model(cfg1, jax.random.PRNGKey(0))
+    opt = make_optimizer(OptConfig(lr=1e-2, warmup_steps=0, decay_steps=10))
+    batch = {k: jnp.asarray(v) for k, v in
+             M.real_batch(cfg1, "train", 8, 32, jax.random.PRNGKey(1)).items()}
+    s1 = make_train_step(cfg1, opt)
+    s4 = make_train_step(cfg4, opt)
+    p1, _, m1 = jax.jit(s1)(params, opt.init(params), batch, jnp.int32(0))
+    p4, _, m4 = jax.jit(s4)(params, opt.init(params), batch, jnp.int32(0))
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 5e-3
+    # Adam's elementwise normalization amplifies accumulation-order rounding
+    # where v ~ 0, so compare by fraction-of-elements rather than allclose.
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        af = np.asarray(a, np.float32)
+        bf = np.asarray(b, np.float32)
+        bad = np.abs(af - bf) > (5e-3 + 5e-2 * np.abs(bf))
+        assert bad.mean() < 0.01, bad.mean()
+
+
+def test_adafactor_state_is_factored():
+    cfg = configs.get("arctic-480b").reduced()
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    opt = make_optimizer(OptConfig(name="adafactor"))
+    st = opt.init(params)
+    p_leaves = jax.tree.leaves(params)
+    s_bytes = sum(np.prod(x.shape) * 4 for x in jax.tree.leaves(st))
+    p_bytes = sum(np.prod(x.shape) * x.dtype.itemsize for x in p_leaves)
+    assert s_bytes < 0.6 * p_bytes  # factored: far below AdamW's 4x
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = configs.get("gemma2-9b").reduced()
+    params = M.init_model(cfg, jax.random.PRNGKey(0))
+    opt = make_optimizer(OptConfig())
+    opt_state = opt.init(params)
+    path = os.path.join(tmp_path, "ckpt.npz")
+    ckpt.save(path, params, opt_state, step=17)
+    p2, o2, step = ckpt.restore(path, params, opt_state)
+    assert step == 17
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # structure mismatch is caught
+    import dataclasses
+
+    cfg_other = configs.get("qwen2-7b").reduced()
+    other = M.init_model(cfg_other, jax.random.PRNGKey(1))
+    with pytest.raises((KeyError, ValueError)):
+        ckpt.restore(path, other)
+
+
+def test_loss_drops_on_learnable_bigram_data():
+    """End-to-end: a small dense model learns the planted bigram process
+    (entropy log(4) ≈ 1.39 << random ≈ 6.2)."""
+    cfg = configs.get("phi3-medium-14b").reduced()
+    params, hist = train(cfg, num_steps=120, seq_len=64, global_batch=16,
+                         opt_cfg=OptConfig(lr=3e-3, warmup_steps=10,
+                                           decay_steps=120),
+                         log_every=20)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 1.0, hist

@@ -1,0 +1,153 @@
+"""Model lifecycle: views (§4.2), core-set reduction (§3.3), updating (§3.2),
+quality model (§4.3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import coreset, gibbs, perplexity, quality, rlda, update, views
+from repro.core.types import Corpus, LDAConfig, build_counts
+from repro.data import reviews
+
+
+def _fitted(num_reviews=150, vocab=150, k=8, sweeps=25, seed=0):
+    corp = reviews.generate(
+        reviews.SyntheticSpec(num_reviews=num_reviews, vocab_size=vocab,
+                              num_topics=6, seed=seed))
+    prep = rlda.prepare(corp.reviews, base_vocab=vocab, num_topics=k)
+    st = gibbs.run(prep.cfg, prep.corpus, jax.random.PRNGKey(seed), sweeps)
+    return corp, prep, st
+
+
+def test_model_view_valid_and_roundtrips():
+    corp, prep, st = _fitted()
+    core, scores = coreset.select_core_set(prep.cfg, st)
+    view = views.build_view(prep, st, [int(t) for t in core])
+    assert view.validate()
+    v2 = views.ModelView.from_json(view.to_json())
+    assert v2.validate()
+    assert len(v2.topics) == len(view.topics)
+    for t in v2.topics:
+        assert 1.0 <= t.expected_rating <= 5.0
+        assert len(t.top_words) <= 10
+        assert all(0 <= w < prep.base_vocab for w in t.top_words)
+
+
+def test_view_expected_rating_tracks_tiers():
+    """Hand-crafted counts: a topic whose words carry tier 5 must show a
+    higher expected rating than a tier-1 topic."""
+    corp, prep, st = _fitted()
+    n_wt = np.zeros((prep.cfg.vocab_size, 2), np.float32)
+    # topic 0: mass on tier-1-augmented words; topic 1: tier-5 words
+    for w in range(20):
+        n_wt[rlda.augment_word(np.asarray([w]), np.asarray([0]))[0], 0] = 10.0
+        n_wt[rlda.augment_word(np.asarray([w]), np.asarray([4]))[0], 1] = 10.0
+    import dataclasses
+
+    from repro.core.types import LDAState
+
+    cfg2 = dataclasses.replace(prep.cfg, num_topics=2, w_bits=None)
+    prep2 = dataclasses.replace(prep, cfg=cfg2)
+    st2 = LDAState(
+        z=jnp.zeros(1, jnp.int32),
+        n_dt=jnp.ones((prep.cfg.num_docs, 2), jnp.float32),
+        n_wt=jnp.asarray(n_wt),
+        n_t=jnp.asarray(n_wt.sum(0)),
+    )
+    view = views.build_view(prep2, st2, [0, 1])
+    assert view.topics[0].expected_rating < 1.5
+    assert view.topics[1].expected_rating > 4.5
+
+
+def test_coreset_selection_properties():
+    corp, prep, st = _fitted()
+    core, scores = coreset.select_core_set(
+        prep.cfg, st, mass_coverage=0.9, max_topics=6)
+    assert 1 <= len(core) <= 6
+    mass = coreset.topic_mass(prep.cfg, st)
+    # selected topics carry more mass than discarded ones on average
+    sel = np.asarray(mass)[np.asarray(core)]
+    assert sel.mean() >= float(np.asarray(mass).mean()) * 0.9
+
+
+def test_informativeness_prunes_background_topic():
+    """A topic whose word distribution equals the background unigram has
+    near-zero informativeness."""
+    cfg = LDAConfig(num_topics=3, vocab_size=60, num_docs=5)
+    rng = np.random.default_rng(0)
+    bg = rng.dirichlet(np.ones(60) * 5)
+    n_wt = np.stack([bg * 1000,  # background clone
+                     np.eye(60)[0] * 1000,  # peaked
+                     np.eye(60)[1] * 800 + np.eye(60)[2] * 200], axis=1)
+    from repro.core.types import LDAState
+
+    st = LDAState(z=jnp.zeros(1, jnp.int32), n_dt=jnp.ones((5, 3)),
+                  n_wt=jnp.asarray(n_wt, jnp.float32),
+                  n_t=jnp.asarray(n_wt.sum(0), jnp.float32))
+    info = np.asarray(coreset.topic_informativeness(cfg, st))
+    assert info[0] < info[1] and info[0] < info[2]
+
+
+def test_incremental_update_improves_on_new_docs():
+    corp, prep, st = _fitted(num_reviews=120)
+    model = update.UpdatableModel(cfg=prep.cfg, corpus=prep.corpus, state=st)
+
+    # new reviews from the same generator
+    corp2 = reviews.generate(
+        reviews.SyntheticSpec(num_reviews=30, vocab_size=150, num_topics=6,
+                              seed=99))
+    prep2 = rlda.prepare(corp2.reviews, base_vocab=150,
+                         num_topics=prep.cfg.num_topics)
+    model2 = update.add_documents(
+        model,
+        np.asarray(prep2.corpus.docs) + prep.cfg.num_docs,
+        np.asarray(prep2.corpus.words),
+        np.asarray(prep2.corpus.weights),
+        jax.random.PRNGKey(5),
+    )
+    assert model2.cfg.num_docs >= prep.cfg.num_docs + 30
+    # counts stay consistent with assignments
+    rebuilt = build_counts(model2.cfg, model2.corpus, model2.state.z)
+    if model2.cfg.w_bits is None:
+        np.testing.assert_allclose(model2.state.n_t, rebuilt.n_t, atol=1e-3)
+    p = perplexity.perplexity(model2.cfg, model2.state, model2.corpus)
+    assert np.isfinite(p) and p < model2.cfg.vocab_size
+
+
+def test_full_recompute_cycle():
+    """After `full_recompute_every` incremental updates, add_documents runs
+    a full recompute and resets the counter (paper §3.2)."""
+    corp, prep, st = _fitted(num_reviews=80)
+    model = update.UpdatableModel(cfg=prep.cfg, corpus=prep.corpus, state=st,
+                                  full_recompute_every=2)
+    counters = []
+    for i in range(3):
+        corp_i = reviews.generate(
+            reviews.SyntheticSpec(num_reviews=10, vocab_size=150,
+                                  num_topics=6, seed=200 + i))
+        prep_i = rlda.prepare(corp_i.reviews, base_vocab=150,
+                              num_topics=prep.cfg.num_topics)
+        model = update.add_documents(
+            model,
+            np.asarray(prep_i.corpus.docs) + model.cfg.num_docs,
+            np.asarray(prep_i.corpus.words),
+            np.asarray(prep_i.corpus.weights),
+            jax.random.PRNGKey(i),
+        )
+        counters.append(model.updates_since_recompute)
+    assert 0 in counters  # the periodic full recompute fired and reset
+    p = perplexity.perplexity(model.cfg, model.state, model.corpus)
+    assert np.isfinite(p)
+
+
+def test_quality_model_separates_labels():
+    rng = np.random.default_rng(0)
+    n = 400
+    relevant = rng.random(n) > 0.4
+    nu = np.where(relevant, rng.normal(0.7, 0.1, n), rng.normal(0.3, 0.1, n))
+    h = np.where(relevant, rng.poisson(8, n), rng.poisson(2, n))
+    u = np.where(relevant, rng.poisson(2, n), rng.poisson(6, n))
+    m = quality.train(nu, u, h, relevant.astype(np.float64))
+    pred = np.asarray(quality.predict(m, nu, u, h)) > 0.5
+    acc = (pred == relevant).mean()
+    assert acc > 0.85, acc
