@@ -17,9 +17,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import gibbs, perplexity, rlda
+from repro.api import get_backend
+from repro.core import perplexity, rlda
 from repro.core.types import Corpus, LDAConfig, LDAState
 from repro.data import reviews
+
+# All fits go through the repro.api sampler registry (jnp oracle backend).
+_SAMPLER = get_backend("jnp")
 
 
 def _lda_fit(corp, vocab, k, sweeps, seed=0):
@@ -30,7 +34,7 @@ def _lda_fit(corp, vocab, k, sweeps, seed=0):
                     words=jnp.asarray(words, jnp.int32),
                     weights=jnp.ones(len(docs), jnp.float32))
     cfg = LDAConfig(num_topics=k, vocab_size=vocab, num_docs=len(corp.reviews))
-    st = gibbs.run(cfg, corpus, jax.random.PRNGKey(seed), sweeps)
+    st = _SAMPLER.run(cfg, corpus, jax.random.PRNGKey(seed), sweeps)
     return cfg, corpus, st
 
 
@@ -126,7 +130,7 @@ def run(quick: bool = False) -> dict:
                             **kwargs)
         if name == "rlda-nopsi":
             prep.corpus.weights = jnp.ones_like(prep.corpus.weights)
-        st = gibbs.run(prep.cfg, prep.corpus, jax.random.PRNGKey(1), sweeps)
+        st = _SAMPLER.run(prep.cfg, prep.corpus, jax.random.PRNGKey(1), sweeps)
 
         # (a) marginal perplexity (tier-summed counts) — the "structure tax"
         n_wt = _marginalize(prep, st, vocab, k)
@@ -152,7 +156,7 @@ def run(quick: bool = False) -> dict:
     # cleanest rendering of the paper's use case (user filters by stars).
     train_r, test_r = reviews.train_test_split(corp, test_frac=0.25, seed=1)
     prep_t = rlda.prepare(train_r, base_vocab=vocab, num_topics=k, w_bits=8)
-    st_t = gibbs.run(prep_t.cfg, prep_t.corpus, jax.random.PRNGKey(2), sweeps)
+    st_t = _SAMPLER.run(prep_t.cfg, prep_t.corpus, jax.random.PRNGKey(2), sweeps)
     lda_cfg_t, lda_corpus_t, lda_st_t = _lda_fit(
         type("C", (), {"reviews": train_r})(), vocab, k, sweeps, seed=2)
 

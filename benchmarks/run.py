@@ -25,6 +25,8 @@ BENCHES = [
      "benchmarks.marketplace_bench"),
     ("coreset", "core-set topic reduction (paper §3.3)",
      "benchmarks.coreset_bench"),
+    ("views", "build_view serving path (strip_rating hoist note)",
+     "benchmarks.views_bench"),
     ("roofline", "roofline terms from the dry-run (deliverable g)",
      "benchmarks.roofline"),
 ]

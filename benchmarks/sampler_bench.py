@@ -3,9 +3,11 @@
 Compares, on the paper's case-study scale (~487 reviews):
   dense-seq    MALLET-style O(k) sequential Gibbs (the paper's baseline)
   sparse-seq   SparseLDA O(k_d+k_w) sequential (the paper's phone sampler)
-  parallel     blocked parallel Gumbel-max sweep (TPU system path, jnp)
-  kernel       the same sweep through the Pallas lda_gibbs kernel (interpret
-               mode on CPU — correctness path, not a CPU speed claim)
+  parallel     blocked parallel Gumbel-max sweep (`repro.api` backend "jnp")
+  kernel       the same sweep through the Pallas lda_gibbs kernel (backend
+               "pallas"; interpret mode on CPU — correctness path, not a
+               CPU speed claim)
+  distributed  client/server sharded sweep (backend "distributed")
   alias-mh     AliasLDA stale-proposal + MH sweep (TPU adaptation)
 
 Paper anchor: "time until initial results ... approximately 5 seconds, with
@@ -19,10 +21,10 @@ import time
 import jax
 import numpy as np
 
-from repro.core import alias, gibbs, perplexity, rlda
+from repro.api import get_backend
+from repro.core import alias, perplexity, rlda
 from repro.core.types import init_state
 from repro.data import reviews
-from repro.kernels.lda_gibbs import ops as kops
 
 
 def run(quick: bool = False) -> dict:
@@ -72,21 +74,16 @@ def run(quick: bool = False) -> dict:
         st = build_counts(cfg, corpus, jnp.asarray(s.z, jnp.int32))
         record(name, dt, state=st)
 
-    # parallel sweep (system path)
-    st = gibbs.run(cfg, corpus, jax.random.PRNGKey(1), 1)  # compile
-    t0 = time.time()
-    st = gibbs.run(cfg, corpus, jax.random.PRNGKey(2), sweeps)
-    jax.block_until_ready(st.n_t)
-    record("parallel", time.time() - t0, state=st)
-
-    # kernel path (interpret mode on CPU)
-    st_k = kops.sweep(cfg, init_state(cfg, corpus, jax.random.PRNGKey(3)),
-                      corpus, jax.random.PRNGKey(4))  # compile
-    t0 = time.time()
-    for i in range(sweeps):
-        st_k = kops.sweep(cfg, st_k, corpus, jax.random.PRNGKey(10 + i))
-    jax.block_until_ready(st_k.n_t)
-    record("kernel", time.time() - t0, state=st_k)
+    # system-path backends via the repro.api registry
+    for bench_name, backend in (("parallel", "jnp"), ("kernel", "pallas"),
+                                ("distributed", "distributed")):
+        sampler = get_backend(backend)
+        st_b = sampler.run(cfg, corpus, jax.random.PRNGKey(1), 1)  # compile
+        t0 = time.time()
+        st_b = sampler.run(cfg, corpus, jax.random.PRNGKey(2), sweeps,
+                           state=st_b)
+        jax.block_until_ready(st_b.n_t)
+        record(bench_name, time.time() - t0, state=st_b)
 
     # alias + MH
     st_a = init_state(cfg, corpus, jax.random.PRNGKey(5))
@@ -99,7 +96,8 @@ def run(quick: bool = False) -> dict:
 
     # paper latency anchor: wall time to an initial (30-sweep) model
     t0 = time.time()
-    gibbs.run(cfg, corpus, jax.random.PRNGKey(7), 30 if not quick else 5)
+    get_backend("jnp").run(cfg, corpus, jax.random.PRNGKey(7),
+                           30 if not quick else 5)
     out["initial_model_s"] = round(time.time() - t0, 2)
     print(f"  initial-model wall time: {out['initial_model_s']}s "
           f"(paper: ~5s on a 2015 phone)")

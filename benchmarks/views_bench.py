@@ -1,0 +1,95 @@
+"""`views.build_view` micro-benchmark — the serving-path hot loop.
+
+Assertion note (PR 1): the per-topic loop used to recompute
+``strip_rating(np.arange(cfg.vocab_size))`` — a full augmented-vocabulary
+divmod — once *per topic*, although the augmented-id -> (base word, tier)
+map is invariant across topics. The map is now hoisted above the loop, so
+the marginal cost of an extra topic is one bincount + argsort, not a fresh
+O(V·5) strip.
+
+Two records:
+  * `strip_calls_for_k_topics` — a structural regression guard: the bench
+    counts actual `strip_rating` invocations during a K-topic build (must
+    be exactly 1; re-nesting it in the loop makes this K);
+  * `marginal_cost_ratio` — informational timing (K-topic build vs K×
+    single-topic builds; well under 1.0 means the fixed per-call cost,
+    decode + strip, amortizes across topics).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.api import VedaliaService
+from repro.core import views
+from repro.data import reviews
+
+
+def _time(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(quick: bool = False) -> dict:
+    base_vocab = 1000 if quick else 4000  # augmented vocab is 5x this
+    k = 16
+    corp = reviews.generate(reviews.SyntheticSpec(
+        num_reviews=80 if quick else 200, vocab_size=base_vocab,
+        num_topics=8, mean_tokens=40, seed=0))
+    svc = VedaliaService(backend="jnp", num_sweeps=3 if quick else 10)
+    handle = svc.fit(corp.reviews, num_topics=k, base_vocab=base_vocab,
+                     w_bits=8, seed=0)
+    jax.block_until_ready(handle.state.n_wt)
+
+    reps = 3 if quick else 5
+    t_one = _time(lambda: views.build_view(handle.prep, handle.state, [0]),
+                  reps)
+    t_all = _time(
+        lambda: views.build_view(handle.prep, handle.state, list(range(k))),
+        reps)
+    ratio = t_all / max(k * t_one, 1e-12)
+
+    # Structural guard: count real strip_rating calls in a K-topic build.
+    # (Timing alone cannot detect a re-nested strip — the fixed decode cost
+    # dominates it at this scale.)
+    calls = 0
+    orig = views.strip_rating
+
+    def counting_strip(aug):
+        nonlocal calls
+        calls += 1
+        return orig(aug)
+
+    views.strip_rating = counting_strip
+    try:
+        views.build_view(handle.prep, handle.state, list(range(k)))
+    finally:
+        views.strip_rating = orig
+
+    out = {
+        "base_vocab": base_vocab,
+        "num_topics": k,
+        "build_one_topic_ms": round(t_one * 1e3, 3),
+        "build_all_topics_ms": round(t_all * 1e3, 3),
+        "marginal_cost_ratio": round(ratio, 3),
+        "strip_calls_for_k_topics": calls,
+        "strip_hoisted": calls == 1,
+    }
+    assert calls == 1, (
+        f"strip_rating ran {calls}x for a {k}-topic build_view — the "
+        f"topic-invariant hoist regressed")
+    print(f"  build_view: 1 topic {out['build_one_topic_ms']:.2f}ms, "
+          f"{k} topics {out['build_all_topics_ms']:.2f}ms "
+          f"(ratio vs {k}x single: {ratio:.2f}); strip_rating called "
+          f"{calls}x (hoist intact)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

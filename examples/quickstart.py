@@ -1,15 +1,15 @@
 """Quickstart: fit RLDA on a synthetic Amazon-like product and print the
-topic views — the paper's §5 case study, end to end on CPU.
+topic views — the paper's §5 case study, end to end on CPU, driven through
+the `repro.api.VedaliaService` facade.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
 import time
 
-import jax
 import numpy as np
 
-from repro.core import coreset, gibbs, perplexity, rlda, views
+from repro.api import VedaliaService
 from repro.data import reviews
 
 
@@ -21,40 +21,36 @@ def main():
     print(f"product with {len(corp.reviews)} reviews, "
           f"mean rating {np.mean([r.rating for r in corp.reviews]):.2f}")
 
-    # RLDA: rating-augmented vocab + quality/tier weights (paper §3.1, §4.3).
-    prep = rlda.prepare(corp.reviews, base_vocab=spec.vocab_size,
-                        num_topics=12, w_bits=8)
+    # RLDA through the service: rating-augmented vocab + quality/tier
+    # weights (paper §3.1, §4.3), fixed-point counts, pluggable backend.
+    svc = VedaliaService(backend="jnp")
     t0 = time.time()
-    state = gibbs.run(prep.cfg, prep.corpus, jax.random.PRNGKey(0),
-                      num_sweeps=30)
+    handle = svc.fit(corp.reviews, num_topics=12, base_vocab=spec.vocab_size,
+                     w_bits=8, num_sweeps=30, seed=0)
     initial_s = time.time() - t0
-    state = gibbs.run(prep.cfg, prep.corpus, jax.random.PRNGKey(1),
-                      num_sweeps=70, state=state)
+    svc.refine(handle, num_sweeps=70, seed=1)
     total_s = time.time() - t0
-    p = perplexity.perplexity(prep.cfg, state, prep.corpus)
+    p = svc.perplexity(handle)
     print(f"initial model in {initial_s:.1f}s, final in {total_s:.1f}s "
           f"(paper: ~5s initial / ~15s final on a 2015 phone), "
           f"perplexity {p:.1f}")
 
-    # Variable topic count via core-set reduction (§3.3).
-    core, scores = coreset.select_core_set(prep.cfg, state,
-                                           mass_coverage=0.9, max_topics=6)
-    print(f"core set: {len(core)} of {prep.cfg.num_topics} topics")
-
-    # Model views (§4.2) — the payload a phone receives.
-    view = views.build_view(prep, state, [int(t) for t in core], top_n=8)
-    assert view.validate()
-    for t in view.topics:
+    # Model views over the core topic set (§3.3, §4.2) — the payload a
+    # phone receives, validated by the Chital stage.
+    resp = svc.view(handle, top_n=8, mass_coverage=0.9, max_topics=6)
+    assert resp.valid
+    print(f"core set: {len(resp.topic_ids)} of {handle.cfg.num_topics} topics")
+    for t in resp.view.topics:
         stars = "*" * int(round(t.expected_rating))
         print(f"\n topic {t.topic_id}: weight {t.probability:.2f} "
               f"rating {t.expected_rating:.2f} {stars:5s} "
               f"helpful {t.expected_helpful:.1f} vs {t.expected_unhelpful:.1f}")
         print(f"   keywords: {t.top_words}")
-        top = views.top_reviews_for_topic(prep, state, t.topic_id, n=3)
-        print(f"   top reviews (ViewPager order): {top}")
+        top = svc.top_reviews(handle, t.topic_id, n=3)
+        print(f"   top reviews (ViewPager order): {top.review_ids}")
 
-    print(f"\nview payload: {len(view.to_json())} bytes "
-          f"(vs full model {state.n_wt.size * 4} bytes)")
+    print(f"\nview payload: {resp.payload_bytes} bytes "
+          f"(vs full model {handle.state.n_wt.size * 4} bytes)")
 
 
 if __name__ == "__main__":

@@ -2,42 +2,42 @@
 
   1. reviews stream in for several products;
   2. the Chital marketplace offloads RLDA fitting to seller devices (here:
-     worker processes running the real TPU-path Gibbs sampler);
+     worker processes running the real TPU-path Gibbs sampler through a
+     pluggable `repro.api` backend);
   3. winners are selected by perplexity and verified per Eq. (6);
   4. new reviews trigger incremental model updates (§3.2) with periodic
      full recomputes;
   5. buyers receive bandwidth-frugal model views (§4.2).
 
-  PYTHONPATH=src python examples/serve_reviews.py
+All model lifecycle goes through the `repro.api.VedaliaService` facade; the
+sampler backend is selectable:
+
+  PYTHONPATH=src python examples/serve_reviews.py [--backend jnp|pallas|distributed]
 """
 
+import argparse
 import time
 
 import jax
 import numpy as np
 
-from repro.chital.lottery import Lottery
+from repro.api import VedaliaService
 from repro.chital.marketplace import Marketplace
 from repro.chital.matching import MATCHERS, BuyerRequest, Seller
 from repro.chital.verification import Submission
-from repro.core import coreset, gibbs, perplexity, rlda, update, views
+from repro.core import perplexity, rlda
 from repro.data import reviews
 
-NUM_PRODUCTS = 3
-REVIEWS_PER_PRODUCT = 200
-NEW_REVIEWS_PER_UPDATE = 40
 
-
-def make_runtime(products):
+def make_runtime(products, sampler, max_sweeps=40):
     """Sellers actually fit the model (the real sampler, not the analytic
     simulator): a slow seller runs fewer sweeps -> worse perplexity."""
 
     def runtime(seller: Seller, buyer: BuyerRequest) -> Submission:
         prep = products[buyer.buyer_id]["prep"]
-        sweeps = max(5, min(40, int(seller.speed / 400)))
-        t0 = time.time()
-        st = gibbs.run(prep.cfg, prep.corpus,
-                       jax.random.PRNGKey(seller.seller_id), sweeps)
+        sweeps = max(5, min(max_sweeps, int(seller.speed / 400)))
+        st = sampler.run(prep.cfg, prep.corpus,
+                         jax.random.PRNGKey(seller.seller_id), sweeps)
         p = float(perplexity.perplexity(prep.cfg, st, prep.corpus))
         products[buyer.buyer_id].setdefault("submissions", {})[
             seller.seller_id] = st
@@ -53,24 +53,49 @@ def make_runtime(products):
     return runtime
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="jnp",
+                    choices=("jnp", "pallas", "distributed"))
+    ap.add_argument("--products", type=int, default=3)
+    ap.add_argument("--reviews", type=int, default=200)
+    ap.add_argument("--new-reviews", type=int, default=40)
+    ap.add_argument("--vocab", type=int, default=400)
+    ap.add_argument("--topics", type=int, default=8)
+    ap.add_argument("--quick", action="store_true",
+                    help="small corpora / few sweeps (CI profile)")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.products, args.reviews, args.new_reviews = 2, 60, 15
+        args.vocab, args.topics = 150, 6
+
+    svc = VedaliaService(backend=args.backend,
+                         update_sweeps=2 if args.quick else 3)
+    sampler = svc.sampler()
+    print(f"[serve_reviews] backend={args.backend} "
+          f"({jax.device_count()} device(s))")
+
     rng = np.random.default_rng(0)
     products = {}
-    for pid in range(NUM_PRODUCTS):
+    for pid in range(args.products):
         corp = reviews.generate(reviews.SyntheticSpec(
-            num_reviews=REVIEWS_PER_PRODUCT, vocab_size=400, num_topics=6,
-            seed=pid))
-        prep = rlda.prepare(corp.reviews, base_vocab=400, num_topics=8)
+            num_reviews=args.reviews, vocab_size=args.vocab,
+            num_topics=args.topics - 2, seed=pid))
+        prep = rlda.prepare(corp.reviews, base_vocab=args.vocab,
+                            num_topics=args.topics)
         products[pid] = {"corp": corp, "prep": prep}
 
     # Marketplace with real seller devices (heterogeneous speeds).
     sellers = [Seller(seller_id=i, speed=float(rng.uniform(3000, 16000)))
                for i in range(8)]
     mp = Marketplace(matcher=MATCHERS["greedy_gain"](),
-                     runtime=make_runtime(products), sellers=sellers)
+                     runtime=make_runtime(
+                         products, sampler,
+                         max_sweeps=10 if args.quick else 40),
+                     sellers=sellers)
 
     print("=== phase 1: initial model fits via marketplace offload ===")
-    for pid in range(NUM_PRODUCTS):
+    for pid in range(args.products):
         t0 = time.time()
         rec = mp.submit(BuyerRequest(
             buyer_id=pid,
@@ -78,63 +103,42 @@ def main():
             arrival=float(pid),
             local_speed=1500.0),
             now=float(pid))
-        st = rec.result.winner.payload
-        products[pid]["model"] = update.UpdatableModel(
-            cfg=products[pid]["prep"].cfg,
-            corpus=products[pid]["prep"].corpus, state=st)
-        print(f" product {pid}: winner seller "
-              f"{rec.result.winner.seller_id} "
-              f"perplexity {rec.result.winner.perplexity:.1f} "
+        winner = rec.result.winner
+        # The winner's payload becomes a served model handle.
+        products[pid]["handle"] = svc.adopt(
+            products[pid]["prep"], winner.payload, sweeps_run=winner.iterations)
+        print(f" product {pid}: winner seller {winner.seller_id} "
+              f"perplexity {winner.perplexity:.1f} "
               f"verified={rec.result.verified} "
               f"({time.time()-t0:.1f}s wall, {rec.tickets_awarded} tickets)")
 
     print("\n=== phase 2: new reviews -> incremental updates (§3.2) ===")
-    pid = 0
-    model = products[pid]["model"]
-    helpful = [products[pid]["prep"].helpful]
-    unhelpful = [products[pid]["prep"].unhelpful]
+    handle = products[0]["handle"]
     for round_i in range(3):
         corp_new = reviews.generate(reviews.SyntheticSpec(
-            num_reviews=NEW_REVIEWS_PER_UPDATE, vocab_size=400, num_topics=6,
-            seed=100 + round_i))
-        prep_new = rlda.prepare(corp_new.reviews, base_vocab=400,
-                                num_topics=model.cfg.num_topics)
-        helpful.append(prep_new.helpful)
-        unhelpful.append(prep_new.unhelpful)
+            num_reviews=args.new_reviews, vocab_size=args.vocab,
+            num_topics=args.topics - 2, seed=100 + round_i))
         t0 = time.time()
-        model = update.add_documents(
-            model,
-            np.asarray(prep_new.corpus.docs) + model.cfg.num_docs,
-            np.asarray(prep_new.corpus.words),
-            np.asarray(prep_new.corpus.weights),
-            jax.random.PRNGKey(round_i))
-        p = perplexity.perplexity(model.cfg, model.state, model.corpus)
-        kind = ("full recompute" if model.updates_since_recompute == 0
-                else "incremental")
-        print(f" update {round_i}: +{NEW_REVIEWS_PER_UPDATE} reviews, "
-              f"{kind}, perplexity {p:.1f} ({time.time()-t0:.1f}s)")
+        resp = svc.update(handle, corp_new.reviews, seed=round_i)
+        print(f" update {round_i}: +{resp.num_new_reviews} reviews, "
+              f"{resp.kind}, perplexity {resp.perplexity:.1f} "
+              f"({time.time()-t0:.1f}s)")
 
     print("\n=== phase 3: serve the model view (§4.2) ===")
-    prep = products[pid]["prep"]
-    import dataclasses
-
-    # Per-review metadata grows with the corpus (the updated doc set).
-    prep = dataclasses.replace(
-        prep, cfg=model.cfg,
-        helpful=np.concatenate(helpful),
-        unhelpful=np.concatenate(unhelpful))
-    core, _ = coreset.select_core_set(model.cfg, model.state, max_topics=5)
-    view = views.build_view(prep, model.state, [int(t) for t in core])
-    assert view.validate(), "Chital validation stage failed"
-    payload = view.to_json()
-    print(f" streamed view: {len(view.topics)} topics, {len(payload)} bytes")
-    for t in view.topics[:3]:
+    resp = svc.view(handle, max_topics=5)
+    assert resp.valid, "Chital validation stage failed"
+    print(f" streamed view: {len(resp.view.topics)} topics, "
+          f"{resp.payload_bytes} bytes")
+    for t in resp.view.topics[:3]:
         print(f"  topic {t.topic_id}: w={t.probability:.2f} "
               f"rating={t.expected_rating:.1f} words={t.top_words[:6]}")
+    top = svc.top_reviews(handle, resp.topic_ids[0], n=3)
+    print(f"  top reviews for topic {top.topic_id}: {top.review_ids}")
     print("\nmarketplace after run:",
           f"{len(mp.history)} tasks,",
           f"verification rate {mp.verification_rate():.1%},",
           f"mean time saved {mp.mean_time_saved():.2f}s")
+    return svc, products
 
 
 if __name__ == "__main__":

@@ -1,0 +1,55 @@
+"""`repro.api` — the public service layer for topic-model inference.
+
+    from repro.api import VedaliaService
+
+    svc = VedaliaService(backend="pallas")
+    handle = svc.fit(reviews, num_topics=12)
+    svc.update(handle, new_reviews)
+    resp = svc.view(handle, top_n=8)     # resp.payload streams to a device
+
+Submodules:
+  codec     shared fixed-point (w_bits) state encode/decode
+  backends  `Sampler` protocol + jnp / pallas / distributed registry
+  service   `VedaliaService` facade + typed request/response dataclasses
+
+Exports resolve lazily (PEP 562) so that low-level modules (`core.gibbs`,
+`kernels.lda_gibbs.ops`) can import `repro.api.codec` without dragging the
+full service layer — the codec sits below them, the facade above.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    # backends
+    "Sampler": "repro.api.backends",
+    "available_backends": "repro.api.backends",
+    "get_backend": "repro.api.backends",
+    "register_backend": "repro.api.backends",
+    # service
+    "FitRequest": "repro.api.service",
+    "ModelHandle": "repro.api.service",
+    "TopReviewsResponse": "repro.api.service",
+    "UpdateResponse": "repro.api.service",
+    "VedaliaService": "repro.api.service",
+    "ViewResponse": "repro.api.service",
+    # codec (module-level re-export)
+    "codec": "repro.api.codec",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    target = _EXPORTS.get(name)
+    if target is None:
+        raise AttributeError(f"module 'repro.api' has no attribute {name!r}")
+    module = importlib.import_module(target)
+    value = module if target.endswith("." + name) else getattr(module, name)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return __all__

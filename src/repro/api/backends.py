@@ -1,0 +1,181 @@
+"""Pluggable Gibbs-sampler backends behind one `Sampler` protocol.
+
+The engine/backend split of Li et al. (2014): every consumer of topic-model
+inference (the `VedaliaService` facade, incremental `update`, benchmarks,
+the marketplace runtime) talks to a `Sampler`, and the concrete sweep
+implementation is chosen by name:
+
+  jnp          pure-jnp blocked parallel sweep (`core.gibbs`) — the oracle
+  pallas       fused Pallas TPU kernel (`kernels.lda_gibbs`), interpret
+               mode on CPU — the production TPU path
+  distributed  client/server sharded sweep (`core.distributed`) — the
+               paper's "model cache and updating server" on a pod
+
+All backends speak *stored* `LDAState` at the boundary (fixed point when
+``cfg.w_bits`` is set — see `repro.api.codec`) so they are interchangeable
+mid-run: a model fit by one backend can be updated by another.
+
+Register additional backends with :func:`register_backend`; a backend only
+needs `sweep(cfg, state, corpus, key)` — `run` has a default loop. The
+`repro.core.gibbs` *module* itself satisfies the protocol, which is what
+keeps the legacy call sites working unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Protocol, runtime_checkable
+
+import jax
+
+from repro.core.codec import decode_state, encode_state
+from repro.core.types import Corpus, LDAConfig, LDAState, init_state
+
+
+@runtime_checkable
+class Sampler(Protocol):
+    """One full-corpus collapsed-Gibbs sweep engine."""
+
+    def sweep(
+        self, cfg: LDAConfig, state: LDAState, corpus: Corpus, key: jax.Array
+    ) -> LDAState: ...
+
+    def run(
+        self,
+        cfg: LDAConfig,
+        corpus: Corpus,
+        key: jax.Array,
+        num_sweeps: int,
+        state: Optional[LDAState] = None,
+    ) -> LDAState: ...
+
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: make `get_backend(name)` construct this sampler."""
+
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def get_backend(name: str = "jnp", **opts) -> Sampler:
+    """Construct a registered sampler backend by name."""
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown sampler backend {name!r}; "
+            f"available: {available_backends()}"
+        ) from None
+    return cls(**opts)
+
+
+class _BaseSampler:
+    """Default multi-sweep driver with the same key discipline as
+    `gibbs.run` (split for init, then one subkey per sweep) so backends
+    are drop-in comparable from identical seeds."""
+
+    def run(self, cfg, corpus, key, num_sweeps, state=None):
+        if state is None:
+            key, sub = jax.random.split(key)
+            state = encode_state(cfg, init_state(cfg, corpus, sub))
+        for k in jax.random.split(key, num_sweeps):
+            state = self.sweep(cfg, state, corpus, k)
+        return state
+
+    def __repr__(self):
+        return f"{type(self).__name__}(name={getattr(self, 'name', '?')!r})"
+
+
+@register_backend("jnp")
+class JnpSampler(_BaseSampler):
+    """The pure-jnp blocked parallel sweep — system path and parity oracle."""
+
+    def __init__(self, block: int = 4096):
+        self.block = block
+
+    def sweep(self, cfg, state, corpus, key):
+        from repro.core import gibbs
+
+        return gibbs.sweep(cfg, state, corpus, key, self.block)
+
+    def run(self, cfg, corpus, key, num_sweeps, state=None):
+        # gibbs.run scans the sweeps under one jit — keep that fast path.
+        from repro.core import gibbs
+
+        return gibbs.run(cfg, corpus, key, num_sweeps, state=state,
+                         block=self.block)
+
+
+@register_backend("pallas")
+class PallasSampler(_BaseSampler):
+    """The fused Pallas score+Gumbel-max kernel (interpret mode on CPU)."""
+
+    def __init__(self, token_block: int = 256):
+        self.token_block = token_block
+
+    def sweep(self, cfg, state, corpus, key):
+        from repro.kernels.lda_gibbs import ops as kops
+
+        return kops.sweep(cfg, state, corpus, key, self.token_block)
+
+
+@register_backend("distributed")
+class DistributedSampler(_BaseSampler):
+    """Client/server sharded sweep (`core.distributed`) on a device mesh.
+
+    Counts cross the boundary in stored units and are decoded/encoded here;
+    the sharded sweep itself is real-valued float32. With a single data
+    shard (the CPU default) global doc ids are shard-local ids; on a
+    multi-shard mesh the caller contract of `core.distributed` applies
+    (documents contiguously partitioned, shard-local ids).
+    """
+
+    # Compiled shard_map programs are cached per LDAConfig; streaming
+    # updates grow num_docs every round, so bound the cache (LRU) or a
+    # long-lived service leaks one compiled program per update.
+    _MAX_CACHED_PROGRAMS = 8
+
+    def __init__(self, mesh=None, block: int = 4096, sync_every: int = 1):
+        self.mesh = mesh
+        self.block = block
+        self.sync_every = sync_every
+        self._cache: dict[LDAConfig, object] = {}
+
+    def _mesh(self):
+        if self.mesh is None:
+            self.mesh = jax.make_mesh((jax.device_count(),), ("data",))
+        return self.mesh
+
+    def _sweep_fn(self, cfg: LDAConfig):
+        fn = self._cache.pop(cfg, None)
+        if fn is None:
+            from repro.core import distributed
+
+            raw = distributed.make_client_server_sweep(
+                cfg, self._mesh(), block=self.block,
+                sync_every=self.sync_every)
+            fn = jax.jit(raw)
+        self._cache[cfg] = fn  # re-insert: dict order is recency order
+        while len(self._cache) > self._MAX_CACHED_PROGRAMS:
+            self._cache.pop(next(iter(self._cache)))
+        return fn
+
+    def sweep(self, cfg, state, corpus, key):
+        real = decode_state(cfg, state)
+        fn = self._sweep_fn(cfg)
+        with self._mesh():
+            z, n_dt, n_wt, n_t = fn(
+                corpus.docs, corpus.words, real.z, corpus.weights,
+                real.n_dt, real.n_wt, key)
+        return encode_state(
+            cfg, LDAState(z=z, n_dt=n_dt, n_wt=n_wt, n_t=n_t))

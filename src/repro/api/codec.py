@@ -1,0 +1,16 @@
+"""Public re-export of the shared fixed-point state codec.
+
+The implementation lives in `repro.core.codec` (it sits *below* the
+samplers in the layering: core modules may depend on it without reaching
+up into the `repro.api` facade). This module is the stable public name.
+"""
+
+from repro.core.codec import (  # noqa: F401
+    decode_array,
+    decode_array_np,
+    decode_counts,
+    decode_counts_np,
+    decode_state,
+    encode_state,
+    rebuild_state,
+)

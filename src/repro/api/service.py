@@ -1,0 +1,339 @@
+"""`VedaliaService` — the one public facade over the paper's system (§3-§5).
+
+Reviews stream in, RLDA models are fit and incrementally updated, and
+bandwidth-frugal model views stream out. The service composes the pieces
+every consumer used to hand-wire —
+
+    rlda.prepare -> <sampler backend>.run -> update.add_documents
+                 -> coreset.select_core_set -> views.build_view
+
+— behind four verbs with typed request/response dataclasses:
+
+    fit(reviews)            -> ModelHandle
+    update(handle, reviews) -> UpdateResponse   (incremental, §3.2)
+    view(handle)            -> ViewResponse     (streamed payload, §4.2)
+    top_reviews(handle, t)  -> TopReviewsResponse (ViewPager order, §3.4)
+
+The sampler backend ("jnp" | "pallas" | "distributed", see
+`repro.api.backends`) is chosen per service or per call; a model fit by one
+backend can be refined or updated by another because all backends share the
+stored-state codec (`repro.api.codec`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.api.backends import Sampler, get_backend
+from repro.core import coreset, perplexity as perplexity_lib, rlda, update
+from repro.core import views as views_lib
+from repro.core.rlda import Review, RLDACorpus
+from repro.core.types import LDAState
+from repro.core.views import ModelView
+
+
+@dataclasses.dataclass(frozen=True)
+class FitRequest:
+    """A fit task (also the queue item of `serving.TopicEngine`)."""
+
+    uid: int
+    reviews: Sequence[Review]
+    num_topics: int = 12
+    base_vocab: Optional[int] = None  # None => inferred from the reviews
+    alpha: float = 0.1
+    beta: float = 0.01
+    w_bits: Optional[int] = 8
+    backend: Optional[str] = None  # None => the service default
+    num_sweeps: Optional[int] = None
+    top_n: int = 10  # used by TopicEngine's fit+view serving
+
+
+@dataclasses.dataclass
+class ModelHandle:
+    """A served topic model: prepared corpus metadata + live sampler state.
+
+    `prep` grows with every `update` (helpfulness/rating metadata must cover
+    the appended reviews so views stay computable).
+    """
+
+    handle_id: int
+    prep: RLDACorpus
+    model: update.UpdatableModel
+    backend: str
+    sweeps_run: int = 0
+
+    @property
+    def cfg(self):
+        return self.model.cfg
+
+    @property
+    def state(self) -> LDAState:
+        return self.model.state
+
+    @property
+    def num_reviews(self) -> int:
+        return self.model.cfg.num_docs
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateResponse:
+    handle_id: int
+    num_new_reviews: int
+    kind: str  # "incremental" | "full_recompute"
+    perplexity: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ViewResponse:
+    handle_id: int
+    view: ModelView
+    topic_ids: list[int]
+    payload: str  # the JSON actually streamed to a device
+    valid: bool  # Chital validation stage (§2.5.5)
+
+    @property
+    def payload_bytes(self) -> int:
+        return len(self.payload)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopReviewsResponse:
+    handle_id: int
+    topic_id: int
+    review_ids: list[int]
+
+
+def _infer_base_vocab(reviews: Sequence[Review]) -> int:
+    hi = 0
+    for r in reviews:
+        if len(r.tokens):
+            hi = max(hi, int(np.max(r.tokens)))
+    return hi + 1
+
+
+class VedaliaService:
+    """Fit / update / view topic models through pluggable sampler backends."""
+
+    def __init__(
+        self,
+        *,
+        backend: str = "jnp",
+        num_sweeps: int = 30,
+        update_sweeps: int = 3,
+        backend_opts: Optional[dict] = None,
+        seed: int = 0,
+    ):
+        self.default_backend = backend
+        self.num_sweeps = num_sweeps
+        self.update_sweeps = update_sweeps
+        self._backend_opts = dict(backend_opts or {})
+        self._samplers: dict[str, Sampler] = {}
+        self._seed = seed
+        self._op = 0
+        self.handles: dict[int, ModelHandle] = {}
+        self._next_id = 0
+
+    # -- internals ---------------------------------------------------------
+
+    def sampler(self, name: Optional[str] = None) -> Sampler:
+        """The (cached) sampler backend instance for `name`."""
+        name = name or self.default_backend
+        if name not in self._samplers:
+            self._samplers[name] = get_backend(
+                name, **self._backend_opts.get(name, {}))
+        return self._samplers[name]
+
+    def _key(self, seed: Optional[int] = None) -> jax.Array:
+        if seed is not None:
+            return jax.random.PRNGKey(seed)
+        self._op += 1
+        return jax.random.PRNGKey(self._seed * 1_000_003 + self._op)
+
+    def _register(self, handle: ModelHandle) -> ModelHandle:
+        self.handles[handle.handle_id] = handle
+        return handle
+
+    def _new_id(self) -> int:
+        hid = self._next_id
+        self._next_id += 1
+        return hid
+
+    # -- fit ---------------------------------------------------------------
+
+    def fit(
+        self,
+        reviews: Sequence[Review],
+        *,
+        num_topics: int = 12,
+        base_vocab: Optional[int] = None,
+        alpha: float = 0.1,
+        beta: float = 0.01,
+        w_bits: Optional[int] = 8,
+        backend: Optional[str] = None,
+        num_sweeps: Optional[int] = None,
+        seed: Optional[int] = None,
+    ) -> ModelHandle:
+        """Prepare raw reviews (§4.3 transformation) and fit from scratch."""
+        if not len(reviews):
+            raise ValueError("fit() needs at least one review")
+        if base_vocab is None:
+            base_vocab = _infer_base_vocab(reviews)
+        prep = rlda.prepare(
+            list(reviews), base_vocab=base_vocab, num_topics=num_topics,
+            alpha=alpha, beta=beta, w_bits=w_bits,
+            seed=seed if seed is not None else self._seed)
+        return self.fit_prepared(
+            prep, backend=backend, num_sweeps=num_sweeps, seed=seed)
+
+    def fit_prepared(
+        self,
+        prep: RLDACorpus,
+        *,
+        backend: Optional[str] = None,
+        num_sweeps: Optional[int] = None,
+        seed: Optional[int] = None,
+    ) -> ModelHandle:
+        """Fit an already-prepared RLDA corpus (custom weighting paths)."""
+        backend = backend or self.default_backend
+        sweeps = num_sweeps if num_sweeps is not None else self.num_sweeps
+        state = self.sampler(backend).run(
+            prep.cfg, prep.corpus, self._key(seed), sweeps)
+        model = update.UpdatableModel(
+            cfg=prep.cfg, corpus=prep.corpus, state=state)
+        return self._register(ModelHandle(
+            handle_id=self._new_id(), prep=prep, model=model,
+            backend=backend, sweeps_run=sweeps))
+
+    def adopt(
+        self,
+        prep: RLDACorpus,
+        state: LDAState,
+        *,
+        backend: Optional[str] = None,
+        sweeps_run: int = 0,
+    ) -> ModelHandle:
+        """Wrap an externally-fitted state (e.g. a Chital marketplace
+        winner's submission payload) into a served handle."""
+        model = update.UpdatableModel(
+            cfg=prep.cfg, corpus=prep.corpus, state=state)
+        return self._register(ModelHandle(
+            handle_id=self._new_id(), prep=prep, model=model,
+            backend=backend or self.default_backend, sweeps_run=sweeps_run))
+
+    def refine(
+        self,
+        handle: ModelHandle,
+        num_sweeps: int,
+        *,
+        backend: Optional[str] = None,
+        seed: Optional[int] = None,
+    ) -> ModelHandle:
+        """Continue sampling the handle's model (any backend, warm state)."""
+        backend = backend or handle.backend
+        handle.model.state = self.sampler(backend).run(
+            handle.cfg, handle.model.corpus, self._key(seed), num_sweeps,
+            state=handle.model.state)
+        handle.sweeps_run += num_sweeps
+        handle.backend = backend
+        return handle
+
+    # -- update (§3.2) -----------------------------------------------------
+
+    def update(
+        self,
+        handle: ModelHandle,
+        new_reviews: Sequence[Review],
+        *,
+        update_sweeps: Optional[int] = None,
+        seed: Optional[int] = None,
+    ) -> UpdateResponse:
+        """Add reviews to a served model: incremental resampling of the new
+        tokens, with the periodic full recompute of §3.2."""
+        if not len(new_reviews):
+            raise ValueError("update() needs at least one new review")
+        prep, cfg = handle.prep, handle.cfg
+        prep_new = rlda.prepare(
+            list(new_reviews), base_vocab=prep.base_vocab,
+            num_topics=cfg.num_topics, alpha=cfg.alpha, beta=cfg.beta,
+            w_bits=cfg.w_bits,
+            seed=seed if seed is not None else self._seed)
+
+        handle.model = update.add_documents(
+            handle.model,
+            np.asarray(prep_new.corpus.docs) + cfg.num_docs,
+            np.asarray(prep_new.corpus.words),
+            np.asarray(prep_new.corpus.weights),
+            self._key(seed),
+            update_sweeps=(update_sweeps if update_sweeps is not None
+                           else self.update_sweeps),
+            sampler=self.sampler(handle.backend),
+            # Explicit: token-free trailing reviews still count as docs.
+            num_docs=cfg.num_docs + len(new_reviews),
+        )
+        # Corpus and per-review metadata must cover the appended documents.
+        handle.prep = dataclasses.replace(
+            prep,
+            cfg=handle.model.cfg,
+            corpus=handle.model.corpus,
+            psi=np.concatenate([prep.psi, prep_new.psi]),
+            tiers=np.concatenate([prep.tiers, prep_new.tiers]),
+            tier_probs=np.concatenate([prep.tier_probs, prep_new.tier_probs]),
+            ratings=np.concatenate([prep.ratings, prep_new.ratings]),
+            helpful=np.concatenate([prep.helpful, prep_new.helpful]),
+            unhelpful=np.concatenate([prep.unhelpful, prep_new.unhelpful]),
+        )
+        kind = ("full_recompute"
+                if handle.model.updates_since_recompute == 0 else
+                "incremental")
+        return UpdateResponse(
+            handle_id=handle.handle_id,
+            num_new_reviews=len(new_reviews),
+            kind=kind,
+            perplexity=self.perplexity(handle),
+        )
+
+    # -- serving (§4.2, §3.4) ----------------------------------------------
+
+    def view(
+        self,
+        handle: ModelHandle,
+        topics: Optional[Sequence[int]] = None,
+        top_n: int = 10,
+        *,
+        mass_coverage: float = 0.9,
+        max_topics: Optional[int] = None,
+    ) -> ViewResponse:
+        """The streamed model view. `topics=None` selects the core set
+        (§3.3); the response carries the JSON payload a device receives."""
+        if topics is None:
+            core, _ = coreset.select_core_set(
+                handle.cfg, handle.state,
+                mass_coverage=mass_coverage, max_topics=max_topics)
+            topics = core
+        topic_ids = [int(t) for t in topics]
+        view = views_lib.build_view(
+            handle.prep, handle.state, topic_ids, top_n=top_n)
+        return ViewResponse(
+            handle_id=handle.handle_id,
+            view=view,
+            topic_ids=topic_ids,
+            payload=view.to_json(),
+            valid=view.validate(),
+        )
+
+    def top_reviews(
+        self, handle: ModelHandle, topic_id: int, n: int = 5
+    ) -> TopReviewsResponse:
+        ids = views_lib.top_reviews_for_topic(
+            handle.prep, handle.state, int(topic_id), n=n)
+        return TopReviewsResponse(
+            handle_id=handle.handle_id, topic_id=int(topic_id),
+            review_ids=ids)
+
+    def perplexity(self, handle: ModelHandle) -> float:
+        return float(perplexity_lib.perplexity(
+            handle.cfg, handle.state, handle.model.corpus))

@@ -1,0 +1,88 @@
+"""Shared fixed-point state codec (paper §4.3) for sampler backends.
+
+Every sampler — the pure-jnp sweep, the Pallas kernel wrapper, the
+client/server distributed sweep — and every consumer of counts (perplexity,
+views, incremental update) needs the same two conversions:
+
+  decode:  stored counts -> real-valued counts
+           (int32 fixed point / 2^(w_bits+1) when ``cfg.w_bits`` is set,
+            identity on the float32 path);
+  encode:  real-valued counts -> stored counts (round to nearest).
+
+Before this module each call site re-implemented the ``if cfg.w_bits``
+branch; hoisting it here is what lets backends be swapped freely — they all
+speak "stored state" at the boundary and real units internally.
+
+The implementation lives in core (it depends only on `fractional` and
+`types`, and the samplers sit above it); the public surface is re-exported
+as `repro.api.codec`.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fractional
+from repro.core.types import Corpus, LDAConfig, LDAState, build_counts
+
+
+def decode_array(cfg: LDAConfig, x):
+    """One stored count array -> real units (cheap single-array decode for
+    call sites that don't need the whole state)."""
+    if cfg.w_bits is not None:
+        return fractional.from_fixed(x, cfg.w_bits)
+    return x
+
+
+def decode_array_np(cfg: LDAConfig, x) -> np.ndarray:
+    """One stored count array -> float64 numpy (host-side serving paths)."""
+    out = np.asarray(x, np.float64)
+    if cfg.w_bits is not None:
+        out = out / float(fractional.scale(cfg.w_bits))
+    return out
+
+
+def decode_counts(cfg: LDAConfig, state: LDAState):
+    """Stored ``(n_dt, n_wt, n_t)`` -> real-valued float32 arrays."""
+    if cfg.w_bits is not None:
+        return (
+            fractional.from_fixed(state.n_dt, cfg.w_bits),
+            fractional.from_fixed(state.n_wt, cfg.w_bits),
+            fractional.from_fixed(state.n_t, cfg.w_bits),
+        )
+    return state.n_dt, state.n_wt, state.n_t
+
+
+def decode_state(cfg: LDAConfig, state: LDAState) -> LDAState:
+    """Full state with counts in real units (z passes through)."""
+    n_dt, n_wt, n_t = decode_counts(cfg, state)
+    return LDAState(z=state.z, n_dt=n_dt, n_wt=n_wt, n_t=n_t)
+
+
+def encode_state(cfg: LDAConfig, state: LDAState) -> LDAState:
+    """Real-valued state -> stored representation (fixed point if w_bits)."""
+    if cfg.w_bits is None:
+        return state
+    return LDAState(
+        z=state.z,
+        n_dt=fractional.to_fixed(state.n_dt, cfg.w_bits),
+        n_wt=fractional.to_fixed(state.n_wt, cfg.w_bits),
+        n_t=fractional.to_fixed(state.n_t, cfg.w_bits),
+    )
+
+
+def rebuild_state(cfg: LDAConfig, corpus: Corpus, z) -> LDAState:
+    """Scatter-rebuild counts from assignments and store (the post-sweep
+    pattern shared by all backends: rebuild in real units, encode once)."""
+    return encode_state(cfg, build_counts(cfg, corpus, z))
+
+
+def decode_counts_np(cfg: LDAConfig, state: LDAState):
+    """Stored counts -> float64 numpy arrays (the view/serving path, which
+    does its aggregation host-side)."""
+    return (
+        decode_array_np(cfg, state.n_dt),
+        decode_array_np(cfg, state.n_wt),
+        decode_array_np(cfg, state.n_t),
+    )

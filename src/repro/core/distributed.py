@@ -26,9 +26,28 @@ from __future__ import annotations
 
 from functools import partial
 
+import inspect
+
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+
+try:  # jax >= 0.5 exposes shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # 0.4.x: experimental API
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# The replication-check kwarg was renamed check_rep -> check_vma; detect by
+# signature rather than import location (intermediate versions mix the two).
+_CHECK_KW = ("check_vma"
+             if "check_vma" in inspect.signature(_shard_map).parameters
+             else "check_rep")
+
+
+def _make_shard_map(fn, mesh, in_specs, out_specs):
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_CHECK_KW: False})
+
+
 from jax.sharding import PartitionSpec as P
 
 from repro.core import fractional
@@ -103,13 +122,12 @@ def make_client_server_sweep(cfg: LDAConfig, mesh, *, block: int = 8192,
         n_wt_new = jax.lax.psum(own_contrib(z), data_axes)
         return z, n_dt, n_wt_new, n_wt_new.sum(axis=0)
 
-    mapped = shard_map(
+    mapped = _make_shard_map(
         shard_fn,
-        mesh=mesh,
-        in_specs=(bspec, bspec, bspec, bspec, P(bspec[0], None),
-                  P(None, None), P()),
-        out_specs=(bspec, P(bspec[0], None), P(None, None), P(None)),
-        check_vma=False,
+        mesh,
+        (bspec, bspec, bspec, bspec, P(bspec[0], None),
+         P(None, None), P()),
+        (bspec, P(bspec[0], None), P(None, None), P(None)),
     )
 
     def sweep(docs, words, z, wts, n_dt_local, n_wt, key):

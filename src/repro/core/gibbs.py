@@ -25,8 +25,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import fractional
-from repro.core.types import Corpus, LDAConfig, LDAState, build_counts
+from repro.core import codec
+from repro.core.types import Corpus, LDAConfig, LDAState
 
 
 def _scores(cfg: LDAConfig, rows_d, rows_w, tot, own):
@@ -96,12 +96,7 @@ def sweep(
     wts = padded(corpus.weights, 0).reshape(nblocks, block)
     keys = jax.random.split(key, nblocks)
 
-    if cfg.w_bits is not None:
-        n_dt = fractional.from_fixed(state.n_dt, cfg.w_bits)
-        n_wt = fractional.from_fixed(state.n_wt, cfg.w_bits)
-        n_t = fractional.from_fixed(state.n_t, cfg.w_bits)
-    else:
-        n_dt, n_wt, n_t = state.n_dt, state.n_wt, state.n_t
+    n_dt, n_wt, n_t = codec.decode_counts(cfg, state)
 
     def body(args):
         d_b, w_b, z_b, wt_b, k_b = args
@@ -110,16 +105,8 @@ def sweep(
 
     z_new = jax.lax.map(body, (docs, words, z, wts, keys)).reshape(-1)[:n]
 
-    new = build_counts(cfg, corpus, z_new)
-    if cfg.w_bits is not None:
-        # Fixed-point path (paper §4.3): rebuild in real units, store rounded.
-        new = LDAState(
-            z=z_new,
-            n_dt=fractional.to_fixed(new.n_dt, cfg.w_bits),
-            n_wt=fractional.to_fixed(new.n_wt, cfg.w_bits),
-            n_t=fractional.to_fixed(new.n_t, cfg.w_bits),
-        )
-    return new
+    # Rebuild in real units, store via the codec (fixed point if w_bits).
+    return codec.rebuild_state(cfg, corpus, z_new)
 
 
 def run(
@@ -135,14 +122,7 @@ def run(
 
     if state is None:
         key, sub = jax.random.split(key)
-        state = init_state(cfg, corpus, sub)
-        if cfg.w_bits is not None:
-            state = LDAState(
-                z=state.z,
-                n_dt=fractional.to_fixed(state.n_dt, cfg.w_bits),
-                n_wt=fractional.to_fixed(state.n_wt, cfg.w_bits),
-                n_t=fractional.to_fixed(state.n_t, cfg.w_bits),
-            )
+        state = codec.encode_state(cfg, init_state(cfg, corpus, sub))
 
     def body(carry, k):
         return sweep(cfg, carry, corpus, k, block), None

@@ -18,18 +18,11 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core import fractional
+from repro.core import codec
 from repro.core.types import Corpus, LDAConfig, LDAState
 
-
-def _real_counts(cfg: LDAConfig, state: LDAState):
-    if cfg.w_bits is not None:
-        return (
-            fractional.from_fixed(state.n_dt, cfg.w_bits),
-            fractional.from_fixed(state.n_wt, cfg.w_bits),
-            fractional.from_fixed(state.n_t, cfg.w_bits),
-        )
-    return state.n_dt, state.n_wt, state.n_t
+# Decoding stored (possibly fixed-point) counts is shared across backends.
+_real_counts = codec.decode_counts
 
 
 @partial(jax.jit, static_argnums=(0, 3))

@@ -19,8 +19,9 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import fractional, gibbs
-from repro.core.types import Corpus, LDAConfig, LDAState, build_counts
+from repro.core import codec
+from repro.core import gibbs
+from repro.core.types import Corpus, LDAConfig, LDAState
 
 
 @dataclasses.dataclass
@@ -33,10 +34,8 @@ class UpdatableModel:
 
 
 def _phi(cfg: LDAConfig, state: LDAState):
-    n_wt, n_t = state.n_wt, state.n_t
-    if cfg.w_bits is not None:
-        n_wt = fractional.from_fixed(n_wt, cfg.w_bits)
-        n_t = fractional.from_fixed(n_t, cfg.w_bits)
+    n_wt = codec.decode_array(cfg, state.n_wt)
+    n_t = codec.decode_array(cfg, state.n_t)
     return (n_wt + cfg.beta) / (n_t[None, :] + cfg.beta_bar)  # (V, K)
 
 
@@ -47,13 +46,25 @@ def add_documents(
     new_weights: jax.Array,
     key: jax.Array,
     update_sweeps: int = 3,
+    sampler=None,
+    num_docs: int | None = None,
 ) -> UpdatableModel:
-    """Append new reviews and incrementally resample only their tokens."""
+    """Append new reviews and incrementally resample only their tokens.
+
+    `sampler` is any `repro.api.backends.Sampler` (or a module exposing
+    `sweep`/`run` with the same signatures); defaults to the pure-jnp
+    `core.gibbs` path. `num_docs` is the new total document count; when
+    omitted it is inferred from the highest doc id in `new_docs`, which
+    undercounts if trailing new documents have no tokens.
+    """
     cfg, corpus, state = model.cfg, model.corpus, model.state
+    if sampler is None:
+        sampler = gibbs
 
     new_docs = jnp.asarray(new_docs, jnp.int32)
     num_new_docs = int(new_docs.max()) + 1 if new_docs.size else 0
-    new_cfg = dataclasses.replace(cfg, num_docs=max(cfg.num_docs, num_new_docs))
+    new_cfg = dataclasses.replace(
+        cfg, num_docs=max(cfg.num_docs, num_new_docs, num_docs or 0))
 
     # Warm-start z for new tokens from the current word posterior φ̂.
     key, sub = jax.random.split(key)
@@ -69,19 +80,13 @@ def add_documents(
         ),
     )
     z_all = jnp.concatenate([state.z, z_new])
-    merged_state = build_counts(new_cfg, merged, z_all)
-    if new_cfg.w_bits is not None:
-        merged_state = LDAState(
-            z=z_all,
-            n_dt=fractional.to_fixed(merged_state.n_dt, new_cfg.w_bits),
-            n_wt=fractional.to_fixed(merged_state.n_wt, new_cfg.w_bits),
-            n_t=fractional.to_fixed(merged_state.n_t, new_cfg.w_bits),
-        )
+    merged_state = codec.rebuild_state(new_cfg, merged, z_all)
 
     updates = model.updates_since_recompute + 1
     if updates >= model.full_recompute_every:
         # Periodic full recompute (all tokens, from fresh init).
-        state_out = gibbs.run(new_cfg, merged, key, num_sweeps=update_sweeps * 3)
+        state_out = sampler.run(new_cfg, merged, key,
+                                num_sweeps=update_sweeps * 3)
         updates = 0
     else:
         # Incremental: resample only the new tokens (mask = weights of old -> 0
@@ -96,17 +101,9 @@ def add_documents(
         for k_s in jax.random.split(key, update_sweeps):
             # Resample new tokens against full counts; rebuild from merged
             # corpus so old tokens keep contributing their true weights.
-            z_step = gibbs.sweep(new_cfg, st, frozen, k_s).z
+            z_step = sampler.sweep(new_cfg, st, frozen, k_s).z
             z_keep = jnp.where(mask > 0, z_step, st.z)
-            st2 = build_counts(new_cfg, merged, z_keep)
-            if new_cfg.w_bits is not None:
-                st2 = LDAState(
-                    z=z_keep,
-                    n_dt=fractional.to_fixed(st2.n_dt, new_cfg.w_bits),
-                    n_wt=fractional.to_fixed(st2.n_wt, new_cfg.w_bits),
-                    n_t=fractional.to_fixed(st2.n_t, new_cfg.w_bits),
-                )
-            st = st2
+            st = codec.rebuild_state(new_cfg, merged, z_keep)
         state_out = st
 
     return UpdatableModel(

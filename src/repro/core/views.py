@@ -18,7 +18,7 @@ import json
 
 import numpy as np
 
-from repro.core import fractional
+from repro.core import codec
 from repro.core.rlda import NUM_TIERS, RLDACorpus, strip_rating
 from repro.core.types import LDAState
 
@@ -72,19 +72,17 @@ def build_view(
 ) -> ModelView:
     """Compute the streamed model view for a set of (core) topics."""
     cfg = prep.cfg
-    n_wt = np.asarray(state.n_wt, np.float64)
-    n_dt = np.asarray(state.n_dt, np.float64)
-    if cfg.w_bits is not None:
-        s = float(fractional.scale(cfg.w_bits))
-        n_wt, n_dt = n_wt / s, n_dt / s
+    n_dt, n_wt, _ = codec.decode_counts_np(cfg, state)
     n_t = n_wt.sum(axis=0)
     total = max(n_t.sum(), 1e-9)
+
+    # The augmented-id -> (base word, tier) map is invariant across topics.
+    base, tier = strip_rating(np.arange(cfg.vocab_size))
 
     views = []
     for t in topic_ids:
         # Aggregate augmented-word counts back to base words for display.
         col = n_wt[:, t]
-        base, tier = strip_rating(np.arange(cfg.vocab_size))
         base_counts = np.bincount(base, weights=col, minlength=prep.base_vocab)
         top = np.argsort(-base_counts)[:top_n]
         denom = max(base_counts.sum(), 1e-9)
@@ -118,9 +116,7 @@ def top_reviews_for_topic(
     prep: RLDACorpus, state: LDAState, topic_id: int, n: int = 5
 ) -> list[int]:
     """Topic-probability-sorted review ids (the ViewPager ordering, §3.4)."""
-    n_dt = np.asarray(state.n_dt, np.float64)
-    if prep.cfg.w_bits is not None:
-        n_dt = n_dt / fractional.scale(prep.cfg.w_bits)
+    n_dt = codec.decode_array_np(prep.cfg, state.n_dt)
     theta = (n_dt + prep.cfg.alpha) / (
         n_dt.sum(1, keepdims=True) + prep.cfg.alpha * prep.cfg.num_topics
     )

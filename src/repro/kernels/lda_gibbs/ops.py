@@ -14,8 +14,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core import fractional
-from repro.core.types import Corpus, LDAConfig, LDAState, build_counts
+from repro.core import codec
+from repro.core.types import Corpus, LDAConfig, LDAState
 from repro.kernels.lda_gibbs.kernel import gibbs_resample_blocked
 
 
@@ -82,12 +82,4 @@ def sweep(
 ) -> LDAState:
     """Full kernel-path Gibbs sweep (resample + count rebuild)."""
     z_new = sweep_resample(cfg, state, corpus, key, token_block)
-    new = build_counts(cfg, corpus, z_new)
-    if cfg.w_bits is not None:
-        new = LDAState(
-            z=z_new,
-            n_dt=fractional.to_fixed(new.n_dt, cfg.w_bits),
-            n_wt=fractional.to_fixed(new.n_wt, cfg.w_bits),
-            n_t=fractional.to_fixed(new.n_t, cfg.w_bits),
-        )
-    return new
+    return codec.rebuild_state(cfg, corpus, z_new)

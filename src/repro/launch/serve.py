@@ -52,9 +52,13 @@ def main(argv=None):
         print(f"[serve] req {r.uid}: prefill {r.prefill_s*1e3:.1f}ms "
               f"decode {r.decode_s*1e3:.1f}ms "
               f"({r.tokens_per_s:.1f} tok/s) -> {r.tokens[:8].tolist()}")
+    # Aggregate decode throughput: one decode wall per wave (results in the
+    # same wave share one decode_s), not a per-request double count.
+    wave_decode = {r.wave_id: r.decode_s for r in results}
     tput = sum(len(r.tokens) for r in results) / max(
-        sum({r.uid: r.decode_s for r in results}.values()), 1e-9)
-    print(f"[serve] {len(results)} requests done")
+        sum(wave_decode.values()), 1e-9)
+    print(f"[serve] {len(results)} requests done, "
+          f"aggregate decode throughput {tput:.1f} tok/s")
     return results
 
 

@@ -1,1 +1,10 @@
 from repro.serving.engine import Engine, Request, Result  # noqa: F401
+from repro.serving.scheduler import WaveScheduler  # noqa: F401
+
+
+def __getattr__(name):  # lazy: TopicEngine pulls in the repro.api layer
+    if name in ("TopicEngine", "TopicResult"):
+        from repro.serving import topic_engine
+
+        return getattr(topic_engine, name)
+    raise AttributeError(f"module 'repro.serving' has no attribute {name!r}")

@@ -1,9 +1,9 @@
 """Batched serving engine: length-bucketed waves of prefill + lockstep decode.
 
-Requests are grouped into waves of identical prompt length (classic length
-bucketing), so a wave shares one `pos` scalar and the KV cache layout stays
-rectangular — the same `prefill`/`decode_step` functions the multi-pod
-dry-run lowers. Greedy or temperature sampling per step.
+Requests are grouped into waves of identical (prompt length, temperature)
+via the shared `serving.scheduler.WaveScheduler`, so a wave shares one
+`pos` scalar, a rectangular KV cache layout, and one sampling temperature —
+the same `prefill`/`decode_step` functions the multi-pod dry-run lowers.
 
 This is the serving half of the paper's system re-hosted: where Vedalia
 streams *model views* (topic summaries) to phones, the transformer zoo
@@ -15,14 +15,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import defaultdict
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+from repro.serving.scheduler import WaveScheduler
 
 
 @dataclasses.dataclass
@@ -38,21 +37,22 @@ class Result:
     uid: int
     tokens: np.ndarray  # generated tokens
     prefill_s: float
-    decode_s: float
+    decode_s: float  # shared by every result of the same wave
     tokens_per_s: float
+    wave_id: int = -1  # which wave served this request
 
 
-class Engine:
-    """Length-bucketed batch serving over a fixed-size KV cache."""
+class Engine(WaveScheduler):
+    """Length/temperature-bucketed batch serving over a fixed-size KV cache."""
 
     def __init__(self, cfg, params, *, cache_len: int = 256, max_batch: int = 8,
                  seed: int = 0):
+        super().__init__(max_batch=max_batch)
         self.cfg = cfg
         self.params = params
         self.cache_len = cache_len
-        self.max_batch = max_batch
-        self.queue: list[Request] = []
         self.key = jax.random.PRNGKey(seed)
+        self._waves_served = 0
         self._prefill = jax.jit(
             lambda p, batch: M.prefill(p, cfg, batch, cache_len),
         )
@@ -60,10 +60,14 @@ class Engine:
             lambda p, cache, toks, pos: M.decode_step(p, cfg, cache, toks, pos)
         )
 
-    def submit(self, req: Request) -> None:
+    def _validate(self, req: Request) -> None:
         assert len(req.prompt) + req.max_new_tokens <= self.cache_len, (
             "request exceeds cache")
-        self.queue.append(req)
+
+    def bucket_key(self, req: Request):
+        # Temperature is part of the key: a wave samples at ONE temperature,
+        # so mixed-temperature submissions must not share a wave.
+        return (len(req.prompt), float(req.temperature))
 
     def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
         if temperature <= 0.0:
@@ -94,7 +98,7 @@ class Engine:
         prefill_s = time.time() - t0
 
         max_new = max(r.max_new_tokens for r in wave)
-        temp = wave[0].temperature
+        temp = wave[0].temperature  # uniform within a wave (bucket_key)
         out = np.zeros((b, max_new), np.int32)
         tok = self._sample(logits, temp)
         t1 = time.time()
@@ -108,6 +112,8 @@ class Engine:
         jax.block_until_ready(tok)
         decode_s = time.time() - t1
 
+        wave_id = self._waves_served
+        self._waves_served += 1
         results = []
         for j, r in enumerate(wave):
             n = r.max_new_tokens
@@ -117,19 +123,6 @@ class Engine:
                 prefill_s=prefill_s,
                 decode_s=decode_s,
                 tokens_per_s=b * max_new / max(decode_s, 1e-9),
+                wave_id=wave_id,
             ))
-        return results
-
-    def run(self) -> list[Result]:
-        """Drain the queue: bucket by prompt length, serve in waves."""
-        buckets: dict[int, list[Request]] = defaultdict(list)
-        for r in self.queue:
-            buckets[len(r.prompt)].append(r)
-        self.queue.clear()
-
-        results = []
-        for plen in sorted(buckets):
-            reqs = buckets[plen]
-            for i in range(0, len(reqs), self.max_batch):
-                results.extend(self._run_wave(reqs[i : i + self.max_batch]))
         return results

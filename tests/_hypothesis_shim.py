@@ -1,0 +1,120 @@
+"""Minimal deterministic stand-in for `hypothesis` (optional dev dep).
+
+Tier-1 must collect and run green without optional dependencies. When the
+real `hypothesis` is absent, `conftest.py` installs this shim into
+`sys.modules` so `from hypothesis import given, settings` keeps working.
+
+The shim implements exactly the surface this test-suite uses:
+
+  strategies.integers / floats / lists     bounded value generators
+  @given(...)                              runs the test body over a fixed
+                                           number of deterministic examples
+                                           (boundary values first, then
+                                           seeded-random draws)
+  @settings(...)                           accepted and ignored
+
+It is NOT a property-testing engine — no shrinking, no example database —
+just enough to keep the property tests meaningful as bounded spot checks.
+Install the real `hypothesis` (see requirements-dev.txt) for full coverage.
+"""
+
+from __future__ import annotations
+
+import random
+import sys
+import types
+
+_NUM_EXAMPLES = 25
+_SEED = 0xC0FFEE
+
+
+class SearchStrategy:
+    """A bounded example generator: boundary cases first, then random."""
+
+    def __init__(self, boundary, draw):
+        self._boundary = list(boundary)
+        self._draw = draw
+
+    def example(self, rng: random.Random, index: int):
+        if index < len(self._boundary):
+            return self._boundary[index]
+        return self._draw(rng)
+
+
+def integers(min_value=None, max_value=None):
+    lo = -(2**31) if min_value is None else int(min_value)
+    hi = 2**31 if max_value is None else int(max_value)
+    return SearchStrategy(
+        boundary=[lo, hi, min(max(0, lo), hi)],
+        draw=lambda rng: rng.randint(lo, hi),
+    )
+
+
+def floats(min_value=None, max_value=None, allow_nan=None, allow_infinity=None):
+    lo = -1e9 if min_value is None else float(min_value)
+    hi = 1e9 if max_value is None else float(max_value)
+    mid = lo + 0.5 * (hi - lo)
+    return SearchStrategy(
+        boundary=[lo, hi, mid],
+        draw=lambda rng: rng.uniform(lo, hi),
+    )
+
+
+def lists(elements: SearchStrategy, min_size=0, max_size=10):
+    def draw(rng):
+        size = rng.randint(min_size, max_size)
+        return [elements.example(rng, i + 1) for i in range(size)]
+
+    shortest = [elements.example(random.Random(_SEED), 0)] * min_size
+    return SearchStrategy(boundary=[shortest], draw=draw)
+
+
+def given(*strat_args, **strat_kwargs):
+    """Run the wrapped test over _NUM_EXAMPLES deterministic examples."""
+
+    def deco(fn):
+        def wrapper():
+            rng = random.Random(_SEED)
+            for i in range(_NUM_EXAMPLES):
+                args = [s.example(rng, i) for s in strat_args]
+                kwargs = {k: s.example(rng, i)
+                          for k, s in strat_kwargs.items()}
+                fn(*args, **kwargs)
+
+        # No functools.wraps: a __wrapped__ attribute would make pytest
+        # inspect the original signature and demand fixtures for the
+        # strategy-drawn parameters.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.hypothesis_shim = True
+        return wrapper
+
+    return deco
+
+
+def settings(*args, **kwargs):
+    """Accepted and ignored (profiles, max_examples, deadline, ...)."""
+
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def install() -> None:
+    """Register the shim as `hypothesis` / `hypothesis.strategies`."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.__is_shim__ = True
+    strat = types.ModuleType("hypothesis.strategies")
+    strat.integers = integers
+    strat.floats = floats
+    strat.lists = lists
+    strat.SearchStrategy = SearchStrategy
+    hyp.strategies = strat
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat

@@ -3,3 +3,15 @@ import sys
 
 # Allow plain `pytest tests/` without PYTHONPATH=src.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+# Optional-dep fallback: tier-1 must collect without `hypothesis` installed.
+# The shim runs each property test over a fixed set of deterministic
+# examples; installing the real hypothesis (requirements-dev.txt) upgrades
+# them to full property tests transparently.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from _hypothesis_shim import install
+
+    install()

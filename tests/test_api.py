@@ -1,0 +1,288 @@
+"""`repro.api` service layer: backend parity, service round-trip, shims.
+
+Covers the PR-1 acceptance gates:
+  * the jnp / pallas / distributed backends agree on count invariants and
+    land within a perplexity tolerance of the jnp oracle;
+  * `VedaliaService` fit -> update -> view -> validate() round-trips;
+  * legacy module-level entry points (`gibbs.run`, `update.add_documents`)
+    still work and match the new API bit-for-bit where they share a path.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import VedaliaService, available_backends, codec, get_backend
+from repro.api.service import FitRequest
+from repro.core import gibbs, perplexity, update
+from repro.core.types import Corpus, LDAConfig, build_counts, init_state
+from repro.data import reviews
+
+BACKENDS = ("jnp", "pallas", "distributed")
+
+
+def _corpus(n=3000, v=120, d=40, k=8, w_bits=None, weighted=True, seed=0):
+    rng = np.random.default_rng(seed)
+    cfg = LDAConfig(num_topics=k, vocab_size=v, num_docs=d, w_bits=w_bits)
+    wts = rng.random(n).astype(np.float32) if weighted else np.ones(
+        n, np.float32)
+    corpus = Corpus(
+        docs=jnp.asarray(rng.integers(0, d, n), jnp.int32),
+        words=jnp.asarray(rng.integers(0, v, n), jnp.int32),
+        weights=jnp.asarray(wts),
+    )
+    return cfg, corpus
+
+
+def _reviews(n=50, vocab=120, seed=0):
+    corp = reviews.generate(reviews.SyntheticSpec(
+        num_reviews=n, vocab_size=vocab, num_topics=4, mean_tokens=30,
+        seed=seed))
+    return corp.reviews
+
+
+# -- registry ---------------------------------------------------------------
+
+
+def test_registry_lists_all_three_backends():
+    assert set(BACKENDS) <= set(available_backends())
+
+
+def test_unknown_backend_raises_with_choices():
+    with pytest.raises(KeyError, match="distributed"):
+        get_backend("cuda")
+
+
+# -- backend parity (acceptance gate) ---------------------------------------
+
+
+@pytest.mark.parametrize("w_bits", [None, 8])
+def test_backend_count_invariants(w_bits):
+    """All backends conserve total weighted mass and per-word masses."""
+    cfg, corpus = _corpus(w_bits=w_bits)
+    w = np.asarray(corpus.weights, np.float64)
+    word_mass = np.bincount(np.asarray(corpus.words), weights=w,
+                            minlength=cfg.vocab_size)
+    doc_mass = np.bincount(np.asarray(corpus.docs), weights=w,
+                           minlength=cfg.num_docs)
+    for name in BACKENDS:
+        st = get_backend(name).run(cfg, corpus, jax.random.PRNGKey(0), 3)
+        n_dt, n_wt, n_t = (np.asarray(a, np.float64) for a in
+                           codec.decode_counts(cfg, st))
+        tol = 1e-2 if w_bits is None else corpus.num_tokens * 2.0 ** -(
+            w_bits + 1)
+        np.testing.assert_allclose(n_t.sum(), w.sum(), atol=tol,
+                                   err_msg=name)
+        np.testing.assert_allclose(n_wt.sum(axis=1), word_mass, atol=0.02,
+                                   err_msg=name)
+        np.testing.assert_allclose(n_dt.sum(axis=1), doc_mass, atol=0.02,
+                                   err_msg=name)
+
+
+def test_backend_perplexity_parity_with_oracle():
+    """After N sweeps all backends land within tolerance of the jnp oracle
+    (stochastically independent chains on a planted-structure corpus)."""
+    revs = _reviews(n=60, vocab=120)
+    from repro.core import rlda
+
+    prep = rlda.prepare(revs, base_vocab=120, num_topics=8, w_bits=8)
+    sweeps = 15
+    perps = {}
+    for name in BACKENDS:
+        st = get_backend(name).run(
+            prep.cfg, prep.corpus, jax.random.PRNGKey(7), sweeps)
+        perps[name] = float(perplexity.perplexity(prep.cfg, st, prep.corpus))
+    for name in ("pallas", "distributed"):
+        assert abs(np.log(perps[name]) - np.log(perps["jnp"])) < 0.2, perps
+
+
+def test_pallas_backend_matches_oracle_scores():
+    """Same counts + same gumbel noise => the kernel's block scores must
+    reproduce the oracle's argmax exactly (the parity gate for putting the
+    kernel on the production path)."""
+    from repro.core.gibbs import resample_block
+    from repro.kernels.lda_gibbs.kernel import gibbs_resample_blocked
+
+    rng = np.random.default_rng(3)
+    n, k = 512, 128
+    cfg = LDAConfig(num_topics=k, vocab_size=64, num_docs=16)
+    docs = jnp.asarray(rng.integers(0, 16, n), jnp.int32)
+    words = jnp.asarray(rng.integers(0, 64, n), jnp.int32)
+    z = jnp.asarray(rng.integers(0, k, n), jnp.int32)
+    wts = jnp.asarray(rng.random(n), jnp.float32)
+    n_dt = jnp.asarray(rng.integers(0, 40, (16, k)), jnp.float32)
+    n_wt = jnp.asarray(rng.integers(0, 40, (64, k)), jnp.float32)
+    n_t = n_wt.sum(0)
+    g = jax.random.gumbel(jax.random.PRNGKey(0), (n, k), jnp.float32)
+
+    z_oracle = resample_block(cfg, docs, words, z, wts, n_dt, n_wt, n_t, g)
+    z_kernel = gibbs_resample_blocked(
+        n_dt[docs], n_wt[words], n_t, z, wts, g,
+        alpha=cfg.alpha, beta=cfg.beta, beta_bar=cfg.beta_bar,
+        token_block=256, interpret=True)
+    np.testing.assert_array_equal(np.asarray(z_oracle), np.asarray(z_kernel))
+
+
+# -- service round-trip -----------------------------------------------------
+
+
+def test_service_fit_update_view_roundtrip():
+    svc = VedaliaService(backend="jnp", num_sweeps=10, update_sweeps=2)
+    handle = svc.fit(_reviews(n=50, seed=0), num_topics=6, base_vocab=120,
+                     w_bits=8)
+    assert handle.num_reviews == 50
+    p0 = svc.perplexity(handle)
+    assert np.isfinite(p0)
+
+    resp = svc.update(handle, _reviews(n=15, seed=1))
+    assert resp.kind == "incremental"
+    assert handle.num_reviews == 65
+    assert len(handle.prep.helpful) == 65  # metadata grew with the corpus
+
+    view = svc.view(handle, top_n=6, max_topics=4)
+    assert view.valid and view.view.validate()
+    assert 1 <= len(view.topic_ids) <= 4
+    assert view.payload_bytes == len(view.payload) > 0
+
+    top = svc.top_reviews(handle, view.topic_ids[0], n=3)
+    assert len(top.review_ids) == 3
+    assert all(0 <= d < 65 for d in top.review_ids)
+
+
+def test_service_periodic_full_recompute():
+    svc = VedaliaService(backend="jnp", num_sweeps=5, update_sweeps=1)
+    handle = svc.fit(_reviews(n=30, seed=0), num_topics=4, base_vocab=120)
+    handle.model.full_recompute_every = 2
+    kinds = [svc.update(handle, _reviews(n=8, seed=2 + i)).kind
+             for i in range(2)]
+    assert kinds == ["incremental", "full_recompute"]
+
+
+@pytest.mark.parametrize("backend", ["pallas", "distributed"])
+def test_service_fit_on_alternate_backends(backend):
+    """The acceptance path: fit + view through each non-oracle backend."""
+    svc = VedaliaService(backend=backend, num_sweeps=6)
+    handle = svc.fit(_reviews(n=30, seed=0), num_topics=6, base_vocab=120,
+                     w_bits=8)
+    assert handle.backend == backend
+    assert np.isfinite(svc.perplexity(handle))
+    view = svc.view(handle, top_n=5)
+    assert view.valid
+
+
+def test_cross_backend_refine_and_update():
+    """A model fit by one backend is updated/refined by another — the
+    stored-state codec makes backends interchangeable mid-run."""
+    svc = VedaliaService(backend="jnp", num_sweeps=6, update_sweeps=1)
+    handle = svc.fit(_reviews(n=30, seed=0), num_topics=4, base_vocab=120,
+                     w_bits=8)
+    svc.refine(handle, num_sweeps=2, backend="pallas")
+    assert handle.backend == "pallas"
+    resp = svc.update(handle, _reviews(n=8, seed=5))  # pallas-backed update
+    assert np.isfinite(resp.perplexity)
+    assert svc.view(handle).valid
+
+
+# -- legacy shims -----------------------------------------------------------
+
+
+def test_jnp_backend_is_bitwise_gibbs_run():
+    """get_backend('jnp').run IS the legacy gibbs.run fast path."""
+    cfg, corpus = _corpus(n=2000, w_bits=8)
+    st_new = get_backend("jnp").run(cfg, corpus, jax.random.PRNGKey(5), 4)
+    st_old = gibbs.run(cfg, corpus, jax.random.PRNGKey(5), 4)
+    np.testing.assert_array_equal(np.asarray(st_new.z), np.asarray(st_old.z))
+    np.testing.assert_array_equal(np.asarray(st_new.n_wt),
+                                  np.asarray(st_old.n_wt))
+
+
+def test_add_documents_default_sampler_unchanged():
+    """update.add_documents with no sampler arg == explicit jnp backend."""
+    cfg, corpus = _corpus(n=1500, d=30, w_bits=8)
+    state = codec.encode_state(
+        cfg, init_state(cfg, corpus, jax.random.PRNGKey(0)))
+    rng = np.random.default_rng(1)
+    new_docs = np.repeat(np.arange(30, 34), 20)
+    new_words = rng.integers(0, cfg.vocab_size, len(new_docs))
+    new_wts = np.ones(len(new_docs), np.float32)
+
+    def make():
+        return update.UpdatableModel(
+            cfg=cfg, corpus=corpus,
+            state=jax.tree_util.tree_map(lambda x: x, state))
+
+    m_default = update.add_documents(
+        make(), new_docs, new_words, new_wts, jax.random.PRNGKey(9))
+    m_jnp = update.add_documents(
+        make(), new_docs, new_words, new_wts, jax.random.PRNGKey(9),
+        sampler=get_backend("jnp"))
+    np.testing.assert_array_equal(np.asarray(m_default.state.z),
+                                  np.asarray(m_jnp.state.z))
+    assert m_default.cfg.num_docs == 34
+
+
+def test_codec_roundtrip_and_rebuild():
+    cfg, corpus = _corpus(n=1000, w_bits=8)
+    st = codec.rebuild_state(
+        cfg, corpus, jnp.zeros(corpus.num_tokens, jnp.int32))
+    assert st.n_wt.dtype == jnp.int32  # stored fixed point
+    n_dt, n_wt, n_t = codec.decode_counts(cfg, st)
+    assert n_wt.dtype == jnp.float32
+    # encode(decode(x)) is the identity on stored states
+    st2 = codec.encode_state(cfg, codec.decode_state(cfg, st))
+    np.testing.assert_array_equal(np.asarray(st.n_wt), np.asarray(st2.n_wt))
+    # numpy decode agrees with jnp decode
+    n_dt_np, n_wt_np, n_t_np = codec.decode_counts_np(cfg, st)
+    np.testing.assert_allclose(n_wt_np, np.asarray(n_wt), atol=1e-6)
+
+
+# -- TopicEngine ------------------------------------------------------------
+
+
+def test_topic_engine_serves_bucketed_products():
+    from repro.serving import TopicEngine
+
+    eng = TopicEngine(max_batch=2, num_sweeps=4)
+    for uid in range(3):
+        eng.submit(FitRequest(
+            uid=uid, reviews=_reviews(n=25, seed=uid),
+            num_topics=6 if uid < 2 else 8, base_vocab=120, num_sweeps=4))
+    results = {r.uid: r for r in eng.run()}
+    assert set(results) == {0, 1, 2}
+    assert eng.pending() == 0
+    for uid, r in results.items():
+        assert r.view.valid, uid
+        assert np.isfinite(r.perplexity)
+    assert results[2].handle.cfg.num_topics == 8
+
+
+def test_topic_engine_rejects_empty_request():
+    from repro.serving import TopicEngine
+
+    eng = TopicEngine(num_sweeps=2)
+    with pytest.raises(ValueError, match="empty review set"):
+        eng.submit(FitRequest(uid=0, reviews=[]))
+
+
+def test_update_with_tokenless_trailing_review_keeps_alignment():
+    """A trailing zero-token review must still count as a document: prep
+    metadata, cfg.num_docs, and the merged corpus stay aligned so views
+    keep working (regression: doc count was inferred from token ids)."""
+    from repro.core.rlda import Review
+
+    svc = VedaliaService(backend="jnp", num_sweeps=5, update_sweeps=1)
+    handle = svc.fit(_reviews(n=30, seed=0), num_topics=4, base_vocab=120)
+    new = _reviews(n=5, seed=9)
+    new.append(Review(tokens=np.array([], np.int32), rating=3.0, user=0,
+                      helpful=0, unhelpful=0, writing_quality=0.5))
+    resp = svc.update(handle, new)
+    assert resp.num_new_reviews == 6
+    assert handle.cfg.num_docs == 36
+    assert len(handle.prep.helpful) == 36
+    # prep.corpus tracks the merged corpus, not the original fit corpus
+    assert handle.prep.corpus.num_tokens == handle.model.corpus.num_tokens
+    assert svc.view(handle).valid
+    assert len(svc.top_reviews(handle, 0, n=3).review_ids) == 3

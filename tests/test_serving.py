@@ -72,3 +72,51 @@ def test_length_bucketing():
     for r in res:
         assert r.tokens.shape == (3,)
         assert np.all(r.tokens >= 0) and np.all(r.tokens < cfg.vocab_size)
+
+
+def test_temperature_bucketing_preserves_greedy():
+    """Mixed-temperature submissions must not perturb greedy requests: the
+    scheduler buckets by (length, temperature), so a temp>0 request never
+    shares a wave (and its sampling step) with greedy ones."""
+    cfg, params = _setup()
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+               for _ in range(3)]
+
+    eng = Engine(cfg, params, cache_len=64, max_batch=8)
+    eng.submit(Request(uid=0, prompt=prompts[0], max_new_tokens=4))
+    eng.submit(Request(uid=1, prompt=prompts[1], max_new_tokens=4,
+                       temperature=0.9))
+    eng.submit(Request(uid=2, prompt=prompts[2], max_new_tokens=4))
+    mixed = {r.uid: r.tokens for r in eng.run()}
+
+    for uid in (0, 2):
+        solo = Engine(cfg, params, cache_len=64, max_batch=1)
+        solo.submit(Request(uid=uid, prompt=prompts[uid], max_new_tokens=4))
+        np.testing.assert_array_equal(mixed[uid], solo.run()[0].tokens)
+    assert mixed[1].shape == (4,)
+
+
+def test_wave_scheduler_buckets_and_chunks():
+    """Base-class scheduling: same-key requests wave together in submission
+    order, waves never exceed max_batch, keys drain in sorted order."""
+    from repro.serving.scheduler import WaveScheduler
+
+    class Recorder(WaveScheduler):
+        def bucket_key(self, req):
+            return req[0]
+
+        def _run_wave(self, wave):
+            return [("wave", tuple(wave))]
+
+    sched = Recorder(max_batch=2)
+    for item in [("b", 1), ("a", 2), ("b", 3), ("b", 4), ("a", 5)]:
+        sched.submit(item)
+    assert sched.pending() == 5
+    waves = [w for _, w in sched.run()]
+    assert waves == [
+        (("a", 2), ("a", 5)),
+        (("b", 1), ("b", 3)),
+        (("b", 4),),
+    ]
+    assert sched.pending() == 0
