@@ -1,0 +1,85 @@
+"""Delta-view bandwidth — the §4.2 claim made measurable in payload bytes.
+
+The paper streams model views instead of models "to reduce bandwidth and
+protect models from outside use". The versioned protocol goes one step
+further: a session's view cursor lets the server transmit only the topics
+whose mass or top words drifted since the client's last sync. This bench
+records the actual wire sizes:
+
+  * full sync payload bytes (first view of the model);
+  * delta sync of an *unchanged* model (must carry 0 topic payloads);
+  * delta sync after a small incremental update vs the full sync a
+    cursor-less client would have paid at the same moment —
+    `delta_ratio` = delta bytes / full bytes, the acceptance gate (< 1.0).
+"""
+
+from __future__ import annotations
+
+from repro.api import VedaliaClient
+from repro.data import reviews
+
+
+def _reviews(n, vocab, seed):
+    return reviews.generate(reviews.SyntheticSpec(
+        num_reviews=n, vocab_size=vocab, num_topics=8, mean_tokens=40,
+        seed=seed)).reviews
+
+
+def run(quick: bool = False) -> dict:
+    n_reviews = 200 if quick else 500
+    vocab = 300 if quick else 800
+    k = 12 if quick else 16
+    new_reviews = max(4, n_reviews // 25)
+
+    client = VedaliaClient(
+        backend="jnp", num_sweeps=10 if quick else 25, update_sweeps=1)
+    fit = client.fit(_reviews(n_reviews, vocab, seed=0), num_topics=k,
+                     base_vocab=vocab, w_bits=8, seed=0)
+    hid = fit.handle_id
+
+    full = client.sync_view(hid, top_n=10)
+    assert not full.delta and full.cursor is not None
+
+    unchanged = client.sync_view(hid, top_n=10)
+    assert unchanged.delta
+
+    # A small stream of fresh reviews, incrementally absorbed (§3.2).
+    client.update(hid, _reviews(new_reviews, vocab, seed=77), seed=1)
+
+    # What a cursor-less client pays now vs what the delta client pays.
+    # (view() with since=None is the full resend; sync_view uses the cursor
+    # carried by `unchanged`.)
+    full_after = client.view(hid, top_n=10)
+    delta_after = client.view(hid, since=unchanged.cursor, top_n=10)
+    ratio = delta_after.payload_bytes / max(full_after.payload_bytes, 1)
+
+    out = {
+        "num_reviews": n_reviews,
+        "new_reviews": new_reviews,
+        "num_topics_topical": len(full.topic_ids),
+        "full_payload_bytes": full.payload_bytes,
+        "unchanged_delta_bytes": unchanged.payload_bytes,
+        "unchanged_delta_topics": len(unchanged.topics),
+        "full_after_update_bytes": full_after.payload_bytes,
+        "delta_after_update_bytes": delta_after.payload_bytes,
+        "delta_after_update_topics": len(delta_after.topics),
+        "delta_ratio": round(ratio, 4),
+    }
+    print(f"  full sync: {full.payload_bytes} bytes "
+          f"({len(full.topics)} topics)")
+    print(f"  delta sync, unchanged model: {unchanged.payload_bytes} bytes "
+          f"({len(unchanged.topics)} topics)")
+    print(f"  after +{new_reviews} reviews: delta "
+          f"{delta_after.payload_bytes} vs full "
+          f"{full_after.payload_bytes} bytes -> ratio {ratio:.3f} "
+          f"({len(delta_after.topics)} of {len(delta_after.topic_ids)} "
+          f"topics re-sent)")
+    assert len(unchanged.topics) == 0, (
+        "delta view of an unchanged model must transmit 0 topic payloads")
+    assert ratio < 1.0, (
+        f"delta view must be smaller than a full resend (ratio {ratio:.3f})")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -27,6 +27,8 @@ BENCHES = [
      "benchmarks.coreset_bench"),
     ("views", "build_view serving path (strip_rating hoist note)",
      "benchmarks.views_bench"),
+    ("delta_view", "delta vs full view payload bytes (paper §4.2)",
+     "benchmarks.delta_view_bench"),
     ("roofline", "roofline terms from the dry-run (deliverable g)",
      "benchmarks.roofline"),
 ]
@@ -40,9 +42,19 @@ def main(argv=None):
     ap.add_argument("--outdir", default="experiments/bench")
     args = ap.parse_args(argv)
 
-    only = set(args.only.split(",")) if args.only else None
+    valid = [name for name, _, _ in BENCHES]
+    only = set(filter(None, args.only.split(","))) if args.only else None
+    if only:
+        unknown = sorted(only - set(valid))
+        if unknown:
+            # A typo must not masquerade as a clean run of zero benches.
+            print(f"error: unknown bench name(s) {unknown}; "
+                  f"valid names: {valid}", file=sys.stderr)
+            sys.exit(2)
     os.makedirs(args.outdir, exist_ok=True)
+    t_start = time.time()
     failures = []
+    results = {}
     for name, desc, module in BENCHES:
         if only and name not in only:
             continue
@@ -57,16 +69,31 @@ def main(argv=None):
                       **(result or {})}
             with open(os.path.join(args.outdir, f"{name}.json"), "w") as f:
                 json.dump(result, f, indent=1)
+            results[name] = result
             print(f"  [{name}] done in {result['wall_s']}s")
         except Exception as e:
             failures.append((name, repr(e)))
             print(f"  [{name}] FAILED: {e}")
             traceback.print_exc()
+
+    # One artifact per run: the perf trajectory reads summary.json, not N
+    # scattered per-bench files.
+    summary = {
+        "profile": "full" if args.full else "quick",
+        "requested": sorted(only) if only else valid,
+        "wall_s": round(time.time() - t_start, 1),
+        "failures": failures,
+        "benches": results,
+    }
+    with open(os.path.join(args.outdir, "summary.json"), "w") as f:
+        json.dump(summary, f, indent=1)
+
     print()
     if failures:
         print(f"{len(failures)} benchmark(s) failed: {failures}")
         sys.exit(1)
-    print(f"all benchmarks passed; results in {args.outdir}/")
+    print(f"all benchmarks passed; results in {args.outdir}/ "
+          f"(aggregate: {os.path.join(args.outdir, 'summary.json')})")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """Quickstart: fit RLDA on a synthetic Amazon-like product and print the
 topic views — the paper's §5 case study, end to end on CPU, driven through
-the `repro.api.VedaliaService` facade.
+the versioned `repro.api.VedaliaClient` protocol.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,7 +9,8 @@ import time
 
 import numpy as np
 
-from repro.api import VedaliaService
+from repro.api import VedaliaClient
+from repro.core.rlda import NUM_TIERS
 from repro.data import reviews
 
 
@@ -21,36 +22,42 @@ def main():
     print(f"product with {len(corp.reviews)} reviews, "
           f"mean rating {np.mean([r.rating for r in corp.reviews]):.2f}")
 
-    # RLDA through the service: rating-augmented vocab + quality/tier
+    # RLDA through the protocol: rating-augmented vocab + quality/tier
     # weights (paper §3.1, §4.3), fixed-point counts, pluggable backend.
-    svc = VedaliaService(backend="jnp")
+    client = VedaliaClient(backend="jnp")
     t0 = time.time()
-    handle = svc.fit(corp.reviews, num_topics=12, base_vocab=spec.vocab_size,
+    fit = client.fit(corp.reviews, num_topics=12, base_vocab=spec.vocab_size,
                      w_bits=8, num_sweeps=30, seed=0)
     initial_s = time.time() - t0
-    svc.refine(handle, num_sweeps=70, seed=1)
+    fit = client.refine(fit.handle_id, num_sweeps=70, seed=1)
     total_s = time.time() - t0
-    p = svc.perplexity(handle)
     print(f"initial model in {initial_s:.1f}s, final in {total_s:.1f}s "
           f"(paper: ~5s initial / ~15s final on a 2015 phone), "
-          f"perplexity {p:.1f}")
+          f"perplexity {fit.perplexity:.1f}")
 
     # Model views over the core topic set (§3.3, §4.2) — the payload a
     # phone receives, validated by the Chital stage.
-    resp = svc.view(handle, top_n=8, mass_coverage=0.9, max_topics=6)
-    assert resp.valid
-    print(f"core set: {len(resp.topic_ids)} of {handle.cfg.num_topics} topics")
-    for t in resp.view.topics:
+    sync = client.sync_view(fit.handle_id, top_n=8, mass_coverage=0.9,
+                            max_topics=6)
+    assert sync.valid
+    print(f"core set: {len(sync.topic_ids)} of {fit.num_topics} topics")
+    for t in sync.topics:
         stars = "*" * int(round(t.expected_rating))
         print(f"\n topic {t.topic_id}: weight {t.probability:.2f} "
               f"rating {t.expected_rating:.2f} {stars:5s} "
               f"helpful {t.expected_helpful:.1f} vs {t.expected_unhelpful:.1f}")
         print(f"   keywords: {t.top_words}")
-        top = svc.top_reviews(handle, t.topic_id, n=3)
+        top = client.top_reviews(fit.handle_id, t.topic_id, n=3)
         print(f"   top reviews (ViewPager order): {top.review_ids}")
 
-    print(f"\nview payload: {resp.payload_bytes} bytes "
-          f"(vs full model {handle.state.n_wt.size * 4} bytes)")
+    # Bandwidth (§4.2): full sync vs the delta sync of an unchanged model.
+    resync = client.sync_view(fit.handle_id, top_n=8, mass_coverage=0.9,
+                              max_topics=6)
+    full_model_bytes = fit.num_topics * spec.vocab_size * NUM_TIERS * 4
+    print(f"\nview payload: {sync.payload_bytes} bytes "
+          f"(vs full model {full_model_bytes} bytes); "
+          f"unchanged-model delta sync: {resync.payload_bytes} bytes, "
+          f"{len(resync.topics)} topics re-sent")
 
 
 if __name__ == "__main__":

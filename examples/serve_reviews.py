@@ -1,18 +1,22 @@
 """End-to-end Vedalia driver (the paper's system, §3-§5):
 
-  1. reviews stream in for several products;
-  2. the Chital marketplace offloads RLDA fitting to seller devices (here:
-     worker processes running the real TPU-path Gibbs sampler through a
-     pluggable `repro.api` backend);
-  3. winners are selected by perplexity and verified per Eq. (6);
+  1. reviews stream in for several products and are prepared server-side;
+  2. the Chital marketplace offloads RLDA fitting to seller devices, each
+     of which fits the buyer's prepared corpus *by reference* through the
+     versioned client/server protocol (`repro.api.VedaliaClient`);
+  3. winners are selected by perplexity and verified per Eq. (6); the
+     winning handle becomes the served model, losers are released;
   4. new reviews trigger incremental model updates (§3.2) with periodic
      full recomputes;
-  5. buyers receive bandwidth-frugal model views (§4.2).
+  5. buyers receive bandwidth-frugal model views (§4.2): a full sync
+     first, then cursor-tracked *delta* views that transmit only drifted
+     topics.
 
-All model lifecycle goes through the `repro.api.VedaliaService` facade; the
-sampler backend is selectable:
+All traffic crosses the wire protocol (versioned JSON envelopes); the
+sampler backend is selectable, including the workload-routing `auto`:
 
-  PYTHONPATH=src python examples/serve_reviews.py [--backend jnp|pallas|distributed]
+  PYTHONPATH=src python examples/serve_reviews.py \
+      [--backend jnp|pallas|distributed|alias|sparse|auto]
 """
 
 import argparse
@@ -21,42 +25,18 @@ import time
 import jax
 import numpy as np
 
-from repro.api import VedaliaService
+from repro.api import VedaliaClient
 from repro.chital.marketplace import Marketplace
 from repro.chital.matching import MATCHERS, BuyerRequest, Seller
-from repro.chital.verification import Submission
-from repro.core import perplexity, rlda
+from repro.chital.runtime import client_runtime, release_losers
 from repro.data import reviews
-
-
-def make_runtime(products, sampler, max_sweeps=40):
-    """Sellers actually fit the model (the real sampler, not the analytic
-    simulator): a slow seller runs fewer sweeps -> worse perplexity."""
-
-    def runtime(seller: Seller, buyer: BuyerRequest) -> Submission:
-        prep = products[buyer.buyer_id]["prep"]
-        sweeps = max(5, min(max_sweeps, int(seller.speed / 400)))
-        st = sampler.run(prep.cfg, prep.corpus,
-                         jax.random.PRNGKey(seller.seller_id), sweeps)
-        p = float(perplexity.perplexity(prep.cfg, st, prep.corpus))
-        products[buyer.buyer_id].setdefault("submissions", {})[
-            seller.seller_id] = st
-        return Submission(
-            seller_id=seller.seller_id,
-            perplexity=p,
-            tokens_processed=prep.corpus.num_tokens,
-            iterations=sweeps,
-            payload=st,
-            converged_perplexity=p,  # honest sellers: converged == reported
-        )
-
-    return runtime
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", default="jnp",
-                    choices=("jnp", "pallas", "distributed"))
+                    choices=("jnp", "pallas", "distributed", "alias",
+                             "sparse", "auto"))
     ap.add_argument("--products", type=int, default=3)
     ap.add_argument("--reviews", type=int, default=200)
     ap.add_argument("--new-reviews", type=int, default=40)
@@ -69,11 +49,12 @@ def main(argv=None):
         args.products, args.reviews, args.new_reviews = 2, 60, 15
         args.vocab, args.topics = 150, 6
 
-    svc = VedaliaService(backend=args.backend,
-                         update_sweeps=2 if args.quick else 3)
-    sampler = svc.sampler()
-    print(f"[serve_reviews] backend={args.backend} "
-          f"({jax.device_count()} device(s))")
+    client = VedaliaClient(backend=args.backend,
+                           update_sweeps=2 if args.quick else 3)
+    info = client.hello()
+    print(f"[serve_reviews] protocol v{info.protocol_version} "
+          f"backend={args.backend} ({jax.device_count()} device(s)); "
+          f"server backends: {', '.join(info.backends)}")
 
     rng = np.random.default_rng(0)
     products = {}
@@ -81,17 +62,21 @@ def main(argv=None):
         corp = reviews.generate(reviews.SyntheticSpec(
             num_reviews=args.reviews, vocab_size=args.vocab,
             num_topics=args.topics - 2, seed=pid))
-        prep = rlda.prepare(corp.reviews, base_vocab=args.vocab,
-                            num_topics=args.topics)
+        prep = client.prepare(corp.reviews, base_vocab=args.vocab,
+                              num_topics=args.topics)
         products[pid] = {"corp": corp, "prep": prep}
 
-    # Marketplace with real seller devices (heterogeneous speeds).
+    # Marketplace with real seller devices (heterogeneous speeds), every
+    # seller fit crossing the protocol by corpus reference.
     sellers = [Seller(seller_id=i, speed=float(rng.uniform(3000, 16000)))
                for i in range(8)]
     mp = Marketplace(matcher=MATCHERS["greedy_gain"](),
-                     runtime=make_runtime(
-                         products, sampler,
-                         max_sweeps=10 if args.quick else 40),
+                     runtime=client_runtime(
+                         client,
+                         {pid: p["prep"].corpus_id
+                          for pid, p in products.items()},
+                         max_sweeps=10 if args.quick else 40,
+                         backend=args.backend),
                      sellers=sellers)
 
     print("=== phase 1: initial model fits via marketplace offload ===")
@@ -99,46 +84,59 @@ def main(argv=None):
         t0 = time.time()
         rec = mp.submit(BuyerRequest(
             buyer_id=pid,
-            task_tokens=products[pid]["prep"].corpus.num_tokens,
+            task_tokens=products[pid]["prep"].num_tokens,
             arrival=float(pid),
             local_speed=1500.0),
             now=float(pid))
         winner = rec.result.winner
-        # The winner's payload becomes a served model handle.
-        products[pid]["handle"] = svc.adopt(
-            products[pid]["prep"], winner.payload, sweeps_run=winner.iterations)
+        # The winner's handle IS the served model; free the loser's, and
+        # the prepared corpus once no more sellers will fit it.
+        products[pid]["handle_id"] = int(winner.payload)
+        release_losers(client, rec.result)
+        client.release_corpus(products[pid]["prep"].corpus_id)
         print(f" product {pid}: winner seller {winner.seller_id} "
               f"perplexity {winner.perplexity:.1f} "
               f"verified={rec.result.verified} "
               f"({time.time()-t0:.1f}s wall, {rec.tickets_awarded} tickets)")
 
     print("\n=== phase 2: new reviews -> incremental updates (§3.2) ===")
-    handle = products[0]["handle"]
+    handle_id = products[0]["handle_id"]
     for round_i in range(3):
         corp_new = reviews.generate(reviews.SyntheticSpec(
             num_reviews=args.new_reviews, vocab_size=args.vocab,
             num_topics=args.topics - 2, seed=100 + round_i))
         t0 = time.time()
-        resp = svc.update(handle, corp_new.reviews, seed=round_i)
+        resp = client.update(handle_id, corp_new.reviews, seed=round_i)
         print(f" update {round_i}: +{resp.num_new_reviews} reviews, "
               f"{resp.kind}, perplexity {resp.perplexity:.1f} "
               f"({time.time()-t0:.1f}s)")
 
-    print("\n=== phase 3: serve the model view (§4.2) ===")
-    resp = svc.view(handle, max_topics=5)
-    assert resp.valid, "Chital validation stage failed"
-    print(f" streamed view: {len(resp.view.topics)} topics, "
-          f"{resp.payload_bytes} bytes")
-    for t in resp.view.topics[:3]:
+    print("\n=== phase 3: serve model views, full then delta (§4.2) ===")
+    full = client.sync_view(handle_id, max_topics=5)
+    assert full.valid, "Chital validation stage failed"
+    print(f" full sync:  {len(full.topics)} topics, "
+          f"{full.payload_bytes} bytes (cursor {full.cursor})")
+    unchanged = client.sync_view(handle_id, max_topics=5)
+    print(f" delta sync (unchanged model): {len(unchanged.topics)} topics, "
+          f"{unchanged.payload_bytes} bytes")
+    corp_new = reviews.generate(reviews.SyntheticSpec(
+        num_reviews=max(4, args.new_reviews // 4), vocab_size=args.vocab,
+        num_topics=args.topics - 2, seed=999))
+    client.update(handle_id, corp_new.reviews, seed=7)
+    delta = client.sync_view(handle_id, max_topics=5)
+    print(f" delta sync (after small update): {len(delta.topics)} of "
+          f"{len(delta.topic_ids)} topics, {delta.payload_bytes} bytes "
+          f"({delta.payload_bytes / max(full.payload_bytes, 1):.2f}x full)")
+    for t in full.topics[:3]:
         print(f"  topic {t.topic_id}: w={t.probability:.2f} "
               f"rating={t.expected_rating:.1f} words={t.top_words[:6]}")
-    top = svc.top_reviews(handle, resp.topic_ids[0], n=3)
+    top = client.top_reviews(handle_id, full.topic_ids[0], n=3)
     print(f"  top reviews for topic {top.topic_id}: {top.review_ids}")
     print("\nmarketplace after run:",
           f"{len(mp.history)} tasks,",
           f"verification rate {mp.verification_rate():.1%},",
           f"mean time saved {mp.mean_time_saved():.2f}s")
-    return svc, products
+    return client, products
 
 
 if __name__ == "__main__":

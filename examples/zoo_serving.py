@@ -1,10 +1,14 @@
-"""Batched-request serving of the architecture zoo (deliverable b's
-"serve a small model with batched requests" driver).
+"""Batched-request serving of both zoos through the wave schedulers.
 
-Serves reduced variants of three assigned architectures through the
-length-bucketed engine and reports prefill/decode throughput.
+Two workloads, one scheduling abstraction (`serving.WaveScheduler`):
+
+  * the transformer architecture zoo through the length-bucketed `Engine`
+    (prefill/decode throughput);
+  * a topic-model "product zoo" through `TopicEngine`, whose every fit and
+    view crosses the versioned Vedalia client/server protocol.
 
   PYTHONPATH=src python examples/zoo_serving.py [--arch qwen2-7b]
+  PYTHONPATH=src python examples/zoo_serving.py --topics-only
 """
 
 import argparse
@@ -40,15 +44,52 @@ def serve_one(name: str, n_requests: int = 6, prompt_len: int = 32,
     return results
 
 
+def serve_topic_products(n_products: int = 3, n_reviews: int = 40,
+                         vocab: int = 150):
+    """The topic-model zoo: batched product fits over the wire protocol."""
+    from repro.api.service import FitRequest
+    from repro.data import reviews
+    from repro.serving import TopicEngine
+
+    eng = TopicEngine(max_batch=2, backend="jnp", num_sweeps=6)
+    info = eng.client.hello()
+    print(f" protocol v{info.protocol_version}, server backends: "
+          f"{', '.join(info.backends)}")
+    for uid in range(n_products):
+        corp = reviews.generate(reviews.SyntheticSpec(
+            num_reviews=n_reviews, vocab_size=vocab, num_topics=4,
+            seed=uid))
+        eng.submit(FitRequest(
+            uid=uid, reviews=corp.reviews, num_topics=6 if uid % 2 else 8,
+            base_vocab=vocab, top_n=6))
+    t0 = time.time()
+    results = eng.run()
+    wall = time.time() - t0
+    for r in sorted(results, key=lambda r: r.uid):
+        print(f" product {r.uid}: handle {r.handle_id} "
+              f"({r.fit.num_topics} topics via {r.fit.backend}), "
+              f"perplexity {r.perplexity:.1f}, view "
+              f"{len(r.view.topics)} topics / {r.view.payload_bytes} bytes "
+              f"in {r.fit_s:.1f}s")
+    print(f" {len(results)} products in {wall:.1f}s "
+          f"({len(results) / wall:.2f} products/s)")
+    return results
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="")
+    ap.add_argument("--topics-only", action="store_true",
+                    help="skip the transformer zoo")
     args = ap.parse_args()
-    names = [args.arch] if args.arch else [
-        "qwen2-7b", "gemma2-9b", "rwkv6-1.6b"]
-    print("=== zoo serving (reduced configs, CPU) ===")
-    for name in names:
-        serve_one(name)
+    if not args.topics_only:
+        names = [args.arch] if args.arch else [
+            "qwen2-7b", "gemma2-9b", "rwkv6-1.6b"]
+        print("=== zoo serving (reduced configs, CPU) ===")
+        for name in names:
+            serve_one(name)
+    print("=== topic-product zoo (Vedalia protocol) ===")
+    serve_topic_products()
 
 
 if __name__ == "__main__":

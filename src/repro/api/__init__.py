@@ -1,16 +1,26 @@
-"""`repro.api` — the public service layer for topic-model inference.
+"""`repro.api` — the public client/server protocol for topic-model inference.
 
-    from repro.api import VedaliaService
+The device-facing API is the versioned wire protocol:
 
-    svc = VedaliaService(backend="pallas")
-    handle = svc.fit(reviews, num_topics=12)
-    svc.update(handle, new_reviews)
-    resp = svc.view(handle, top_n=8)     # resp.payload streams to a device
+    from repro.api import VedaliaClient
+
+    client = VedaliaClient(backend="pallas")      # in-process server
+    res = client.fit(reviews, num_topics=12)      # -> FitResult(handle_id)
+    client.update(res.handle_id, new_reviews)
+    sync = client.sync_view(res.handle_id)        # full view + cursor
+    sync = client.sync_view(res.handle_id)        # delta: only drifted topics
+
+`VedaliaService` remains the in-process engine the server wraps (and a
+public facade for embedded use).
 
 Submodules:
   codec     shared fixed-point (w_bits) state encode/decode
-  backends  `Sampler` protocol + jnp / pallas / distributed registry
+  backends  `Sampler` protocol + capability-aware registry
+            (jnp / pallas / distributed / alias / sparse, `auto` selector)
   service   `VedaliaService` facade + typed request/response dataclasses
+  protocol  versioned JSON envelopes (requests, responses, tensor codec)
+  server    `VedaliaServer`: sessions, view cursors, wire dispatch
+  client    `VedaliaClient`: thin typed client over any string transport
 
 Exports resolve lazily (PEP 562) so that low-level modules (`core.gibbs`,
 `kernels.lda_gibbs.ops`) can import `repro.api.codec` without dragging the
@@ -24,9 +34,12 @@ import importlib
 _EXPORTS = {
     # backends
     "Sampler": "repro.api.backends",
+    "SamplerCapabilities": "repro.api.backends",
     "available_backends": "repro.api.backends",
+    "backend_capabilities": "repro.api.backends",
     "get_backend": "repro.api.backends",
     "register_backend": "repro.api.backends",
+    "select_backend": "repro.api.backends",
     # service
     "FitRequest": "repro.api.service",
     "ModelHandle": "repro.api.service",
@@ -34,8 +47,21 @@ _EXPORTS = {
     "UpdateResponse": "repro.api.service",
     "VedaliaService": "repro.api.service",
     "ViewResponse": "repro.api.service",
-    # codec (module-level re-export)
+    # protocol / server / client
+    "PROTOCOL_VERSION": "repro.api.protocol",
+    "ProtocolError": "repro.api.protocol",
+    "RemoteError": "repro.api.protocol",
+    "VedaliaServer": "repro.api.server",
+    "VedaliaClient": "repro.api.client",
+    "FitResult": "repro.api.client",
+    "PrepareResult": "repro.api.client",
+    "ServerInfo": "repro.api.client",
+    "UpdateResult": "repro.api.client",
+    "ViewResult": "repro.api.client",
+    "TopReviewsResult": "repro.api.client",
+    # module-level re-exports
     "codec": "repro.api.codec",
+    "protocol": "repro.api.protocol",
 }
 
 __all__ = sorted(_EXPORTS)

@@ -10,10 +10,18 @@ implementation is chosen by name:
                mode on CPU — the production TPU path
   distributed  client/server sharded sweep (`core.distributed`) — the
                paper's "model cache and updating server" on a pod
+  alias        AliasLDA (Li et al., 2014a) stale-proposal + parallel-MH
+               sweep (`core.alias`) — proposal-based fast sampler
+  sparse       SparseLDA (Yao et al., 2009) sequential s/r/q-bucket sweep
+               (`core.sparse`) — the paper's phone-side reference
 
 All backends speak *stored* `LDAState` at the boundary (fixed point when
 ``cfg.w_bits`` is set — see `repro.api.codec`) so they are interchangeable
 mid-run: a model fit by one backend can be updated by another.
+
+Every backend carries a :class:`SamplerCapabilities` record; `"auto"` is a
+pseudo-backend resolved by :func:`select_backend` from the workload (corpus
+size, fit-vs-update, device kind) against those capabilities.
 
 Register additional backends with :func:`register_backend`; a backend only
 needs `sweep(cfg, state, corpus, key)` — `run` has a default loop. The
@@ -23,12 +31,39 @@ keeps the legacy call sites working unchanged.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional, Protocol, runtime_checkable
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.codec import decode_state, encode_state
 from repro.core.types import Corpus, LDAConfig, LDAState, init_state
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerCapabilities:
+    """What a backend can do — the routing metadata of the registry.
+
+    warm_start:     accepts a prior `LDAState` and continues the chain
+                    (required by `refine` and incremental `update`).
+    weighted:       honors fractional per-token weights (RLDA's ψ·c), not
+                    just unit counts.
+    device_kind:    the device class the schedule is designed for:
+                    "tpu" (dense parallel sweeps), "pod" (sharded
+                    multi-host), "phone" (sequential, cache-friendly).
+    proposal_based: draws from a stale proposal corrected by MH rather
+                    than the exact conditional (affects mixing per sweep).
+    """
+
+    warm_start: bool = True
+    weighted: bool = True
+    device_kind: str = "tpu"
+    proposal_based: bool = False
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
 
 
 @runtime_checkable
@@ -51,12 +86,19 @@ class Sampler(Protocol):
 
 _REGISTRY: dict[str, type] = {}
 
+#: Pseudo-backend name resolved per workload by :func:`select_backend`.
+AUTO = "auto"
 
-def register_backend(name: str):
+
+def register_backend(name: str, capabilities: Optional[SamplerCapabilities] = None):
     """Class decorator: make `get_backend(name)` construct this sampler."""
 
     def deco(cls):
         cls.name = name
+        if capabilities is not None:
+            cls.capabilities = capabilities
+        elif not hasattr(cls, "capabilities"):
+            cls.capabilities = SamplerCapabilities()
         _REGISTRY[name] = cls
         return cls
 
@@ -65,6 +107,67 @@ def register_backend(name: str):
 
 def available_backends() -> list[str]:
     return sorted(_REGISTRY)
+
+
+def backend_capabilities(name: Optional[str] = None):
+    """Capabilities of one backend, or `{name: SamplerCapabilities}` for all."""
+    if name is not None:
+        try:
+            return _REGISTRY[name].capabilities
+        except KeyError:
+            raise KeyError(
+                f"unknown sampler backend {name!r}; "
+                f"available: {available_backends()}"
+            ) from None
+    return {n: cls.capabilities for n, cls in sorted(_REGISTRY.items())}
+
+
+# Workload-size boundary above which the O(k_d)-per-token proposal sampler
+# (alias) beats the dense parallel sweep's O(k) score tile.
+_LARGE_CORPUS_TOKENS = 100_000
+
+
+def select_backend(
+    *,
+    num_tokens: int = 0,
+    task: str = "fit",
+    device_kind: Optional[str] = None,
+    available: Optional[list[str]] = None,
+) -> str:
+    """Resolve the `"auto"` pseudo-backend for a workload.
+
+    Routing order (first match wins):
+      1. an explicit `device_kind` picks the backend built for that device
+         class ("phone" -> sparse, "pod" -> distributed, "tpu" -> jnp);
+      2. updates go to the oracle sweep — incremental resampling needs
+         exact-conditional warm-start semantics, not MH proposals;
+      3. large fits go to the proposal sampler (`alias`), whose per-token
+         cost is independent of K;
+      4. everything else gets the jnp oracle.
+    """
+    names = set(available if available is not None else available_backends())
+
+    def pick(*candidates: str) -> str:
+        for c in candidates:
+            if c in names:
+                return c
+        return "jnp"
+
+    if device_kind is not None:
+        preferred = {"phone": "sparse", "pod": "distributed", "tpu": "jnp"}
+        want = preferred.get(device_kind)
+        if want in names:
+            return want
+        for n in sorted(names):  # any backend built for that device class
+            cls = _REGISTRY.get(n)  # `available` may list remote-only names
+            if cls is not None and cls.capabilities.device_kind == device_kind:
+                return n
+        return pick("jnp")
+    if task == "update":
+        return pick("jnp")
+    if num_tokens >= _LARGE_CORPUS_TOKENS:
+        return pick("alias", "jnp")
+    return pick("jnp")
 
 
 def get_backend(name: str = "jnp", **opts) -> Sampler:
@@ -96,7 +199,7 @@ class _BaseSampler:
         return f"{type(self).__name__}(name={getattr(self, 'name', '?')!r})"
 
 
-@register_backend("jnp")
+@register_backend("jnp", SamplerCapabilities(device_kind="tpu"))
 class JnpSampler(_BaseSampler):
     """The pure-jnp blocked parallel sweep — system path and parity oracle."""
 
@@ -116,7 +219,7 @@ class JnpSampler(_BaseSampler):
                          block=self.block)
 
 
-@register_backend("pallas")
+@register_backend("pallas", SamplerCapabilities(device_kind="tpu"))
 class PallasSampler(_BaseSampler):
     """The fused Pallas score+Gumbel-max kernel (interpret mode on CPU)."""
 
@@ -129,7 +232,7 @@ class PallasSampler(_BaseSampler):
         return kops.sweep(cfg, state, corpus, key, self.token_block)
 
 
-@register_backend("distributed")
+@register_backend("distributed", SamplerCapabilities(device_kind="pod"))
 class DistributedSampler(_BaseSampler):
     """Client/server sharded sweep (`core.distributed`) on a device mesh.
 
@@ -179,3 +282,78 @@ class DistributedSampler(_BaseSampler):
                 real.n_dt, real.n_wt, key)
         return encode_state(
             cfg, LDAState(z=z, n_dt=n_dt, n_wt=n_wt, n_t=n_t))
+
+
+@register_backend(
+    "alias",
+    SamplerCapabilities(device_kind="tpu", proposal_based=True),
+)
+class AliasSampler(_BaseSampler):
+    """AliasLDA sweep-parallel MH (`core.alias.mh_sweep`).
+
+    Stale per-word alias proposals + parallel Metropolis–Hastings; the
+    per-token cost is O(k_d), independent of K, so this is the large-corpus
+    fit path. Counts cross the boundary in stored units; `mh_sweep` runs in
+    real units and rebuilds counts by scatter-add.
+    """
+
+    def __init__(self, mh_steps: int = 4):
+        self.mh_steps = mh_steps
+
+    def sweep(self, cfg, state, corpus, key):
+        from repro.core import alias
+
+        real = decode_state(cfg, state)
+        return encode_state(
+            cfg, alias.mh_sweep(cfg, real, corpus, key, self.mh_steps))
+
+
+@register_backend(
+    "sparse",
+    SamplerCapabilities(device_kind="phone"),
+)
+class SparseSampler(_BaseSampler):
+    """SparseLDA sequential s/r/q-bucket sweep (`core.sparse`).
+
+    The paper's phone-side sampler as a first-class backend: exact
+    sequential collapsed Gibbs in numpy, O(k_d + k_w) per token. Slow on
+    large corpora by design — it models the mobile device, and is the
+    `device_kind="phone"` route of the `auto` selector.
+    """
+
+    def __init__(self, dense: bool = False):
+        self.dense = dense  # True => the O(k) MALLET-style baseline
+
+    def _sequential(self, cfg, state, corpus, key, num_sweeps):
+        from repro.core import sparse
+        from repro.core.codec import decode_counts_np, rebuild_state
+
+        cls = sparse.DenseGibbsSampler if self.dense else sparse.SparseLDASampler
+        # Stored counts cross the boundary decoded, not rebuilt from
+        # (z, weights): for incremental updates the corpus freezes old
+        # tokens by zeroing their weights while their mass must keep
+        # participating in the conditional. The numpy seed derives from the
+        # jax key so backends are comparable from identical seeds.
+        seed = int(jax.random.randint(key, (), 0, np.iinfo(np.int32).max))
+        s = cls(
+            cfg,
+            np.asarray(corpus.docs),
+            np.asarray(corpus.words),
+            np.asarray(state.z),
+            weights=np.asarray(corpus.weights, np.float64),
+            seed=seed,
+            counts=decode_counts_np(cfg, state),
+        )
+        s.run(num_sweeps)
+        return rebuild_state(cfg, corpus, jnp.asarray(s.z, jnp.int32))
+
+    def sweep(self, cfg, state, corpus, key):
+        return self._sequential(cfg, state, corpus, key, 1)
+
+    def run(self, cfg, corpus, key, num_sweeps, state=None):
+        if state is None:
+            key, sub = jax.random.split(key)
+            state = encode_state(cfg, init_state(cfg, corpus, sub))
+        # One sampler instance for the whole run: counts and bucket caches
+        # are built once, not once per sweep.
+        return self._sequential(cfg, state, corpus, key, num_sweeps)

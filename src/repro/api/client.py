@@ -1,0 +1,389 @@
+"""`VedaliaClient` — the thin device-side end of the Vedalia protocol.
+
+The client owns no model state: it turns method calls into request
+envelopes, hands them to a *transport* (`str -> str`), and parses the
+response envelopes back into small typed results. The default transport is
+in-process — a `VedaliaServer` constructed (or passed) right here — but
+anything that moves strings (a socket, an HTTP POST) slots in unchanged:
+
+    client = VedaliaClient(backend="pallas")          # in-process server
+    client = VedaliaClient(transport=post_to_server)  # the same API, remote
+
+Bandwidth-frugal sync (§4.2): `sync_view` keeps one cursor per handle, so
+the first call streams the full view and every later call streams only the
+topics that drifted since — `ViewResult.payload_bytes` is the actual wire
+size either way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+from repro.api import protocol
+from repro.api.server import VedaliaServer
+from repro.core.rlda import Review
+from repro.core.views import ModelView, TopicView
+
+Transport = Callable[[str], str]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerInfo:
+    protocol_version: int
+    backends: list[str]
+    capabilities: dict[str, dict]
+    default_backend: str
+
+
+@dataclasses.dataclass(frozen=True)
+class PrepareResult:
+    corpus_id: int
+    num_reviews: int
+    num_tokens: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FitResult:
+    handle_id: int
+    backend: str
+    num_topics: int
+    num_reviews: int
+    sweeps_run: int
+    perplexity: float
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateResult:
+    handle_id: int
+    num_new_reviews: int
+    kind: str  # "incremental" | "full_recompute"
+    perplexity: float
+    backend: str
+
+
+@dataclasses.dataclass(frozen=True)
+class ViewResult:
+    """One streamed (full or delta) model view.
+
+    `topics` holds only the transmitted topics: all current core-set topics
+    on a full sync, the drifted ones on a delta. `topic_ids` always lists
+    the current core set; `removed_topic_ids` tells the device which
+    locally-cached topics to drop.
+    """
+
+    handle_id: int
+    topic_ids: list[int]
+    topics: list[TopicView]
+    removed_topic_ids: list[int]
+    delta: bool
+    resync: bool
+    cursor: Optional[str]
+    valid: bool
+    payload: str  # the raw response envelope — the bytes on the wire
+
+    @property
+    def payload_bytes(self) -> int:
+        return len(self.payload)
+
+    @property
+    def view(self) -> ModelView:
+        return ModelView(topics=self.topics)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopReviewsResult:
+    handle_id: int
+    topic_id: int
+    review_ids: list[int]
+
+
+class VedaliaClient:
+    """Speak the versioned Vedalia protocol through any string transport."""
+
+    def __init__(
+        self,
+        transport: Optional[Transport] = None,
+        *,
+        server: Optional[VedaliaServer] = None,
+        **server_kwargs,
+    ):
+        if transport is None:
+            server = server or VedaliaServer(**server_kwargs)
+            transport = server.handle_raw
+        elif server_kwargs:
+            raise ValueError(
+                "server_kwargs only apply to the in-process transport")
+        self.server = server  # None for remote transports
+        self._transport = transport
+        self.session_id: Optional[str] = None
+        self.cursors: dict[int, str] = {}  # handle_id -> last synced cursor
+
+    # -- plumbing -----------------------------------------------------------
+
+    def _call(self, kind: str, payload: Optional[dict] = None) -> dict:
+        raw = self._transport(protocol.make_request(kind, payload))
+        return protocol.parse_response(raw, expect_kind=kind)
+
+    def _ensure_session(self) -> str:
+        if self.session_id is None:
+            self.session_id = self._call("open_session")["session_id"]
+        return self.session_id
+
+    # -- handshake ----------------------------------------------------------
+
+    def hello(self) -> ServerInfo:
+        p = self._call("hello")
+        return ServerInfo(
+            protocol_version=p["protocol_version"],
+            backends=list(p["backends"]),
+            capabilities=dict(p["capabilities"]),
+            default_backend=p["default_backend"],
+        )
+
+    # -- model lifecycle -----------------------------------------------------
+
+    def prepare(
+        self,
+        reviews: Sequence[Review],
+        *,
+        base_vocab: int,
+        num_topics: int = 12,
+        alpha: float = 0.1,
+        beta: float = 0.01,
+        w_bits: Optional[int] = 8,
+        seed: int = 0,
+    ) -> PrepareResult:
+        """Server-side §4.3 preparation; the returned corpus_id lets
+        sellers fit by reference instead of re-shipping the tokens."""
+        p = self._call("prepare", {
+            "reviews": protocol.encode_reviews(reviews),
+            "base_vocab": base_vocab,
+            "num_topics": num_topics,
+            "alpha": alpha,
+            "beta": beta,
+            "w_bits": w_bits,
+            "seed": seed,
+        })
+        return PrepareResult(
+            corpus_id=int(p["corpus_id"]),
+            num_reviews=int(p["num_reviews"]),
+            num_tokens=int(p["num_tokens"]),
+        )
+
+    def _fit_result(self, p: dict) -> FitResult:
+        return FitResult(
+            handle_id=int(p["handle_id"]),
+            backend=p["backend"],
+            num_topics=int(p["num_topics"]),
+            num_reviews=int(p["num_reviews"]),
+            sweeps_run=int(p["sweeps_run"]),
+            perplexity=float(p["perplexity"]),
+        )
+
+    def fit(
+        self,
+        reviews: Sequence[Review],
+        *,
+        num_topics: int = 12,
+        base_vocab: Optional[int] = None,
+        alpha: float = 0.1,
+        beta: float = 0.01,
+        w_bits: Optional[int] = 8,
+        backend: Optional[str] = None,
+        num_sweeps: Optional[int] = None,
+        seed: Optional[int] = None,
+        device_kind: Optional[str] = None,
+    ) -> FitResult:
+        return self._fit_result(self._call("fit", {
+            "reviews": protocol.encode_reviews(reviews),
+            "num_topics": num_topics,
+            "base_vocab": base_vocab,
+            "alpha": alpha,
+            "beta": beta,
+            "w_bits": w_bits,
+            "backend": backend,
+            "num_sweeps": num_sweeps,
+            "seed": seed,
+            "device_kind": device_kind,
+        }))
+
+    def fit_prepared(
+        self,
+        corpus_id: int,
+        *,
+        backend: Optional[str] = None,
+        num_sweeps: Optional[int] = None,
+        seed: Optional[int] = None,
+        device_kind: Optional[str] = None,
+    ) -> FitResult:
+        return self._fit_result(self._call("fit_prepared", {
+            "corpus_id": corpus_id,
+            "backend": backend,
+            "num_sweeps": num_sweeps,
+            "seed": seed,
+            "device_kind": device_kind,
+        }))
+
+    def adopt(
+        self,
+        corpus_id: int,
+        state,
+        *,
+        backend: Optional[str] = None,
+        sweeps_run: int = 0,
+    ) -> FitResult:
+        """Upload an externally-fitted `LDAState` (in *stored* units — fixed
+        point when the corpus was prepared with w_bits) against a prepared
+        corpus; the server wraps it into a served handle."""
+        return self._fit_result(self._call("adopt", {
+            "corpus_id": corpus_id,
+            "state": {
+                "z": protocol.encode_array(state.z),
+                "n_dt": protocol.encode_array(state.n_dt),
+                "n_wt": protocol.encode_array(state.n_wt),
+                "n_t": protocol.encode_array(state.n_t),
+            },
+            "backend": backend,
+            "sweeps_run": sweeps_run,
+        }))
+
+    def refine(
+        self,
+        handle_id: int,
+        num_sweeps: int,
+        *,
+        backend: Optional[str] = None,
+        seed: Optional[int] = None,
+    ) -> FitResult:
+        return self._fit_result(self._call("refine", {
+            "handle_id": handle_id,
+            "num_sweeps": num_sweeps,
+            "backend": backend,
+            "seed": seed,
+        }))
+
+    def update(
+        self,
+        handle_id: int,
+        reviews: Sequence[Review],
+        *,
+        update_sweeps: Optional[int] = None,
+        seed: Optional[int] = None,
+        backend: Optional[str] = None,
+    ) -> UpdateResult:
+        p = self._call("update", {
+            "handle_id": handle_id,
+            "reviews": protocol.encode_reviews(reviews),
+            "update_sweeps": update_sweeps,
+            "seed": seed,
+            "backend": backend,
+        })
+        return UpdateResult(
+            handle_id=int(p["handle_id"]),
+            num_new_reviews=int(p["num_new_reviews"]),
+            kind=p["kind"],
+            perplexity=float(p["perplexity"]),
+            backend=p["backend"],
+        )
+
+    # -- serving -------------------------------------------------------------
+
+    def view(
+        self,
+        handle_id: int,
+        *,
+        since: Optional[str] = None,
+        top_n: int = 10,
+        topics: Optional[Sequence[int]] = None,
+        mass_coverage: float = 0.9,
+        max_topics: Optional[int] = None,
+        rel_mass_tol: Optional[float] = None,
+        weight_tol: Optional[float] = None,
+    ) -> ViewResult:
+        """One view sync. `since=None` -> full view; `since=<cursor>` ->
+        delta against that cursor. Either way the response carries the next
+        cursor (when a session exists)."""
+        payload = {
+            "handle_id": handle_id,
+            "session_id": self._ensure_session(),
+            "since": since,
+            "top_n": top_n,
+            "topics": list(topics) if topics is not None else None,
+            "mass_coverage": mass_coverage,
+            "max_topics": max_topics,
+        }
+        if rel_mass_tol is not None:
+            payload["rel_mass_tol"] = rel_mass_tol
+        if weight_tol is not None:
+            payload["weight_tol"] = weight_tol
+        raw = self._transport(protocol.make_request("view", payload))
+        try:
+            p = protocol.parse_response(raw, expect_kind="view")
+        except protocol.RemoteError as e:
+            # A restarted/evicted server no longer knows our session: open
+            # a fresh one and resend. The lost cursor degrades this (and
+            # any later stale-cursor) sync to a full resync, never an error.
+            if e.code != "not_found" or "session_id" not in str(e):
+                raise
+            self.session_id = None
+            payload["session_id"] = self._ensure_session()
+            raw = self._transport(protocol.make_request("view", payload))
+            p = protocol.parse_response(raw, expect_kind="view")
+        result = ViewResult(
+            handle_id=int(p["handle_id"]),
+            topic_ids=[int(t) for t in p["topic_ids"]],
+            topics=[TopicView(**d) for d in p["topics"]],
+            removed_topic_ids=[int(t) for t in p["removed_topic_ids"]],
+            delta=bool(p["delta"]),
+            resync=bool(p["resync"]),
+            cursor=p.get("cursor"),
+            valid=bool(p["valid"]),
+            payload=raw,
+        )
+        if result.cursor is not None:
+            self.cursors[result.handle_id] = result.cursor
+        return result
+
+    def sync_view(self, handle_id: int, **kwargs) -> ViewResult:
+        """Cursor-tracking view: full on first call, delta afterwards."""
+        return self.view(
+            handle_id, since=self.cursors.get(handle_id), **kwargs)
+
+    def top_reviews(
+        self, handle_id: int, topic_id: int, n: int = 5
+    ) -> TopReviewsResult:
+        p = self._call("top_reviews", {
+            "handle_id": handle_id, "topic_id": topic_id, "n": n})
+        return TopReviewsResult(
+            handle_id=int(p["handle_id"]),
+            topic_id=int(p["topic_id"]),
+            review_ids=[int(d) for d in p["review_ids"]],
+        )
+
+    def perplexity(self, handle_id: int) -> float:
+        return float(self._call(
+            "perplexity", {"handle_id": handle_id})["perplexity"])
+
+    def release(self, handle_id: int) -> None:
+        self._call("release", {"handle_id": handle_id})
+        self.cursors.pop(handle_id, None)
+
+    def release_corpus(self, corpus_id: int) -> None:
+        """Free a server-side prepared corpus (live handles are unaffected —
+        they hold their own reference)."""
+        self._call("release_corpus", {"corpus_id": corpus_id})
+
+    def close(self) -> None:
+        """Close the server-side session (cursors die with it). A session
+        the server already evicted counts as closed."""
+        if self.session_id is not None:
+            try:
+                self._call("close_session",
+                           {"session_id": self.session_id})
+            except protocol.RemoteError as e:
+                if e.code != "not_found":
+                    raise
+            finally:
+                self.session_id = None
+                self.cursors.clear()

@@ -1,0 +1,230 @@
+"""Wire-level Vedalia protocol: versioned JSON envelopes.
+
+Everything a device exchanges with the model server is one JSON envelope:
+
+    request   {"protocol_version": 1, "kind": "<verb>", "payload": {...}}
+    response  {"protocol_version": 1, "kind": "<verb>", "ok": true,
+               "payload": {...}}
+    error     {"protocol_version": 1, "kind": "<verb>", "ok": false,
+               "error": {"code": "...", "message": "..."}}
+
+The same envelopes drive the in-process transport today and a socket/HTTP
+transport later — `VedaliaServer.handle_raw` is `str -> str`, nothing else.
+Binary tensors (the `adopt` verb's externally-fitted model states) ride as
+base64 raw bytes with dtype and shape (`encode_array`; not to be confused
+with `repro.api.codec`, the fixed-point count codec); review records are
+plain dicts with token lists.
+
+Version discipline: both sides stamp `PROTOCOL_VERSION`; the server rejects
+any other version with code ``version_mismatch`` (the client surfaces that
+as :class:`ProtocolError`). Bump the version when an envelope's schema
+changes shape; additive payload fields do not require a bump.
+"""
+
+from __future__ import annotations
+
+import base64
+import json
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.rlda import Review
+
+PROTOCOL_VERSION = 1
+
+#: The request verbs a server must answer. `hello` is the capability
+#: handshake; everything else maps onto the service layer.
+KINDS = (
+    "hello",
+    "open_session",
+    "prepare",
+    "fit",
+    "fit_prepared",
+    "refine",
+    "update",
+    "view",
+    "top_reviews",
+    "adopt",
+    "perplexity",
+    "release",
+    "release_corpus",
+    "close_session",
+)
+
+
+class ProtocolError(ValueError):
+    """The envelope itself is malformed or from an incompatible version.
+
+    `code` is the wire error code a server answers with ("bad_request"
+    unless the constructor says otherwise, e.g. "version_mismatch").
+    """
+
+    def __init__(self, message: str, code: str = "bad_request"):
+        super().__init__(message)
+        self.code = code
+
+
+class NotFound(KeyError):
+    """A referenced server object (handle, corpus, session) does not exist.
+
+    Subclasses KeyError so embedded (non-wire) callers of the service keep
+    their existing `except KeyError` behavior; the server maps it to the
+    "not_found" wire code.
+    """
+
+    def __str__(self):  # KeyError.__str__ repr-quotes the message
+        return self.args[0] if self.args else ""
+
+
+class RemoteError(RuntimeError):
+    """The server answered with ok=false; carries the wire error code."""
+
+    def __init__(self, code: str, message: str, kind: Optional[str] = None):
+        super().__init__(f"[{code}] {message}")
+        self.code = code
+        self.kind = kind
+
+
+# -- tensor / record codecs --------------------------------------------------
+
+
+def encode_array(x) -> dict:
+    """ndarray -> {"dtype", "shape", "b64"} (raw little-endian bytes)."""
+    a = np.ascontiguousarray(np.asarray(x))
+    return {
+        "dtype": a.dtype.str,
+        "shape": list(a.shape),
+        "b64": base64.b64encode(a.tobytes()).decode("ascii"),
+    }
+
+
+def decode_array(d: dict) -> np.ndarray:
+    try:
+        buf = base64.b64decode(d["b64"])
+        return np.frombuffer(buf, dtype=np.dtype(d["dtype"])).reshape(
+            d["shape"]).copy()
+    except (KeyError, TypeError, ValueError) as e:
+        raise ProtocolError(f"bad array payload: {e}") from None
+
+
+def encode_review(r: Review) -> dict:
+    return {
+        "tokens": [int(t) for t in np.asarray(r.tokens).ravel()],
+        "rating": float(r.rating),
+        "user": int(r.user),
+        "helpful": int(r.helpful),
+        "unhelpful": int(r.unhelpful),
+        "writing_quality": float(r.writing_quality),
+    }
+
+
+def decode_review(d: dict) -> Review:
+    try:
+        return Review(
+            tokens=np.asarray(d["tokens"], np.int32),
+            rating=float(d["rating"]),
+            user=int(d["user"]),
+            helpful=int(d["helpful"]),
+            unhelpful=int(d["unhelpful"]),
+            writing_quality=float(d["writing_quality"]),
+        )
+    except (KeyError, TypeError, ValueError) as e:
+        raise ProtocolError(f"bad review payload: {e}") from None
+
+
+def encode_reviews(reviews) -> list[dict]:
+    return [encode_review(r) for r in reviews]
+
+
+def decode_reviews(ds) -> list[Review]:
+    return [decode_review(d) for d in ds]
+
+
+# -- envelopes ---------------------------------------------------------------
+
+
+def make_request(kind: str, payload: Optional[dict] = None) -> str:
+    if kind not in KINDS:
+        raise ProtocolError(f"unknown request kind {kind!r}; kinds: {KINDS}")
+    return json.dumps({
+        "protocol_version": PROTOCOL_VERSION,
+        "kind": kind,
+        "payload": payload or {},
+    })
+
+
+def parse_request(raw: str) -> tuple[str, dict]:
+    """Server side: raw request -> (kind, payload); raises ProtocolError."""
+    try:
+        env = json.loads(raw)
+    except (TypeError, json.JSONDecodeError) as e:
+        raise ProtocolError(f"request is not valid JSON: {e}") from None
+    if not isinstance(env, dict):
+        raise ProtocolError("request envelope must be a JSON object")
+    version = env.get("protocol_version")
+    if version != PROTOCOL_VERSION:
+        raise ProtocolError(
+            f"protocol version mismatch: got {version!r}, "
+            f"server speaks {PROTOCOL_VERSION}",
+            code="version_mismatch")
+    kind = env.get("kind")
+    if kind not in KINDS:
+        raise ProtocolError(
+            f"unknown request kind {kind!r}; kinds: {KINDS}")
+    payload = env.get("payload", {})
+    if not isinstance(payload, dict):
+        raise ProtocolError("request payload must be a JSON object")
+    return kind, payload
+
+
+def make_response(kind: str, payload: dict) -> str:
+    return json.dumps({
+        "protocol_version": PROTOCOL_VERSION,
+        "kind": kind,
+        "ok": True,
+        "payload": payload,
+    })
+
+
+def make_error(kind: Optional[str], code: str, message: str) -> str:
+    return json.dumps({
+        "protocol_version": PROTOCOL_VERSION,
+        "kind": kind,
+        "ok": False,
+        "error": {"code": code, "message": message},
+    })
+
+
+def parse_response(raw: str, expect_kind: Optional[str] = None) -> dict:
+    """Client side: raw response -> payload dict.
+
+    Raises RemoteError for ok=false answers and ProtocolError for envelopes
+    the client cannot even interpret (bad JSON, wrong version, wrong kind).
+    """
+    try:
+        env = json.loads(raw)
+    except (TypeError, json.JSONDecodeError) as e:
+        raise ProtocolError(f"response is not valid JSON: {e}") from None
+    if not isinstance(env, dict):
+        raise ProtocolError("response envelope must be a JSON object")
+    if env.get("protocol_version") != PROTOCOL_VERSION:
+        raise ProtocolError(
+            f"protocol version mismatch: got "
+            f"{env.get('protocol_version')!r}, client speaks "
+            f"{PROTOCOL_VERSION}")
+    if not env.get("ok", False):
+        err = env.get("error") or {}
+        raise RemoteError(
+            code=str(err.get("code", "unknown")),
+            message=str(err.get("message", "unspecified server error")),
+            kind=env.get("kind"),
+        )
+    if expect_kind is not None and env.get("kind") != expect_kind:
+        raise ProtocolError(
+            f"response kind {env.get('kind')!r} does not match the "
+            f"request kind {expect_kind!r}")
+    payload = env.get("payload", {})
+    if not isinstance(payload, dict):
+        raise ProtocolError("response payload must be a JSON object")
+    return payload

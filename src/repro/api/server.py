@@ -1,0 +1,381 @@
+"""`VedaliaServer` — the wire-facing side of the Vedalia protocol.
+
+Owns the `VedaliaService` (handles, samplers), server-side prepared corpora
+(so sellers can fit a buyer's corpus by id instead of re-shipping tokens),
+and *sessions*: per-client state whose only job today is the **view
+cursor** (§4.2 bandwidth).
+
+Cursor lifecycle:
+
+    view(since=None)    -> full view; response carries a fresh `cursor`
+    view(since=cursor)  -> delta view: only topics whose mass or top words
+                           drifted beyond the thresholds are transmitted,
+                           plus the ids of topics that left the core set;
+                           the response carries the next cursor
+    unknown/expired cursor -> the server falls back to a full view and
+                           flags it with `resync: true`
+
+A cursor names a server-stored snapshot of per-topic signatures
+(`views.topic_signature`). Each session keeps a bounded number of live
+snapshots (oldest pruned), so a device that lags by many syncs simply
+resyncs with one full view.
+
+Transport is whatever moves strings: `handle_raw` is `str -> str` over the
+envelopes of `repro.api.protocol`. Errors never escape as exceptions — they
+come back as `ok=false` envelopes with a wire code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.api import backends as backends_mod
+from repro.api import protocol
+from repro.api.backends import available_backends, backend_capabilities
+from repro.api.service import ModelHandle, VedaliaService
+from repro.core import rlda, views as views_lib
+from repro.core.types import LDAState
+
+
+@dataclasses.dataclass
+class Session:
+    """Per-client server state: live view cursors, insertion-ordered.
+
+    Cursors are bound to the handle they were cut from — a cursor from one
+    handle is never accepted as a sync point for another — and bounded
+    *per handle*, so a client round-robin syncing many products never has
+    one product's cursors evicted by another's.
+    """
+
+    session_id: str
+    # handle_id -> {cursor id -> {topic_id: signature}}
+    cursors: dict[int, dict[str, dict[int, dict]]] = dataclasses.field(
+        default_factory=dict)
+
+    def store(self, handle_id: int, cursor_id: str,
+              sigs: dict[int, dict], limit: int):
+        per_handle = self.cursors.setdefault(handle_id, {})
+        per_handle[cursor_id] = sigs
+        while len(per_handle) > limit:
+            per_handle.pop(next(iter(per_handle)))
+
+    def lookup(self, handle_id: int, cursor_id: str):
+        return self.cursors.get(handle_id, {}).get(cursor_id)
+
+    def drop_handle(self, handle_id: int):
+        self.cursors.pop(handle_id, None)
+
+
+class VedaliaServer:
+    """Serve the Vedalia protocol over an in-process `VedaliaService`."""
+
+    def __init__(
+        self,
+        service: Optional[VedaliaService] = None,
+        *,
+        max_cursors_per_session: int = 8,
+        max_sessions: int = 1024,
+        rel_mass_tol: float = views_lib.REL_MASS_TOL,
+        weight_tol: float = views_lib.WEIGHT_TOL,
+        **service_kwargs,
+    ):
+        self.service = service or VedaliaService(**service_kwargs)
+        self.max_cursors_per_session = max_cursors_per_session
+        self.max_sessions = max_sessions
+        self.rel_mass_tol = rel_mass_tol
+        self.weight_tol = weight_tol
+        self.sessions: dict[str, Session] = {}
+        self.preps: dict[int, rlda.RLDACorpus] = {}
+        self._next_session = 0
+        self._next_corpus = 0
+        self._next_cursor = 0
+
+    # -- transport entry point ---------------------------------------------
+
+    def handle_raw(self, raw: str) -> str:
+        """One request envelope in, one response envelope out."""
+        kind = None
+        try:
+            kind, payload = protocol.parse_request(raw)
+            handler = getattr(self, f"_handle_{kind}")
+            return protocol.make_response(kind, handler(payload))
+        except protocol.NotFound as e:
+            return protocol.make_error(kind, "not_found", str(e))
+        except protocol.ProtocolError as e:
+            return protocol.make_error(kind, e.code, str(e))
+        except KeyError as e:
+            # Only reached by `payload["field"]` in a handler: the request
+            # is missing a required field. Server-object lookup misses are
+            # typed (NotFound) and handled above.
+            return protocol.make_error(
+                kind, "bad_request", f"missing required field {e}")
+        except ValueError as e:
+            return protocol.make_error(kind, "invalid_argument", str(e))
+        except Exception as e:  # defensive: a server must always answer
+            return protocol.make_error(
+                kind, "internal", f"{type(e).__name__}: {e}")
+
+    # -- helpers ------------------------------------------------------------
+
+    def _handle_of(self, payload: dict) -> ModelHandle:
+        hid = int(payload["handle_id"])
+        if hid not in self.service.handles:
+            raise protocol.NotFound(f"unknown handle_id {hid}")
+        return self.service.handles[hid]
+
+    def _session_of(self, payload: dict) -> Session:
+        sid = payload.get("session_id")
+        if sid is None or sid not in self.sessions:
+            raise protocol.NotFound(f"unknown session_id {sid!r}")
+        return self.sessions[sid]
+
+    def _backend_arg(self, payload: dict):
+        name = payload.get("backend")
+        if name is not None and name != backends_mod.AUTO \
+                and name not in available_backends():
+            raise ValueError(
+                f"unknown sampler backend {name!r}; "
+                f"available: {available_backends()} (or 'auto')")
+        return name
+
+    def _fit_payload(self, handle: ModelHandle) -> dict:
+        return {
+            "handle_id": handle.handle_id,
+            "backend": handle.backend,
+            "num_topics": handle.cfg.num_topics,
+            "num_reviews": handle.num_reviews,
+            "sweeps_run": handle.sweeps_run,
+            "perplexity": self.service.perplexity(handle),
+        }
+
+    # -- verbs ---------------------------------------------------------------
+
+    def _handle_hello(self, payload: dict) -> dict:
+        return {
+            "protocol_version": protocol.PROTOCOL_VERSION,
+            "backends": available_backends(),
+            "capabilities": {
+                name: caps.to_dict()
+                for name, caps in backend_capabilities().items()
+            },
+            "default_backend": self.service.default_backend,
+        }
+
+    def _handle_open_session(self, payload: dict) -> dict:
+        sid = f"s{self._next_session}"
+        self._next_session += 1
+        self.sessions[sid] = Session(session_id=sid)
+        # Bound total session state: churning clients that never close
+        # evict the oldest sessions, whose devices then simply resync.
+        while len(self.sessions) > self.max_sessions:
+            self.sessions.pop(next(iter(self.sessions)))
+        return {"session_id": sid}
+
+    def _handle_close_session(self, payload: dict) -> dict:
+        session = self._session_of(payload)
+        del self.sessions[session.session_id]
+        return {"session_id": session.session_id, "closed": True}
+
+    def _handle_prepare(self, payload: dict) -> dict:
+        reviews = protocol.decode_reviews(payload["reviews"])
+        if not reviews:
+            raise ValueError("prepare needs at least one review")
+        prep = rlda.prepare(
+            reviews,
+            base_vocab=int(payload["base_vocab"]),
+            num_topics=int(payload.get("num_topics", 12)),
+            alpha=float(payload.get("alpha", 0.1)),
+            beta=float(payload.get("beta", 0.01)),
+            w_bits=payload.get("w_bits", 8),
+            seed=int(payload.get("seed", 0)),
+        )
+        cid = self._next_corpus
+        self._next_corpus += 1
+        self.preps[cid] = prep
+        return {
+            "corpus_id": cid,
+            "num_reviews": len(reviews),
+            "num_tokens": prep.corpus.num_tokens,
+        }
+
+    def _handle_fit(self, payload: dict) -> dict:
+        handle = self.service.fit(
+            protocol.decode_reviews(payload["reviews"]),
+            num_topics=int(payload.get("num_topics", 12)),
+            base_vocab=payload.get("base_vocab"),
+            alpha=float(payload.get("alpha", 0.1)),
+            beta=float(payload.get("beta", 0.01)),
+            w_bits=payload.get("w_bits", 8),
+            backend=self._backend_arg(payload),
+            num_sweeps=payload.get("num_sweeps"),
+            seed=payload.get("seed"),
+            device_kind=payload.get("device_kind"),
+        )
+        return self._fit_payload(handle)
+
+    def _handle_fit_prepared(self, payload: dict) -> dict:
+        cid = int(payload["corpus_id"])
+        if cid not in self.preps:
+            raise protocol.NotFound(f"unknown corpus_id {cid}")
+        handle = self.service.fit_prepared(
+            self.preps[cid],
+            backend=self._backend_arg(payload),
+            num_sweeps=payload.get("num_sweeps"),
+            seed=payload.get("seed"),
+            device_kind=payload.get("device_kind"),
+        )
+        return self._fit_payload(handle)
+
+    def _handle_adopt(self, payload: dict) -> dict:
+        """Wrap an externally-fitted state (a device's local computation)
+        into a served handle: corpus by reference, tensors on the wire."""
+        cid = int(payload["corpus_id"])
+        if cid not in self.preps:
+            raise protocol.NotFound(f"unknown corpus_id {cid}")
+        prep = self.preps[cid]
+        arrays = {
+            name: protocol.decode_array(payload["state"][name])
+            for name in ("z", "n_dt", "n_wt", "n_t")
+        }
+        cfg = prep.cfg
+        expect = {
+            "z": (prep.corpus.num_tokens,),
+            "n_dt": (cfg.num_docs, cfg.num_topics),
+            "n_wt": (cfg.vocab_size, cfg.num_topics),
+            "n_t": (cfg.num_topics,),
+        }
+        for name, shape in expect.items():
+            if arrays[name].shape != shape:
+                raise ValueError(
+                    f"adopted state {name} has shape {arrays[name].shape}, "
+                    f"corpus {cid} needs {shape}")
+        handle = self.service.adopt(
+            prep,
+            LDAState(z=jnp.asarray(arrays["z"]),
+                     n_dt=jnp.asarray(arrays["n_dt"]),
+                     n_wt=jnp.asarray(arrays["n_wt"]),
+                     n_t=jnp.asarray(arrays["n_t"])),
+            backend=self._backend_arg(payload),
+            sweeps_run=int(payload.get("sweeps_run", 0)),
+        )
+        return self._fit_payload(handle)
+
+    def _handle_refine(self, payload: dict) -> dict:
+        handle = self._handle_of(payload)
+        self.service.refine(
+            handle,
+            num_sweeps=int(payload["num_sweeps"]),
+            backend=self._backend_arg(payload),
+            seed=payload.get("seed"),
+        )
+        return self._fit_payload(handle)
+
+    def _handle_update(self, payload: dict) -> dict:
+        handle = self._handle_of(payload)
+        resp = self.service.update(
+            handle,
+            protocol.decode_reviews(payload["reviews"]),
+            update_sweeps=payload.get("update_sweeps"),
+            seed=payload.get("seed"),
+            backend=self._backend_arg(payload),
+        )
+        return {
+            "handle_id": resp.handle_id,
+            "num_new_reviews": resp.num_new_reviews,
+            "kind": resp.kind,
+            "perplexity": resp.perplexity,
+            "backend": handle.backend,
+        }
+
+    def _handle_view(self, payload: dict) -> dict:
+        handle = self._handle_of(payload)
+        resp = self.service.view(
+            handle,
+            topics=payload.get("topics"),
+            top_n=int(payload.get("top_n", 10)),
+            mass_coverage=float(payload.get("mass_coverage", 0.9)),
+            max_topics=payload.get("max_topics"),
+        )
+        sigs_now = {
+            t.topic_id: views_lib.topic_signature(t)
+            for t in resp.view.topics
+        }
+
+        session = None
+        if payload.get("session_id") is not None:
+            session = self._session_of(payload)
+
+        since = payload.get("since")
+        resync = False
+        if since is not None:
+            # Cursors are looked up under this handle only: a cursor cut
+            # from another handle (or pruned) is an ordinary resync.
+            old = session.lookup(handle.handle_id, since) if session else None
+            if old is None:
+                resync = True  # unknown/expired cursor: full resend
+                changed, removed = resp.view.topics, []
+            else:
+                changed, removed = views_lib.diff_view(
+                    old, resp.view,
+                    rel_mass_tol=float(
+                        payload.get("rel_mass_tol", self.rel_mass_tol)),
+                    weight_tol=float(
+                        payload.get("weight_tol", self.weight_tol)),
+                )
+        else:
+            changed, removed = resp.view.topics, []
+
+        cursor = None
+        if session is not None:
+            cursor = f"c{self._next_cursor}"
+            self._next_cursor += 1
+            session.store(handle.handle_id, cursor, sigs_now,
+                          self.max_cursors_per_session)
+
+        return {
+            "handle_id": handle.handle_id,
+            "topic_ids": resp.topic_ids,
+            "topics": [t.to_dict() for t in changed],
+            "removed_topic_ids": removed,
+            "delta": since is not None and not resync,
+            "resync": resync,
+            "cursor": cursor,
+            "valid": resp.valid,
+        }
+
+    def _handle_top_reviews(self, payload: dict) -> dict:
+        handle = self._handle_of(payload)
+        resp = self.service.top_reviews(
+            handle,
+            int(payload["topic_id"]),
+            n=int(payload.get("n", 5)),
+        )
+        return {
+            "handle_id": resp.handle_id,
+            "topic_id": resp.topic_id,
+            "review_ids": resp.review_ids,
+        }
+
+    def _handle_perplexity(self, payload: dict) -> dict:
+        handle = self._handle_of(payload)
+        return {
+            "handle_id": handle.handle_id,
+            "perplexity": self.service.perplexity(handle),
+        }
+
+    def _handle_release(self, payload: dict) -> dict:
+        handle = self._handle_of(payload)
+        self.service.release(handle)
+        for session in self.sessions.values():  # cursors die with the handle
+            session.drop_handle(handle.handle_id)
+        return {"handle_id": handle.handle_id, "released": True}
+
+    def _handle_release_corpus(self, payload: dict) -> dict:
+        cid = int(payload["corpus_id"])
+        if cid not in self.preps:
+            raise protocol.NotFound(f"unknown corpus_id {cid}")
+        del self.preps[cid]  # live handles keep their own prep reference
+        return {"corpus_id": cid, "released": True}

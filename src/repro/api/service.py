@@ -28,7 +28,7 @@ from typing import Optional, Sequence
 import jax
 import numpy as np
 
-from repro.api.backends import Sampler, get_backend
+from repro.api.backends import AUTO, Sampler, get_backend, select_backend
 from repro.core import coreset, perplexity as perplexity_lib, rlda, update
 from repro.core import views as views_lib
 from repro.core.rlda import Review, RLDACorpus
@@ -142,10 +142,28 @@ class VedaliaService:
     def sampler(self, name: Optional[str] = None) -> Sampler:
         """The (cached) sampler backend instance for `name`."""
         name = name or self.default_backend
+        if name == AUTO:  # no workload context here: the generic route
+            name = select_backend()
         if name not in self._samplers:
             self._samplers[name] = get_backend(
                 name, **self._backend_opts.get(name, {}))
         return self._samplers[name]
+
+    def _resolve(
+        self,
+        backend: Optional[str],
+        *,
+        num_tokens: int,
+        task: str,
+        device_kind: Optional[str] = None,
+    ) -> str:
+        """Concrete backend name for a call (routes the `auto` pseudo-backend
+        by workload: corpus size, fit-vs-update, device kind)."""
+        backend = backend or self.default_backend
+        if backend == AUTO:
+            backend = select_backend(
+                num_tokens=num_tokens, task=task, device_kind=device_kind)
+        return backend
 
     def _key(self, seed: Optional[int] = None) -> jax.Array:
         if seed is not None:
@@ -176,6 +194,7 @@ class VedaliaService:
         backend: Optional[str] = None,
         num_sweeps: Optional[int] = None,
         seed: Optional[int] = None,
+        device_kind: Optional[str] = None,
     ) -> ModelHandle:
         """Prepare raw reviews (§4.3 transformation) and fit from scratch."""
         if not len(reviews):
@@ -187,7 +206,8 @@ class VedaliaService:
             alpha=alpha, beta=beta, w_bits=w_bits,
             seed=seed if seed is not None else self._seed)
         return self.fit_prepared(
-            prep, backend=backend, num_sweeps=num_sweeps, seed=seed)
+            prep, backend=backend, num_sweeps=num_sweeps, seed=seed,
+            device_kind=device_kind)
 
     def fit_prepared(
         self,
@@ -196,9 +216,12 @@ class VedaliaService:
         backend: Optional[str] = None,
         num_sweeps: Optional[int] = None,
         seed: Optional[int] = None,
+        device_kind: Optional[str] = None,
     ) -> ModelHandle:
         """Fit an already-prepared RLDA corpus (custom weighting paths)."""
-        backend = backend or self.default_backend
+        backend = self._resolve(
+            backend, num_tokens=prep.corpus.num_tokens, task="fit",
+            device_kind=device_kind)
         sweeps = num_sweeps if num_sweeps is not None else self.num_sweeps
         state = self.sampler(backend).run(
             prep.cfg, prep.corpus, self._key(seed), sweeps)
@@ -222,7 +245,9 @@ class VedaliaService:
             cfg=prep.cfg, corpus=prep.corpus, state=state)
         return self._register(ModelHandle(
             handle_id=self._new_id(), prep=prep, model=model,
-            backend=backend or self.default_backend, sweeps_run=sweeps_run))
+            backend=self._resolve(
+                backend, num_tokens=prep.corpus.num_tokens, task="update"),
+            sweeps_run=sweeps_run))
 
     def refine(
         self,
@@ -233,7 +258,9 @@ class VedaliaService:
         seed: Optional[int] = None,
     ) -> ModelHandle:
         """Continue sampling the handle's model (any backend, warm state)."""
-        backend = backend or handle.backend
+        backend = self._resolve(
+            backend or handle.backend,
+            num_tokens=handle.model.corpus.num_tokens, task="update")
         handle.model.state = self.sampler(backend).run(
             handle.cfg, handle.model.corpus, self._key(seed), num_sweeps,
             state=handle.model.state)
@@ -250,9 +277,12 @@ class VedaliaService:
         *,
         update_sweeps: Optional[int] = None,
         seed: Optional[int] = None,
+        backend: Optional[str] = None,
     ) -> UpdateResponse:
         """Add reviews to a served model: incremental resampling of the new
-        tokens, with the periodic full recompute of §3.2."""
+        tokens, with the periodic full recompute of §3.2. `backend`
+        overrides the handle's fit backend for this (and future) updates —
+        the stored-state codec makes that a supported mid-run switch."""
         if not len(new_reviews):
             raise ValueError("update() needs at least one new review")
         prep, cfg = handle.prep, handle.cfg
@@ -262,6 +292,10 @@ class VedaliaService:
             w_bits=cfg.w_bits,
             seed=seed if seed is not None else self._seed)
 
+        backend = self._resolve(
+            backend or handle.backend,
+            num_tokens=handle.model.corpus.num_tokens, task="update")
+        handle.backend = backend
         handle.model = update.add_documents(
             handle.model,
             np.asarray(prep_new.corpus.docs) + cfg.num_docs,
@@ -270,7 +304,7 @@ class VedaliaService:
             self._key(seed),
             update_sweeps=(update_sweeps if update_sweeps is not None
                            else self.update_sweeps),
-            sampler=self.sampler(handle.backend),
+            sampler=self.sampler(backend),
             # Explicit: token-free trailing reviews still count as docs.
             num_docs=cfg.num_docs + len(new_reviews),
         )
@@ -337,3 +371,8 @@ class VedaliaService:
     def perplexity(self, handle: ModelHandle) -> float:
         return float(perplexity_lib.perplexity(
             handle.cfg, handle.state, handle.model.corpus))
+
+    def release(self, handle) -> None:
+        """Drop a served handle (by handle or id); frees model state."""
+        hid = handle.handle_id if isinstance(handle, ModelHandle) else int(handle)
+        self.handles.pop(hid, None)

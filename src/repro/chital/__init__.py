@@ -7,4 +7,6 @@ Five components, each mapped 1:1 to a module:
   lottery.py       optional lottery incentives (§2.5.4)
   verification.py  validation → selection → verification (§2.5.5, Eq. 6)
   simulator.py     event-driven network simulation of the whole system
+  runtime.py       client-backed SellerRuntime: sellers fit server-prepared
+                   corpora through the versioned Vedalia protocol
 """

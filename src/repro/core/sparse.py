@@ -25,7 +25,16 @@ from repro.core.types import LDAConfig
 class SparseLDASampler:
     """Sequential O(k_d + k_w) collapsed Gibbs with s/r/q buckets."""
 
-    def __init__(self, cfg: LDAConfig, docs, words, z, weights=None, seed: int = 0):
+    def __init__(
+        self,
+        cfg: LDAConfig,
+        docs,
+        words,
+        z,
+        weights=None,
+        seed: int = 0,
+        counts=None,
+    ):
         self.cfg = cfg
         self.docs = np.asarray(docs, np.int64)
         self.words = np.asarray(words, np.int64)
@@ -38,12 +47,22 @@ class SparseLDASampler:
         self.rng = np.random.default_rng(seed)
 
         k = cfg.num_topics
-        self.n_dt = np.zeros((cfg.num_docs, k))
-        self.n_wt = np.zeros((cfg.vocab_size, k))
-        self.n_t = np.zeros(k)
-        np.add.at(self.n_dt, (self.docs, self.z), self.weights)
-        np.add.at(self.n_wt, (self.words, self.z), self.weights)
-        np.add.at(self.n_t, self.z, self.weights)
+        if counts is not None:
+            # Externally supplied sufficient statistics (the stored-state
+            # adapter path). They may cover more mass than (z, weights) —
+            # e.g. incremental updates freeze old tokens by zeroing their
+            # weights while their counts keep participating.
+            n_dt, n_wt, n_t = counts
+            self.n_dt = np.asarray(n_dt, np.float64).copy()
+            self.n_wt = np.asarray(n_wt, np.float64).copy()
+            self.n_t = np.asarray(n_t, np.float64).copy()
+        else:
+            self.n_dt = np.zeros((cfg.num_docs, k))
+            self.n_wt = np.zeros((cfg.vocab_size, k))
+            self.n_t = np.zeros(k)
+            np.add.at(self.n_dt, (self.docs, self.z), self.weights)
+            np.add.at(self.n_wt, (self.words, self.z), self.weights)
+            np.add.at(self.n_t, self.z, self.weights)
 
         # Smoothing-bucket cache: s = Σ_t αβ/(n_t+β̄); maintained incrementally.
         self._denom = self.n_t + cfg.beta_bar

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+from typing import Optional
 
 import numpy as np
 
@@ -49,19 +50,100 @@ class ModelView:
         return ModelView(topics=[TopicView(**d) for d in json.loads(s)])
 
     def validate(self) -> bool:
-        """Chital validation stage (§2.5.5): basic distribution sanity."""
+        """Chital validation stage (§2.5.5): basic distribution sanity.
+
+        Non-finite values are rejected explicitly: NaN compares False
+        against everything, so ``probability=nan`` would sail through both
+        the negativity and the sum checks (and ``nan <= rating`` likewise).
+        """
         if not self.topics:
             return False
         probs = np.array([t.probability for t in self.topics])
+        if not np.isfinite(probs).all():
+            return False
         if (probs < 0).any() or probs.sum() > 1.0 + 1e-6:
             return False
         for t in self.topics:
             w = np.array(t.top_word_weights)
+            if not np.isfinite(w).all():
+                return False
             if (w < 0).any() or w.sum() > 1.0 + 1e-6:
+                return False
+            scalars = np.array([t.expected_rating, t.expected_helpful,
+                                t.expected_unhelpful])
+            if not np.isfinite(scalars).all():
                 return False
             if not (1.0 <= t.expected_rating <= 5.0):
                 return False
         return True
+
+
+# -- delta views (§4.2 bandwidth) --------------------------------------------
+
+# A topic is re-sent when its mass moved by more than REL_MASS_TOL
+# (relative), its top-word list changed, or any surviving top-word weight
+# moved by more than WEIGHT_TOL (absolute). Expected rating/helpfulness ride
+# along whenever the topic is re-sent; they never trigger a resend alone.
+REL_MASS_TOL = 0.05
+WEIGHT_TOL = 0.02
+
+
+def topic_signature(t: TopicView) -> dict:
+    """The compact per-topic summary a view cursor stores for later diffs."""
+    return {
+        "probability": t.probability,
+        "top_words": list(t.top_words),
+        "top_word_weights": list(t.top_word_weights),
+    }
+
+
+def topic_changed(
+    sig: Optional[dict],
+    t: TopicView,
+    *,
+    rel_mass_tol: float = REL_MASS_TOL,
+    weight_tol: float = WEIGHT_TOL,
+) -> bool:
+    """Has this topic drifted beyond the delta thresholds since `sig`?
+
+    `sig=None` (topic not in the client's last sync) always counts as
+    changed — new core-set topics must be transmitted in full.
+    """
+    if sig is None:
+        return True
+    old_p = sig["probability"]
+    denom = max(abs(old_p), 1e-12)
+    if abs(t.probability - old_p) / denom > rel_mass_tol:
+        return True
+    if list(t.top_words) != list(sig["top_words"]):
+        return True
+    old_w = np.asarray(sig["top_word_weights"], np.float64)
+    new_w = np.asarray(t.top_word_weights, np.float64)
+    if old_w.shape != new_w.shape:
+        return True
+    return bool(len(new_w) and np.abs(new_w - old_w).max() > weight_tol)
+
+
+def diff_view(
+    signatures: dict[int, dict],
+    view: ModelView,
+    *,
+    rel_mass_tol: float = REL_MASS_TOL,
+    weight_tol: float = WEIGHT_TOL,
+) -> tuple[list[TopicView], list[int]]:
+    """(changed topics to transmit, topic ids to drop client-side).
+
+    `signatures` is the client's last-synced state: topic id ->
+    :func:`topic_signature` dict.
+    """
+    changed = [
+        t for t in view.topics
+        if topic_changed(signatures.get(t.topic_id), t,
+                         rel_mass_tol=rel_mass_tol, weight_tol=weight_tol)
+    ]
+    current = {t.topic_id for t in view.topics}
+    removed = sorted(tid for tid in signatures if tid not in current)
+    return changed, removed
 
 
 def build_view(

@@ -3,12 +3,14 @@
 Vedalia's workload is many *products*, each wanting an RLDA fit and a
 streamed model view. `TopicEngine` queues `FitRequest`s, buckets them by
 (num_topics, backend), and drains each wave through one shared
-`VedaliaService`. The bucketing groups *similar* work — compiled sweep
-programs are actually shared only when the full `LDAConfig` and padded
-token shapes coincide (jit keys on those, not on the bucket) — and is the
-seam where cross-product batching (stacking same-shape corpora into one
-sweep) plugs in later. The transformer `serving.Engine` and this engine
-are the two concrete faces of `serving.scheduler.WaveScheduler`.
+`VedaliaClient` — every fit and view crosses the versioned wire protocol,
+so the engine exercises exactly what a remote deployment would. The
+bucketing groups *similar* work — compiled sweep programs are actually
+shared only when the full `LDAConfig` and padded token shapes coincide
+(jit keys on those, not on the bucket) — and is the seam where
+cross-product batching (stacking same-shape corpora into one sweep) plugs
+in later. The transformer `serving.Engine` and this engine are the two
+concrete faces of `serving.scheduler.WaveScheduler`.
 """
 
 from __future__ import annotations
@@ -17,51 +19,52 @@ import dataclasses
 import time
 from typing import Optional
 
-from repro.api.service import (
-    FitRequest,
-    ModelHandle,
-    VedaliaService,
-    ViewResponse,
-)
+from repro.api.client import FitResult, VedaliaClient, ViewResult
+from repro.api.service import FitRequest
 from repro.serving.scheduler import WaveScheduler
 
 
 @dataclasses.dataclass
 class TopicResult:
     uid: int
-    handle: ModelHandle
-    view: ViewResponse
+    fit: FitResult  # handle_id, resolved backend, num_topics, ...
+    view: ViewResult
     perplexity: float
     fit_s: float
 
+    @property
+    def handle_id(self) -> int:
+        return self.fit.handle_id
+
 
 class TopicEngine(WaveScheduler):
-    """Fit-and-view serving for batches of products."""
+    """Fit-and-view serving for batches of products (protocol-backed)."""
 
     def __init__(
         self,
-        service: Optional[VedaliaService] = None,
+        client: Optional[VedaliaClient] = None,
         *,
         max_batch: int = 4,
         backend: str = "jnp",
         num_sweeps: int = 20,
     ):
         super().__init__(max_batch=max_batch)
-        self.service = service or VedaliaService(
+        self.client = client or VedaliaClient(
             backend=backend, num_sweeps=num_sweeps)
+        self.default_backend = self.client.hello().default_backend
 
     def _validate(self, req: FitRequest) -> None:
         if not len(req.reviews):
             raise ValueError(f"request {req.uid}: empty review set")
 
     def bucket_key(self, req: FitRequest):
-        return (req.num_topics, req.backend or self.service.default_backend)
+        return (req.num_topics, req.backend or self.default_backend)
 
     def _run_wave(self, wave: list[FitRequest]) -> list[TopicResult]:
         results = []
         for req in wave:
             t0 = time.time()
-            handle = self.service.fit(
+            fit = self.client.fit(
                 req.reviews,
                 num_topics=req.num_topics,
                 base_vocab=req.base_vocab,
@@ -71,12 +74,12 @@ class TopicEngine(WaveScheduler):
                 backend=req.backend,
                 num_sweeps=req.num_sweeps,
             )
-            view = self.service.view(handle, top_n=req.top_n)
+            view = self.client.sync_view(fit.handle_id, top_n=req.top_n)
             results.append(TopicResult(
                 uid=req.uid,
-                handle=handle,
+                fit=fit,
                 view=view,
-                perplexity=self.service.perplexity(handle),
+                perplexity=fit.perplexity,
                 fit_s=time.time() - t0,
             ))
         return results

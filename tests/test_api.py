@@ -15,13 +15,20 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.api import VedaliaService, available_backends, codec, get_backend
+from repro.api import (
+    VedaliaService,
+    available_backends,
+    backend_capabilities,
+    codec,
+    get_backend,
+    select_backend,
+)
 from repro.api.service import FitRequest
 from repro.core import gibbs, perplexity, update
 from repro.core.types import Corpus, LDAConfig, build_counts, init_state
 from repro.data import reviews
 
-BACKENDS = ("jnp", "pallas", "distributed")
+BACKENDS = ("jnp", "pallas", "distributed", "alias", "sparse")
 
 
 def _corpus(n=3000, v=120, d=40, k=8, w_bits=None, weighted=True, seed=0):
@@ -47,13 +54,50 @@ def _reviews(n=50, vocab=120, seed=0):
 # -- registry ---------------------------------------------------------------
 
 
-def test_registry_lists_all_three_backends():
+def test_registry_lists_all_backends():
     assert set(BACKENDS) <= set(available_backends())
 
 
 def test_unknown_backend_raises_with_choices():
     with pytest.raises(KeyError, match="distributed"):
         get_backend("cuda")
+
+
+def test_backend_capabilities_metadata():
+    caps = backend_capabilities()
+    assert set(BACKENDS) <= set(caps)
+    assert caps["sparse"].device_kind == "phone"
+    assert caps["distributed"].device_kind == "pod"
+    assert caps["alias"].proposal_based and not caps["jnp"].proposal_based
+    for name in BACKENDS:  # every backend declares the full record
+        assert caps[name].warm_start and caps[name].weighted
+    assert backend_capabilities("jnp") is caps["jnp"]
+    with pytest.raises(KeyError, match="available"):
+        backend_capabilities("cuda")
+
+
+def test_auto_selector_routes_by_workload():
+    assert select_backend(device_kind="phone") == "sparse"
+    assert select_backend(device_kind="pod") == "distributed"
+    assert select_backend(device_kind="tpu") == "jnp"
+    assert select_backend(task="update", num_tokens=10**7) == "jnp"
+    assert select_backend(task="fit", num_tokens=10**6) == "alias"
+    assert select_backend(task="fit", num_tokens=500) == "jnp"
+    # Routing degrades gracefully when a preferred backend is unregistered.
+    assert select_backend(num_tokens=10**6,
+                          available=["jnp", "pallas"]) == "jnp"
+
+
+def test_service_resolves_auto_backend():
+    svc = VedaliaService(backend="auto", num_sweeps=4)
+    handle = svc.fit(_reviews(n=20, seed=0), num_topics=4, base_vocab=120)
+    assert handle.backend == "jnp"  # small fit routes to the oracle
+    phone = svc.fit(_reviews(n=15, seed=1), num_topics=4, base_vocab=120,
+                    num_sweeps=2, device_kind="phone")
+    assert phone.backend == "sparse"
+    resp = svc.update(handle, _reviews(n=6, seed=2), backend="auto")
+    assert handle.backend == "jnp"
+    assert np.isfinite(resp.perplexity)
 
 
 # -- backend parity (acceptance gate) ---------------------------------------
@@ -97,6 +141,69 @@ def test_backend_perplexity_parity_with_oracle():
         perps[name] = float(perplexity.perplexity(prep.cfg, st, prep.corpus))
     for name in ("pallas", "distributed"):
         assert abs(np.log(perps[name]) - np.log(perps["jnp"])) < 0.2, perps
+
+
+def test_fast_sampler_perplexity_parity_with_oracle():
+    """The paper's compatibility claim (§3.1): SparseLDA and AliasLDA fit
+    RLDA corpora to the same quality region as the exact parallel sweep.
+    Budgets are mixing-matched, not sweep-matched — the sequential sampler
+    uses fresh counts within a sweep, the MH sampler needs more sweeps to
+    burn through its stale proposals."""
+    revs = _reviews(n=60, vocab=120)
+    from repro.core import rlda
+
+    prep = rlda.prepare(revs, base_vocab=120, num_topics=8, w_bits=8)
+    budgets = {"jnp": 30, "sparse": 15, "alias": 100}
+    perps = {}
+    for name, sweeps in budgets.items():
+        st = get_backend(name).run(
+            prep.cfg, prep.corpus, jax.random.PRNGKey(7), sweeps)
+        perps[name] = float(perplexity.perplexity(prep.cfg, st, prep.corpus))
+    for name in ("sparse", "alias"):
+        assert abs(np.log(perps[name]) - np.log(perps["jnp"])) < 0.3, perps
+
+
+@pytest.mark.parametrize("backend", ["alias", "sparse"])
+def test_fast_sampler_codec_roundtrip_w8(backend):
+    """alias/sparse speak stored state: at w_bits=8 they must emit int32
+    fixed point that survives an encode(decode(.)) round trip and decodes
+    to the exact weighted-count invariants."""
+    cfg, corpus = _corpus(n=1200, d=30, w_bits=8)
+    st = get_backend(backend).run(cfg, corpus, jax.random.PRNGKey(3), 2)
+    assert st.n_wt.dtype == jnp.int32 and st.n_dt.dtype == jnp.int32
+    st2 = codec.encode_state(cfg, codec.decode_state(cfg, st))
+    for a, b in ((st.n_dt, st2.n_dt), (st.n_wt, st2.n_wt), (st.n_t, st2.n_t)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # Stored counts decode to the same totals the corpus carries.
+    _, n_wt, _ = codec.decode_counts(cfg, st)
+    tol = corpus.num_tokens * 2.0 ** -9
+    np.testing.assert_allclose(
+        float(n_wt.sum()), float(np.asarray(corpus.weights).sum()), atol=tol)
+
+
+def test_alias_fit_is_updatable_by_jnp_midrun():
+    """Acceptance gate: a model fit by the proposal-based backend is
+    refined and incrementally updated by the exact oracle mid-run."""
+    svc = VedaliaService(backend="alias", num_sweeps=10, update_sweeps=1)
+    handle = svc.fit(_reviews(n=30, seed=0), num_topics=4, base_vocab=120,
+                     w_bits=8)
+    assert handle.backend == "alias"
+    svc.refine(handle, num_sweeps=2, backend="jnp")
+    assert handle.backend == "jnp"
+    resp = svc.update(handle, _reviews(n=8, seed=4), backend="jnp")
+    assert np.isfinite(resp.perplexity)
+    assert handle.num_reviews == 38
+    assert svc.view(handle).valid
+
+
+def test_sparse_backend_serves_through_service():
+    """The 'phone' path end-to-end: fit + update + view through sparse."""
+    svc = VedaliaService(backend="sparse", num_sweeps=5, update_sweeps=1)
+    handle = svc.fit(_reviews(n=20, seed=0), num_topics=4, base_vocab=120,
+                     w_bits=8)
+    resp = svc.update(handle, _reviews(n=5, seed=2))
+    assert np.isfinite(resp.perplexity)
+    assert svc.view(handle).valid
 
 
 def test_pallas_backend_matches_oracle_scores():
@@ -256,7 +363,9 @@ def test_topic_engine_serves_bucketed_products():
     for uid, r in results.items():
         assert r.view.valid, uid
         assert np.isfinite(r.perplexity)
-    assert results[2].handle.cfg.num_topics == 8
+        assert r.view.cursor is not None  # views crossed the protocol
+    assert results[2].fit.num_topics == 8
+    assert len({r.handle_id for r in results.values()}) == 3
 
 
 def test_topic_engine_rejects_empty_request():

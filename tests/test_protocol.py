@@ -1,0 +1,388 @@
+"""Versioned Vedalia protocol: envelopes, server dispatch, delta views.
+
+Covers the PR-2 acceptance gates:
+  * envelope/array/review codecs round-trip; version mismatches are
+    rejected on both sides;
+  * `VedaliaClient` drives fit -> update -> view -> top_reviews ->
+    release end-to-end through the wire;
+  * delta views: an unchanged model syncs as 0 topic payloads, drifted
+    topics are re-sent, dropped topics are announced, unknown cursors
+    resync with a full view;
+  * the benchmark aggregator errors on unknown --only names and emits
+    one summary.json per run.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    PROTOCOL_VERSION,
+    ProtocolError,
+    RemoteError,
+    VedaliaClient,
+    VedaliaServer,
+    protocol,
+)
+from repro.data import reviews
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _reviews(n=30, vocab=120, seed=0):
+    corp = reviews.generate(reviews.SyntheticSpec(
+        num_reviews=n, vocab_size=vocab, num_topics=4, mean_tokens=30,
+        seed=seed))
+    return corp.reviews
+
+
+@pytest.fixture()
+def client():
+    return VedaliaClient(backend="jnp", num_sweeps=5, update_sweeps=1)
+
+
+# -- envelopes ---------------------------------------------------------------
+
+
+def test_request_envelope_roundtrip():
+    raw = protocol.make_request("fit", {"num_topics": 6})
+    kind, payload = protocol.parse_request(raw)
+    assert kind == "fit" and payload == {"num_topics": 6}
+    assert json.loads(raw)["protocol_version"] == PROTOCOL_VERSION
+
+
+def test_unknown_kind_rejected_both_ways():
+    with pytest.raises(ProtocolError, match="unknown request kind"):
+        protocol.make_request("steal_model")
+    raw = json.dumps({"protocol_version": PROTOCOL_VERSION,
+                      "kind": "steal_model", "payload": {}})
+    with pytest.raises(ProtocolError, match="unknown request kind"):
+        protocol.parse_request(raw)
+
+
+def test_version_mismatch_rejected():
+    stale = json.dumps({"protocol_version": PROTOCOL_VERSION + 1,
+                        "kind": "hello", "payload": {}})
+    with pytest.raises(ProtocolError, match="version mismatch"):
+        protocol.parse_request(stale)
+    # The server answers (never raises) with a version_mismatch error code.
+    server = VedaliaServer(backend="jnp")
+    env = json.loads(server.handle_raw(stale))
+    assert env["ok"] is False
+    assert env["error"]["code"] == "version_mismatch"
+    # And the client refuses a response stamped with a foreign version.
+    env = json.loads(protocol.make_response("hello", {}))
+    env["protocol_version"] = PROTOCOL_VERSION + 1
+    with pytest.raises(ProtocolError, match="version mismatch"):
+        protocol.parse_response(json.dumps(env))
+
+
+def test_error_envelope_surfaces_as_remote_error():
+    raw = protocol.make_error("view", "not_found", "no such handle")
+    with pytest.raises(RemoteError, match="no such handle") as ei:
+        protocol.parse_response(raw)
+    assert ei.value.code == "not_found"
+    assert ei.value.kind == "view"
+
+
+def test_response_kind_must_match_request():
+    raw = protocol.make_response("view", {})
+    with pytest.raises(ProtocolError, match="does not match"):
+        protocol.parse_response(raw, expect_kind="fit")
+
+
+@pytest.mark.parametrize("arr", [
+    np.arange(12, dtype=np.int32).reshape(3, 4),
+    np.linspace(0, 1, 7, dtype=np.float32),
+    np.array([], dtype=np.int64),
+])
+def test_array_codec_roundtrip(arr):
+    out = protocol.decode_array(protocol.encode_array(arr))
+    assert out.dtype == arr.dtype and out.shape == arr.shape
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_review_codec_roundtrip():
+    r = _reviews(n=3)[1]
+    r2 = protocol.decode_review(protocol.encode_review(r))
+    np.testing.assert_array_equal(r2.tokens, np.asarray(r.tokens, np.int32))
+    assert (r2.rating, r2.user, r2.helpful, r2.unhelpful) == (
+        r.rating, r.user, r.helpful, r.unhelpful)
+    assert r2.writing_quality == pytest.approx(r.writing_quality)
+
+
+# -- handshake + lifecycle over the wire -------------------------------------
+
+
+def test_hello_reports_version_backends_capabilities(client):
+    info = client.hello()
+    assert info.protocol_version == PROTOCOL_VERSION
+    assert {"jnp", "pallas", "distributed", "alias", "sparse"} <= set(
+        info.backends)
+    assert info.capabilities["sparse"]["device_kind"] == "phone"
+    assert info.capabilities["alias"]["proposal_based"] is True
+    assert info.capabilities["jnp"]["warm_start"] is True
+
+
+def test_client_fit_update_view_top_reviews_roundtrip(client):
+    fit = client.fit(_reviews(n=30, seed=0), num_topics=6, base_vocab=120,
+                     w_bits=8, seed=0)
+    assert fit.num_reviews == 30 and fit.num_topics == 6
+    assert np.isfinite(fit.perplexity)
+    assert fit.backend == "jnp"
+
+    upd = client.update(fit.handle_id, _reviews(n=8, seed=1), seed=1)
+    assert upd.kind == "incremental"
+    assert upd.num_new_reviews == 8
+
+    view = client.sync_view(fit.handle_id, top_n=5, max_topics=4)
+    assert view.valid and view.view.validate()
+    assert not view.delta and view.cursor is not None
+    assert 1 <= len(view.topics) <= 4
+    assert view.payload_bytes == len(view.payload) > 0
+
+    top = client.top_reviews(fit.handle_id, view.topic_ids[0], n=3)
+    assert len(top.review_ids) == 3
+    assert all(0 <= d < 38 for d in top.review_ids)
+
+    assert client.perplexity(fit.handle_id) == pytest.approx(upd.perplexity)
+
+    client.release(fit.handle_id)
+    with pytest.raises(RemoteError) as ei:
+        client.view(fit.handle_id)
+    assert ei.value.code == "not_found"
+
+
+def test_fit_prepared_by_reference_and_seller_flow(client):
+    """The marketplace path: prepare once, fit twice by corpus id, the
+    winner's handle serves, the loser and the corpus are released."""
+    prep = client.prepare(_reviews(n=30, seed=0), base_vocab=120,
+                          num_topics=6)
+    assert prep.num_reviews == 30 and prep.num_tokens > 0
+    a = client.fit_prepared(prep.corpus_id, num_sweeps=6, seed=1)
+    b = client.fit_prepared(prep.corpus_id, num_sweeps=2, seed=2)
+    assert a.handle_id != b.handle_id
+    winner, loser = (a, b) if a.perplexity <= b.perplexity else (b, a)
+    client.release(loser.handle_id)
+    client.release_corpus(prep.corpus_id)
+    # The winner's handle outlives the released corpus.
+    assert client.sync_view(winner.handle_id).valid
+    with pytest.raises(RemoteError):
+        client.perplexity(loser.handle_id)
+    with pytest.raises(RemoteError) as ei:
+        client.fit_prepared(prep.corpus_id)
+    assert ei.value.code == "not_found"
+
+
+def test_adopt_uploads_external_state(client):
+    """A device's locally-computed model rides the wire as b64 tensors and
+    becomes a served handle; malformed shapes are rejected."""
+    import jax
+
+    from repro.api import get_backend
+    from repro.core.types import LDAState
+
+    prep_res = client.prepare(_reviews(n=25, seed=0), base_vocab=120,
+                              num_topics=4)
+    prep = client.server.preps[prep_res.corpus_id]  # the device's copy
+    st = get_backend("jnp").run(prep.cfg, prep.corpus,
+                                jax.random.PRNGKey(0), 5)
+    fit = client.adopt(prep_res.corpus_id, st, backend="jnp", sweeps_run=5)
+    assert fit.sweeps_run == 5 and np.isfinite(fit.perplexity)
+    assert client.sync_view(fit.handle_id).valid
+
+    bad = LDAState(z=st.z[:-1], n_dt=st.n_dt, n_wt=st.n_wt, n_t=st.n_t)
+    with pytest.raises(RemoteError) as ei:
+        client.adopt(prep_res.corpus_id, bad)
+    assert ei.value.code == "invalid_argument"
+
+
+def test_close_session_and_reopen(client):
+    fit = client.fit(_reviews(n=25, seed=0), num_topics=4, base_vocab=120)
+    client.sync_view(fit.handle_id)
+    sid = client.session_id
+    client.close()
+    assert sid not in client.server.sessions
+    assert client.session_id is None and client.cursors == {}
+    client.close()  # idempotent
+    assert not client.sync_view(fit.handle_id).delta  # fresh full sync
+
+
+def test_evicted_session_recovers_with_full_resync():
+    """A server that forgot the session (restart/eviction) must degrade to
+    a full resync, not poison every later view call."""
+    client = VedaliaClient(backend="jnp", num_sweeps=4, max_sessions=1)
+    fit = client.fit(_reviews(n=25, seed=0), num_topics=4, base_vocab=120)
+    client.sync_view(fit.handle_id)
+    old_sid = client.session_id
+    VedaliaClient(server=client.server)._ensure_session()  # evicts old_sid
+    assert old_sid not in client.server.sessions
+    recovered = client.sync_view(fit.handle_id)
+    assert recovered.resync and len(recovered.topics) >= 1
+    assert client.session_id != old_sid
+    assert not client.sync_view(fit.handle_id).resync  # back to deltas
+
+
+def test_refine_over_the_wire(client):
+    fit = client.fit(_reviews(n=25, seed=0), num_topics=4, base_vocab=120)
+    refined = client.refine(fit.handle_id, num_sweeps=3, backend="pallas")
+    assert refined.sweeps_run == fit.sweeps_run + 3
+    assert refined.backend == "pallas"
+
+
+def test_server_answers_garbage_without_raising():
+    server = VedaliaServer(backend="jnp")
+    env = json.loads(server.handle_raw("not json at all"))
+    assert env["ok"] is False and env["error"]["code"] == "bad_request"
+    env = json.loads(server.handle_raw(
+        protocol.make_request("fit", {"reviews": []})))
+    assert env["ok"] is False
+    # Missing required field -> bad_request, not a not_found masquerade.
+    env = json.loads(server.handle_raw(protocol.make_request("view", {})))
+    assert env["error"]["code"] == "bad_request"
+    # Unknown backend name -> invalid_argument, listing the registry.
+    env = json.loads(server.handle_raw(protocol.make_request(
+        "fit", {"reviews": protocol.encode_reviews(_reviews(n=2)),
+                "backend": "cuda"})))
+    assert env["error"]["code"] == "invalid_argument"
+    assert "sparse" in env["error"]["message"]
+
+
+# -- delta views (§4.2) ------------------------------------------------------
+
+
+def test_delta_view_of_unchanged_model_is_empty(client):
+    fit = client.fit(_reviews(n=30, seed=0), num_topics=6, base_vocab=120,
+                     seed=0)
+    full = client.sync_view(fit.handle_id, top_n=6)
+    assert not full.delta and len(full.topics) >= 1
+    delta = client.sync_view(fit.handle_id, top_n=6)
+    assert delta.delta and not delta.resync
+    assert len(delta.topics) == 0
+    assert delta.removed_topic_ids == []
+    assert delta.topic_ids == full.topic_ids
+    assert delta.payload_bytes < full.payload_bytes
+
+
+def test_delta_view_resends_after_update(client):
+    fit = client.fit(_reviews(n=40, seed=0), num_topics=6, base_vocab=120,
+                     seed=0)
+    first = client.sync_view(fit.handle_id, top_n=6)
+    client.update(fit.handle_id, _reviews(n=10, seed=3), seed=2)
+    delta = client.sync_view(fit.handle_id, top_n=6)
+    assert delta.delta
+    assert len(delta.topics) >= 1  # something drifted
+    # Transmitted topics carry full payloads a device can apply directly.
+    for t in delta.topics:
+        assert t.topic_id in delta.topic_ids
+        assert len(t.top_words) == len(t.top_word_weights)
+
+
+def test_delta_view_announces_removed_topics(client):
+    """Pin the viewed topic set explicitly: {0,1,2} then {0,1} must announce
+    topic 2 as removed."""
+    fit = client.fit(_reviews(n=30, seed=0), num_topics=6, base_vocab=120)
+    client.view(fit.handle_id, topics=[0, 1, 2])
+    cur = client.cursors[fit.handle_id]
+    delta = client.view(fit.handle_id, since=cur, topics=[0, 1])
+    assert delta.removed_topic_ids == [2]
+    assert delta.topic_ids == [0, 1]
+
+
+def test_unknown_cursor_falls_back_to_full_resync(client):
+    fit = client.fit(_reviews(n=30, seed=0), num_topics=6, base_vocab=120)
+    full = client.sync_view(fit.handle_id, top_n=6)
+    stale = client.view(fit.handle_id, since="c999", top_n=6)
+    assert stale.resync and not stale.delta
+    assert len(stale.topics) == len(full.topics)
+
+
+def test_cursor_storage_is_bounded_per_handle():
+    client = VedaliaClient(backend="jnp", num_sweeps=4,
+                           max_cursors_per_session=2)
+    fit = client.fit(_reviews(n=25, seed=0), num_topics=4, base_vocab=120)
+    cursors = [client.view(fit.handle_id).cursor for _ in range(4)]
+    session = client.server.sessions[client.session_id]
+    assert len(session.cursors[fit.handle_id]) == 2
+    # The oldest cursor was pruned: using it now forces a resync.
+    assert client.view(fit.handle_id, since=cursors[0]).resync
+    assert not client.view(fit.handle_id, since=cursors[-1]).resync
+
+
+def test_cursors_are_bound_to_their_handle():
+    """A cursor cut from one handle must not diff another handle's view —
+    and one busy handle must not evict a quieter handle's cursors."""
+    client = VedaliaClient(backend="jnp", num_sweeps=4,
+                           max_cursors_per_session=2)
+    a = client.fit(_reviews(n=25, seed=0), num_topics=4, base_vocab=120)
+    b = client.fit(_reviews(n=25, seed=1), num_topics=4, base_vocab=120)
+    cur_a = client.view(a.handle_id).cursor
+    cur_b = client.view(b.handle_id).cursor
+    # Cross-handle cursor: safe resync, never a bogus delta.
+    crossed = client.view(b.handle_id, since=cur_a)
+    assert crossed.resync and crossed.removed_topic_ids == []
+    # Handle A churning through cursors does not evict B's.
+    for _ in range(5):
+        client.view(a.handle_id)
+    assert not client.view(b.handle_id, since=cur_b).resync
+    # Releasing a handle drops its cursors from every session.
+    client.release(a.handle_id)
+    session = client.server.sessions[client.session_id]
+    assert a.handle_id not in session.cursors
+    assert b.handle_id in session.cursors
+
+
+def test_view_without_session_has_no_cursor():
+    server = VedaliaServer(backend="jnp", num_sweeps=4)
+    client = VedaliaClient(server=server)
+    fit = client.fit(_reviews(n=25, seed=0), num_topics=4, base_vocab=120)
+    raw = server.handle_raw(protocol.make_request(
+        "view", {"handle_id": fit.handle_id}))
+    payload = protocol.parse_response(raw, expect_kind="view")
+    assert payload["cursor"] is None  # stateless clients still get views
+    assert len(payload["topics"]) >= 1
+
+
+# -- benchmark aggregator (satellite) ----------------------------------------
+
+
+def test_bench_runner_rejects_unknown_only_names():
+    import os
+
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "nosuchbench"],
+        capture_output=True, text=True, cwd=REPO, env=env,
+    )
+    assert proc.returncode == 2
+    assert "unknown bench name" in proc.stderr
+    assert "sampler" in proc.stderr  # the valid names are listed
+
+
+def test_bench_runner_writes_aggregate_summary(tmp_path, monkeypatch):
+    import importlib
+    import sys as _sys
+    import types
+
+    _sys.path.insert(0, str(REPO))
+    try:
+        run_mod = importlib.import_module("benchmarks.run")
+    finally:
+        _sys.path.pop(0)
+
+    dummy = types.ModuleType("tests._dummy_bench")
+    dummy.run = lambda quick=False: {"quick": quick, "metric": 42}
+    monkeypatch.setitem(_sys.modules, "tests._dummy_bench", dummy)
+    monkeypatch.setattr(run_mod, "BENCHES", [
+        ("dummy", "a stub", "tests._dummy_bench")])
+    run_mod.main(["--only", "dummy", "--outdir", str(tmp_path)])
+
+    summary = json.loads((tmp_path / "summary.json").read_text())
+    assert summary["failures"] == []
+    assert summary["benches"]["dummy"]["metric"] == 42
+    assert summary["profile"] == "quick"
+    assert json.loads((tmp_path / "dummy.json").read_text())["metric"] == 42

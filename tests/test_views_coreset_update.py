@@ -33,6 +33,68 @@ def test_model_view_valid_and_roundtrips():
         assert all(0 <= w < prep.base_vocab for w in t.top_words)
 
 
+def test_validate_rejects_non_finite():
+    """Regression: NaN used to pass validate() — NaN < 0 and NaN-sum
+    comparisons are both False, so a poisoned probability/weight/rating
+    sailed through the Chital validation stage."""
+    corp, prep, st = _fitted(num_reviews=40, sweeps=5)
+    view = views.build_view(prep, st, [0, 1])
+    assert view.validate()
+
+    import dataclasses as dc
+
+    def mutated(**field):
+        topics = [dc.replace(t) for t in view.topics]
+        for k, v in field.items():
+            setattr(topics[0], k, v)
+        return views.ModelView(topics=topics)
+
+    for bad in (float("nan"), float("inf"), float("-inf")):
+        assert not mutated(probability=bad).validate(), bad
+        assert not mutated(expected_rating=bad).validate(), bad
+        assert not mutated(expected_helpful=bad).validate(), bad
+        assert not mutated(expected_unhelpful=bad).validate(), bad
+        weights = list(view.topics[0].top_word_weights)
+        weights[0] = bad
+        assert not mutated(top_word_weights=weights).validate(), bad
+    # Sanity: the unmutated view still validates after all that copying.
+    assert view.validate()
+
+
+def test_topic_diff_thresholds():
+    """Delta-view change detection: unchanged topics are suppressed, drifted
+    mass / changed top words / drifted weights are re-sent, vanished topics
+    land in removed."""
+    t = views.TopicView(
+        topic_id=3, probability=0.2, expected_rating=3.0,
+        expected_helpful=1.0, expected_unhelpful=0.5,
+        top_words=[4, 9, 2], top_word_weights=[0.3, 0.2, 0.1])
+    sig = views.topic_signature(t)
+    assert not views.topic_changed(sig, t)
+    assert views.topic_changed(None, t)  # new topic: always transmitted
+
+    import dataclasses as dc
+
+    drifted = dc.replace(t, probability=0.2 * 1.2)  # 20% rel > 5% tol
+    assert views.topic_changed(sig, drifted)
+    nudged = dc.replace(t, probability=0.2 * 1.01)  # 1% rel < 5% tol
+    assert not views.topic_changed(sig, nudged)
+    reworded = dc.replace(t, top_words=[9, 4, 2])
+    assert views.topic_changed(sig, reworded)
+    reweighted = dc.replace(t, top_word_weights=[0.3, 0.2, 0.1 + 0.05])
+    assert views.topic_changed(sig, reweighted)
+    assert not views.topic_changed(
+        sig, reweighted, weight_tol=0.1)  # per-request threshold override
+
+    # Last sync knew topics {3, 8}; the model now shows {3 (unchanged), 5}.
+    other = dc.replace(t, topic_id=5)
+    changed, removed = views.diff_view(
+        {3: sig, 8: views.topic_signature(other)},
+        views.ModelView(topics=[nudged, other]))
+    assert [c.topic_id for c in changed] == [5]  # new topic: full payload
+    assert removed == [8]  # left the core set: client drops it
+
+
 def test_view_expected_rating_tracks_tiers():
     """Hand-crafted counts: a topic whose words carry tier 5 must show a
     higher expected rating than a tier-1 topic."""
