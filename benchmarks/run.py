@@ -29,6 +29,8 @@ BENCHES = [
      "benchmarks.views_bench"),
     ("delta_view", "delta vs full view payload bytes (paper §4.2)",
      "benchmarks.delta_view_bench"),
+    ("stream", "streaming ingest throughput / staleness / refit economics",
+     "benchmarks.stream_bench"),
     ("roofline", "roofline terms from the dry-run (deliverable g)",
      "benchmarks.roofline"),
 ]

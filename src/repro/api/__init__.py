@@ -51,11 +51,14 @@ _EXPORTS = {
     "PROTOCOL_VERSION": "repro.api.protocol",
     "ProtocolError": "repro.api.protocol",
     "RemoteError": "repro.api.protocol",
+    "Overloaded": "repro.api.protocol",
     "VedaliaServer": "repro.api.server",
     "VedaliaClient": "repro.api.client",
     "FitResult": "repro.api.client",
+    "IngestResult": "repro.api.client",
     "PrepareResult": "repro.api.client",
     "ServerInfo": "repro.api.client",
+    "StatsResult": "repro.api.client",
     "UpdateResult": "repro.api.client",
     "ViewResult": "repro.api.client",
     "TopReviewsResult": "repro.api.client",

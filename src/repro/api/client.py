@@ -57,9 +57,37 @@ class FitResult:
 class UpdateResult:
     handle_id: int
     num_new_reviews: int
-    kind: str  # "incremental" | "full_recompute"
+    kind: str  # "incremental" | "full_recompute" | "noop" (empty drain)
     perplexity: float
     backend: str
+    drained: int = 0  # queued-ingest reviews folded into this update
+
+
+@dataclasses.dataclass(frozen=True)
+class IngestResult:
+    """Ack for one queued ingest batch.
+
+    `acked` is the server's cumulative ack cursor for the handle: the total
+    number of reviews accepted so far, monotonic and session-independent —
+    a client that is evicted and resyncs never loses acked reviews.
+    """
+
+    handle_id: int
+    acked: int
+    queued: int
+
+
+@dataclasses.dataclass(frozen=True)
+class StatsResult:
+    """Server observability counters (`stats` verb)."""
+
+    num_sessions: int
+    num_handles: int
+    num_corpora: int
+    ingest_queued: dict[int, int]  # handle_id -> queued depth
+    ingest_acked: dict[int, int]  # handle_id -> ack cursor
+    total_queued: int
+    max_ingest_queue: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,6 +148,25 @@ class VedaliaClient:
         self.cursors: dict[int, str] = {}  # handle_id -> last synced cursor
 
     # -- plumbing -----------------------------------------------------------
+
+    def rebind(
+        self,
+        transport: Optional[Transport] = None,
+        *,
+        server: Optional[VedaliaServer] = None,
+    ) -> None:
+        """Point this client at a restarted/restored server.
+
+        The session and cursors are kept: the restored server won't know
+        them, so the first view after a rebind degrades to one full resync
+        through the existing recovery path — never an error, and handle ids
+        stay valid because `stream.snapshot` restores them verbatim.
+        """
+        if (transport is None) == (server is None):
+            raise ValueError("rebind() needs exactly one of transport/server")
+        self.server = server
+        self._transport = transport if transport is not None \
+            else server.handle_raw
 
     def _call(self, kind: str, payload: Optional[dict] = None) -> dict:
         raw = self._transport(protocol.make_request(kind, payload))
@@ -266,25 +313,48 @@ class VedaliaClient:
     def update(
         self,
         handle_id: int,
-        reviews: Sequence[Review],
+        reviews: Sequence[Review] = (),
         *,
         update_sweeps: Optional[int] = None,
         seed: Optional[int] = None,
         backend: Optional[str] = None,
+        drain: bool = False,
     ) -> UpdateResult:
+        """Apply new reviews incrementally. `drain=True` additionally folds
+        the handle's queued-ingest reviews (everything acked but not yet
+        applied) into this update, ahead of `reviews`."""
         p = self._call("update", {
             "handle_id": handle_id,
             "reviews": protocol.encode_reviews(reviews),
             "update_sweeps": update_sweeps,
             "seed": seed,
             "backend": backend,
+            "drain": drain,
         })
         return UpdateResult(
             handle_id=int(p["handle_id"]),
             num_new_reviews=int(p["num_new_reviews"]),
             kind=p["kind"],
-            perplexity=float(p["perplexity"]),
+            # An empty drain ("noop") skips the model evaluation and sends
+            # null — surface it as NaN, not a made-up number.
+            perplexity=float("nan") if p["perplexity"] is None
+            else float(p["perplexity"]),
             backend=p["backend"],
+            drained=int(p.get("drained", 0)),
+        )
+
+    def ingest(self, handle_id: int, reviews: Sequence[Review]) -> IngestResult:
+        """Queue reviews against a handle (streaming ingestion). Returns the
+        server's cumulative ack cursor; raises `RemoteError` with code
+        ``overloaded`` when the bounded queue rejects the batch."""
+        p = self._call("ingest", {
+            "handle_id": handle_id,
+            "reviews": protocol.encode_reviews(reviews),
+        })
+        return IngestResult(
+            handle_id=int(p["handle_id"]),
+            acked=int(p["acked"]),
+            queued=int(p["queued"]),
         )
 
     # -- serving -------------------------------------------------------------
@@ -361,9 +431,29 @@ class VedaliaClient:
             review_ids=[int(d) for d in p["review_ids"]],
         )
 
-    def perplexity(self, handle_id: int) -> float:
-        return float(self._call(
-            "perplexity", {"handle_id": handle_id})["perplexity"])
+    def perplexity(
+        self, handle_id: int, reviews: Optional[Sequence[Review]] = None
+    ) -> float:
+        """Training-corpus perplexity, or — with `reviews` — held-out
+        perplexity of those reviews under the handle's current model."""
+        payload: dict = {"handle_id": handle_id}
+        if reviews is not None:
+            payload["reviews"] = protocol.encode_reviews(reviews)
+        return float(self._call("perplexity", payload)["perplexity"])
+
+    def stats(self) -> StatsResult:
+        p = self._call("stats")
+        return StatsResult(
+            num_sessions=int(p["num_sessions"]),
+            num_handles=int(p["num_handles"]),
+            num_corpora=int(p["num_corpora"]),
+            ingest_queued={int(k): int(v)
+                           for k, v in p["ingest_queued"].items()},
+            ingest_acked={int(k): int(v)
+                          for k, v in p["ingest_acked"].items()},
+            total_queued=int(p["total_queued"]),
+            max_ingest_queue=int(p["max_ingest_queue"]),
+        )
 
     def release(self, handle_id: int) -> None:
         self._call("release", {"handle_id": handle_id})

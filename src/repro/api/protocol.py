@@ -34,7 +34,9 @@ from repro.core.rlda import Review
 PROTOCOL_VERSION = 1
 
 #: The request verbs a server must answer. `hello` is the capability
-#: handshake; everything else maps onto the service layer.
+#: handshake; everything else maps onto the service layer. `ingest` and
+#: `stats` are the streaming verbs: batched review ingestion with an ack
+#: cursor, and the observability surface backpressure decisions read.
 KINDS = (
     "hello",
     "open_session",
@@ -43,10 +45,12 @@ KINDS = (
     "fit_prepared",
     "refine",
     "update",
+    "ingest",
     "view",
     "top_reviews",
     "adopt",
     "perplexity",
+    "stats",
     "release",
     "release_corpus",
     "close_session",
@@ -84,6 +88,18 @@ class RemoteError(RuntimeError):
         super().__init__(f"[{code}] {message}")
         self.code = code
         self.kind = kind
+
+
+class Overloaded(RuntimeError):
+    """A bounded server-side queue is full (wire code ``overloaded``).
+
+    Unlike the other wire errors this one is *retryable by design*: the
+    client should back off and re-offer the same batch — nothing about the
+    request itself is wrong. Raised server-side only; clients observe it
+    as ``RemoteError(code="overloaded")``, which is how
+    `stream.IncrementalScheduler` detects backpressure (it folds the
+    queued backlog into the model, then retries the batch once).
+    """
 
 
 # -- tensor / record codecs --------------------------------------------------

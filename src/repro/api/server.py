@@ -78,6 +78,7 @@ class VedaliaServer:
         *,
         max_cursors_per_session: int = 8,
         max_sessions: int = 1024,
+        max_ingest_queue: int = 1024,
         rel_mass_tol: float = views_lib.REL_MASS_TOL,
         weight_tol: float = views_lib.WEIGHT_TOL,
         **service_kwargs,
@@ -85,10 +86,17 @@ class VedaliaServer:
         self.service = service or VedaliaService(**service_kwargs)
         self.max_cursors_per_session = max_cursors_per_session
         self.max_sessions = max_sessions
+        self.max_ingest_queue = max_ingest_queue
         self.rel_mass_tol = rel_mass_tol
         self.weight_tol = weight_tol
         self.sessions: dict[str, Session] = {}
         self.preps: dict[int, rlda.RLDACorpus] = {}
+        # Streaming ingest: queued-but-unapplied reviews per handle, plus
+        # the cumulative ack cursor. Both are handle-scoped (not session-
+        # scoped) so acked reviews survive session eviction and client
+        # churn; they are applied by an `update` with drain=true.
+        self.ingest_queues: dict[int, list[rlda.Review]] = {}
+        self.ingest_acked: dict[int, int] = {}
         self._next_session = 0
         self._next_corpus = 0
         self._next_cursor = 0
@@ -104,6 +112,10 @@ class VedaliaServer:
             return protocol.make_response(kind, handler(payload))
         except protocol.NotFound as e:
             return protocol.make_error(kind, "not_found", str(e))
+        except protocol.Overloaded as e:
+            # Backpressure, not failure: the batch was rejected whole and
+            # the client should retry after the queue drains.
+            return protocol.make_error(kind, "overloaded", str(e))
         except protocol.ProtocolError as e:
             return protocol.make_error(kind, e.code, str(e))
         except KeyError as e:
@@ -273,18 +285,78 @@ class VedaliaServer:
         )
         return self._fit_payload(handle)
 
+    def _handle_ingest(self, payload: dict) -> dict:
+        """Queue a batch of reviews against a handle; returns the ack cursor.
+
+        The ack cursor is the cumulative count of reviews this server has
+        accepted for the handle — monotonic, handle-scoped, independent of
+        sessions. A batch that would overflow the bounded queue is rejected
+        whole (`overloaded`), so the cursor never covers dropped reviews.
+        """
+        handle = self._handle_of(payload)
+        batch = protocol.decode_reviews(payload["reviews"])
+        if not batch:
+            raise ValueError("ingest needs at least one review")
+        queue = self.ingest_queues.setdefault(handle.handle_id, [])
+        if len(queue) + len(batch) > self.max_ingest_queue:
+            raise protocol.Overloaded(
+                f"ingest queue for handle {handle.handle_id} is full "
+                f"({len(queue)}/{self.max_ingest_queue} queued, "
+                f"batch of {len(batch)} rejected)")
+        queue.extend(batch)
+        acked = self.ingest_acked.get(handle.handle_id, 0) + len(batch)
+        self.ingest_acked[handle.handle_id] = acked
+        return {
+            "handle_id": handle.handle_id,
+            "acked": acked,
+            "queued": len(queue),
+        }
+
     def _handle_update(self, payload: dict) -> dict:
         handle = self._handle_of(payload)
-        resp = self.service.update(
-            handle,
-            protocol.decode_reviews(payload["reviews"]),
-            update_sweeps=payload.get("update_sweeps"),
-            seed=payload.get("seed"),
-            backend=self._backend_arg(payload),
-        )
+        reviews = protocol.decode_reviews(payload.get("reviews", []))
+        drained = 0
+        if payload.get("drain"):
+            queued = self.ingest_queues.get(handle.handle_id, [])
+            drained = len(queued)
+            reviews = queued + reviews
+            if not reviews:
+                # A periodic flusher shouldn't have to pre-check queue
+                # depth: an empty drain is a no-op success, not an error —
+                # and a free one (no model evaluation on the tick path;
+                # perplexity rides as null).
+                return {
+                    "handle_id": handle.handle_id,
+                    "num_new_reviews": 0,
+                    "drained": 0,
+                    "kind": "noop",
+                    "perplexity": None,
+                    "backend": handle.backend,
+                }
+        # The queue is cleared iff the model absorbed the reviews, keyed on
+        # the service's commit point (`handle.model` is reassigned exactly
+        # when the new documents land) rather than a clean return. A
+        # failure *before* the commit (bad backend name, anything the
+        # service rejects) must not lose acked reviews — the ack cursor
+        # promises durability; a failure *after* it (say the response's
+        # perplexity evaluation) must not leave them to be double-applied
+        # by the next drain.
+        model_before = handle.model
+        try:
+            resp = self.service.update(
+                handle,
+                reviews,
+                update_sweeps=payload.get("update_sweeps"),
+                seed=payload.get("seed"),
+                backend=self._backend_arg(payload),
+            )
+        finally:
+            if drained and handle.model is not model_before:
+                del self.ingest_queues[handle.handle_id][:drained]
         return {
             "handle_id": resp.handle_id,
             "num_new_reviews": resp.num_new_reviews,
+            "drained": drained,
             "kind": resp.kind,
             "perplexity": resp.perplexity,
             "backend": handle.backend,
@@ -360,10 +432,35 @@ class VedaliaServer:
         }
 
     def _handle_perplexity(self, payload: dict) -> dict:
+        """Training-corpus perplexity, or — with a `reviews` payload —
+        held-out perplexity of those reviews under the current model
+        (the streaming scheduler's refit guard)."""
         handle = self._handle_of(payload)
+        if payload.get("reviews") is not None:
+            ppx = self.service.heldout_perplexity(
+                handle, protocol.decode_reviews(payload["reviews"]))
+            return {"handle_id": handle.handle_id, "perplexity": ppx,
+                    "heldout": True}
         return {
             "handle_id": handle.handle_id,
             "perplexity": self.service.perplexity(handle),
+        }
+
+    def _handle_stats(self, payload: dict) -> dict:
+        """Server observability: what the router/scheduler/bench read."""
+        queues = {
+            str(hid): len(q) for hid, q in self.ingest_queues.items() if q
+        }
+        return {
+            "num_sessions": len(self.sessions),
+            "num_handles": len(self.service.handles),
+            "num_corpora": len(self.preps),
+            "ingest_queued": queues,
+            "ingest_acked": {
+                str(hid): n for hid, n in self.ingest_acked.items()
+            },
+            "total_queued": sum(queues.values()),
+            "max_ingest_queue": self.max_ingest_queue,
         }
 
     def _handle_release(self, payload: dict) -> dict:
@@ -371,6 +468,8 @@ class VedaliaServer:
         self.service.release(handle)
         for session in self.sessions.values():  # cursors die with the handle
             session.drop_handle(handle.handle_id)
+        self.ingest_queues.pop(handle.handle_id, None)
+        self.ingest_acked.pop(handle.handle_id, None)
         return {"handle_id": handle.handle_id, "released": True}
 
     def _handle_release_corpus(self, payload: dict) -> dict:

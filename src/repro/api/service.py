@@ -29,7 +29,7 @@ import jax
 import numpy as np
 
 from repro.api.backends import AUTO, Sampler, get_backend, select_backend
-from repro.core import coreset, perplexity as perplexity_lib, rlda, update
+from repro.core import codec, coreset, perplexity as perplexity_lib, rlda, update
 from repro.core import views as views_lib
 from repro.core.rlda import Review, RLDACorpus
 from repro.core.types import LDAState
@@ -371,6 +371,33 @@ class VedaliaService:
     def perplexity(self, handle: ModelHandle) -> float:
         return float(perplexity_lib.perplexity(
             handle.cfg, handle.state, handle.model.corpus))
+
+    def heldout_perplexity(
+        self, handle: ModelHandle, reviews: Sequence[Review]
+    ) -> float:
+        """Perplexity of *unseen* reviews under the handle's current model.
+
+        Held-out documents have no fitted θ̂_d, so tokens are scored under
+        the posterior-predictive mixture with the corpus-wide topic weights:
+        p(w) = Σ_t θ̄_t φ̂_tw, θ̄_t ∝ n_t + α. No state is touched — this is
+        the drift guard of the streaming scheduler, called between updates.
+        """
+        if not len(reviews):
+            raise ValueError("heldout_perplexity() needs at least one review")
+        cfg = handle.cfg
+        prep = rlda.prepare(
+            list(reviews), base_vocab=handle.prep.base_vocab,
+            num_topics=cfg.num_topics, alpha=cfg.alpha, beta=cfg.beta,
+            w_bits=cfg.w_bits, seed=self._seed)
+        n_wt = codec.decode_array_np(cfg, handle.state.n_wt)  # (V, K)
+        n_t = codec.decode_array_np(cfg, handle.state.n_t)  # (K,)
+        phi = (n_wt + cfg.beta) / (n_t[None, :] + cfg.beta_bar)
+        theta_bar = (n_t + cfg.alpha) / (n_t.sum() + cfg.alpha * cfg.num_topics)
+        words = np.asarray(prep.corpus.words)
+        wts = np.asarray(prep.corpus.weights, np.float64)
+        p = phi[words] @ theta_bar  # (N,)
+        ll = float(np.sum(wts * np.log(np.maximum(p, 1e-30))))
+        return float(np.exp(-ll / max(wts.sum(), 1e-9)))
 
     def release(self, handle) -> None:
         """Drop a served handle (by handle or id); frees model state."""

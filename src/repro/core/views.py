@@ -124,6 +124,50 @@ def topic_changed(
     return bool(len(new_w) and np.abs(new_w - old_w).max() > weight_tol)
 
 
+def signature_distance(sig: Optional[dict], t: TopicView) -> float:
+    """Continuous drift in [0, 1] between a stored signature and a topic.
+
+    `topic_changed` answers "must this topic be re-sent?" — a binary that
+    trips on any top-word reorder, which is the right sensitivity for
+    device sync but useless as a *refit* trigger (every micro-batch
+    reorders something). This is the graded counterpart the streaming
+    scheduler thresholds instead: the mean of
+
+      * relative topic-mass shift (capped at 1),
+      * Jaccard distance of the top-word sets,
+      * L1 distance of the weights of surviving top words (capped at 1).
+
+    `sig=None` (topic newly in the core set) is maximal drift (1.0).
+    """
+    if sig is None:
+        return 1.0
+    old_p = float(sig["probability"])
+    mass = min(abs(t.probability - old_p) / max(abs(old_p), 1e-12), 1.0)
+    old_set, new_set = set(sig["top_words"]), set(t.top_words)
+    union = old_set | new_set
+    jaccard = 1.0 - (len(old_set & new_set) / len(union)) if union else 0.0
+    shared = old_set & new_set
+    if shared:
+        old_w = dict(zip(sig["top_words"], sig["top_word_weights"]))
+        new_w = dict(zip(t.top_words, t.top_word_weights))
+        l1 = min(sum(abs(new_w[w] - old_w[w]) for w in shared), 1.0)
+    else:
+        l1 = 1.0
+    return (mass + jaccard + l1) / 3.0
+
+
+def view_drift(signatures: dict[int, dict], view: ModelView) -> float:
+    """Mean signature distance of a view against the last-stored
+    signatures; topics that left the core set count as maximal drift."""
+    if not view.topics and not signatures:
+        return 0.0
+    current = {t.topic_id for t in view.topics}
+    removed = [tid for tid in signatures if tid not in current]
+    total = sum(signature_distance(signatures.get(t.topic_id), t)
+                for t in view.topics) + float(len(removed))
+    return total / max(len(view.topics) + len(removed), 1)
+
+
 def diff_view(
     signatures: dict[int, dict],
     view: ModelView,

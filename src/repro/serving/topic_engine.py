@@ -20,6 +20,7 @@ import time
 from typing import Optional
 
 from repro.api.client import FitResult, VedaliaClient, ViewResult
+from repro.api.protocol import RemoteError
 from repro.api.service import FitRequest
 from repro.serving.scheduler import WaveScheduler
 
@@ -59,6 +60,28 @@ class TopicEngine(WaveScheduler):
 
     def bucket_key(self, req: FitRequest):
         return (req.num_topics, req.backend or self.default_backend)
+
+    def serve_views(
+        self, handle_ids: list[int], *, top_n: int = 10
+    ) -> dict[int, Optional[ViewResult]]:
+        """Cursor-tracked view syncs for handles this engine did not fit —
+        live models a streaming scheduler is updating concurrently.
+
+        Each handle gets this engine's own delta cursor (first sync full,
+        later syncs only drifted topics), independent of the scheduler's
+        cursors. A handle that vanished mid-sync — released, or its shard
+        killed and not yet restored — maps to None instead of aborting the
+        whole wave: under churn, serving the surviving models wins.
+        """
+        out: dict[int, Optional[ViewResult]] = {}
+        for hid in handle_ids:
+            try:
+                out[hid] = self.client.sync_view(hid, top_n=top_n)
+            except RemoteError as e:
+                if e.code != "not_found":
+                    raise
+                out[hid] = None
+        return out
 
     def _run_wave(self, wave: list[FitRequest]) -> list[TopicResult]:
         results = []

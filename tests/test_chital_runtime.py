@@ -1,0 +1,98 @@
+"""Direct tests for `repro.chital.runtime` (client-backed seller runtime).
+
+Previously exercised only transitively through `examples/serve_reviews.py`;
+these pin the contract: sellers fit a buyer's server-prepared corpus *by
+reference* through the Vedalia protocol, sweep budget maps from device
+speed (clamped), the submission payload is the served handle id, and
+`release_losers` frees exactly the losing handle.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import VedaliaClient
+from repro.chital.matching import BuyerRequest, Seller
+from repro.chital.runtime import client_runtime, release_losers
+from repro.chital.verification import EvaluationResult, Submission
+from repro.data import reviews as reviews_data
+
+
+def _reviews(n=25, vocab=120, seed=0):
+    return reviews_data.generate(reviews_data.SyntheticSpec(
+        num_reviews=n, vocab_size=vocab, num_topics=4, mean_tokens=25,
+        seed=seed)).reviews
+
+
+@pytest.fixture()
+def client():
+    return VedaliaClient(backend="jnp", num_sweeps=4, update_sweeps=1)
+
+
+@pytest.fixture()
+def corpus_ids(client):
+    prep = client.prepare(_reviews(seed=0), base_vocab=120, num_topics=4)
+    return {7: prep.corpus_id}
+
+
+def _buyer(buyer_id=7, task_tokens=1234):
+    return BuyerRequest(buyer_id=buyer_id, task_tokens=task_tokens,
+                        arrival=0.0, local_speed=100.0)
+
+
+def test_runtime_fits_by_reference(client, corpus_ids):
+    runtime = client_runtime(client, corpus_ids, max_sweeps=6, min_sweeps=2)
+    seller = Seller(seller_id=3, speed=2000.0)
+    sub = runtime(seller, _buyer())
+    assert isinstance(sub, Submission)
+    assert sub.seller_id == 3
+    assert sub.iterations == 5  # speed/400, inside the clamp
+    assert sub.tokens_processed == 1234
+    assert np.isfinite(sub.perplexity) and sub.perplexity > 0
+    assert sub.converged_perplexity == sub.perplexity  # honest seller
+    # The payload is a *served* handle — the model lives server-side.
+    assert sub.payload in client.server.service.handles
+    assert client.sync_view(sub.payload).valid
+
+
+def test_sweep_budget_clamps_to_device_speed(client, corpus_ids):
+    runtime = client_runtime(client, corpus_ids, max_sweeps=6, min_sweeps=2)
+    slow = runtime(Seller(seller_id=1, speed=100.0), _buyer())
+    fast = runtime(Seller(seller_id=2, speed=1e7), _buyer())
+    assert slow.iterations == 2  # floor: even a phone finishes the task
+    assert fast.iterations == 6  # ceiling: no free extra convergence
+    assert slow.payload != fast.payload  # distinct served handles
+
+
+def test_distinct_sellers_fit_distinct_handles(client, corpus_ids):
+    runtime = client_runtime(client, corpus_ids, max_sweeps=4, min_sweeps=2)
+    a = runtime(Seller(seller_id=1, speed=1600.0), _buyer())
+    b = runtime(Seller(seller_id=2, speed=1600.0), _buyer())
+    assert a.payload != b.payload  # seeded per seller -> separate models
+    assert a.perplexity != pytest.approx(b.perplexity, rel=1e-9)
+
+
+def _result(winner, loser):
+    return EvaluationResult(winner=winner, loser=loser,
+                            verification_prob=0.1, verified=False,
+                            rejected=False, reason="selection")
+
+
+def test_release_losers_frees_exactly_the_loser(client, corpus_ids):
+    runtime = client_runtime(client, corpus_ids, max_sweeps=4, min_sweeps=2)
+    a = runtime(Seller(seller_id=1, speed=1600.0), _buyer())
+    b = runtime(Seller(seller_id=2, speed=800.0), _buyer())
+    release_losers(client, _result(winner=a, loser=b))
+    handles = client.server.service.handles
+    assert a.payload in handles
+    assert b.payload not in handles
+    assert client.sync_view(a.payload).valid  # the winner still serves
+
+
+def test_release_losers_tolerates_missing_loser(client, corpus_ids):
+    runtime = client_runtime(client, corpus_ids, max_sweeps=4, min_sweeps=2)
+    a = runtime(Seller(seller_id=1, speed=1600.0), _buyer())
+    release_losers(client, _result(winner=a, loser=None))  # no-op
+    payloadless = Submission(seller_id=9, perplexity=1.0,
+                             tokens_processed=1, iterations=1, payload=None)
+    release_losers(client, _result(winner=a, loser=payloadless))  # no-op
+    assert a.payload in client.server.service.handles

@@ -1,0 +1,550 @@
+"""`repro.stream`: sources, router, scheduler, snapshot + streaming verbs.
+
+Covers the PR-3 acceptance gates:
+  * replayable sources: deterministic in seed, ordered, shape-sensitive,
+    JSONL file replay round-trips;
+  * consistent-hash router: stable placement, bounded remapping on
+    membership change, drop-oldest vs block backpressure;
+  * `ingest`/`stats` verbs: monotonic ack cursor, bounded queue rejects
+    whole batches as `overloaded`, drain-update applies the backlog,
+    queue depth is observable;
+  * session eviction under max_sessions=1 with concurrent ingest: the
+    evicted client resyncs without losing acked reviews;
+  * scheduler: micro-batching, staleness-forced applies, drift-policy
+    refits vs always/never;
+  * snapshot/restore: codec-exact round trip, clients recover via resync.
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import VedaliaClient, VedaliaServer, protocol
+from repro.core import views as views_lib
+from repro.core.views import TopicView
+from repro.data import reviews as reviews_data
+from repro.stream import (
+    IncrementalScheduler,
+    ReviewEvent,
+    StreamRouter,
+    StreamSpec,
+    load_events,
+    pump,
+    replay,
+    restore_server,
+    save_events,
+    snapshot_server,
+    synthetic_events,
+)
+from repro.stream.sources import rate_at
+
+QUICK = StreamSpec(num_products=3, duration=30.0, rate=2.0, shape="burst",
+                   shift_at=15.0, seed=0)
+
+
+def _reviews(n=20, vocab=120, seed=0):
+    return reviews_data.generate(reviews_data.SyntheticSpec(
+        num_reviews=n, vocab_size=vocab, num_topics=4, mean_tokens=25,
+        seed=seed)).reviews
+
+
+def _client(**kw):
+    return VedaliaClient(backend="jnp", num_sweeps=4, update_sweeps=1, **kw)
+
+
+# -- sources -----------------------------------------------------------------
+
+
+def test_synthetic_events_deterministic_and_ordered():
+    a = synthetic_events(QUICK)
+    b = synthetic_events(QUICK)
+    assert len(a) == len(b) > 20
+    assert [(e.t, e.product_id) for e in a] == [(e.t, e.product_id)
+                                                for e in b]
+    ts = [e.t for e in a]
+    assert ts == sorted(ts) and ts[-1] < QUICK.duration
+    assert [e.seq for e in a] == list(range(len(a)))
+    np.testing.assert_array_equal(
+        a[0].review.tokens, b[0].review.tokens)
+
+
+def test_traffic_shapes_have_distinct_rates():
+    burst = dataclasses.replace(QUICK, shape="burst")
+    assert rate_at(burst, 1.0) == burst.rate * burst.burst_factor
+    assert rate_at(burst, burst.burst_len + 1.0) \
+        == burst.rate * burst.idle_factor
+    diurnal = dataclasses.replace(QUICK, shape="diurnal")
+    peak = rate_at(diurnal, diurnal.diurnal_period / 4)
+    trough = rate_at(diurnal, 3 * diurnal.diurnal_period / 4)
+    assert peak > diurnal.rate > trough >= 0
+    with pytest.raises(ValueError, match="unknown stream shape"):
+        rate_at(dataclasses.replace(QUICK, shape="tsunami"), 0.0)
+
+
+def test_concept_shift_rotates_vocabulary():
+    plain = synthetic_events(dataclasses.replace(QUICK, shift_at=None))
+    shifted = synthetic_events(QUICK)  # shift_at=15.0
+    pre = next(e for e in shifted if e.t < QUICK.shift_at)
+    post = next(e for e in shifted if e.t >= QUICK.shift_at)
+    twin = next(e for e in plain if e.seq == post.seq)
+    np.testing.assert_array_equal(  # pre-shift events are untouched
+        pre.review.tokens,
+        next(e for e in plain if e.seq == pre.seq).review.tokens)
+    np.testing.assert_array_equal(
+        post.review.tokens,
+        (np.asarray(twin.review.tokens, np.int64) + QUICK.vocab_size // 2)
+        % QUICK.vocab_size)
+
+
+def test_file_replay_roundtrip(tmp_path):
+    events = synthetic_events(QUICK)[:10]
+    path = str(tmp_path / "stream.jsonl")
+    assert save_events(events, path) == 10
+    loaded = load_events(path)
+    assert len(loaded) == 10
+    for a, b in zip(events, loaded):
+        assert (a.seq, a.t, a.product_id) == (b.seq, b.t, b.product_id)
+        np.testing.assert_array_equal(a.review.tokens, b.review.tokens)
+        assert a.review.rating == b.review.rating
+    assert [e.seq for e in replay(path, limit=3)] == [0, 1, 2]
+
+
+# -- router ------------------------------------------------------------------
+
+
+def _event(seq, pid, t=0.0):
+    return ReviewEvent(seq=seq, t=t, product_id=pid,
+                       review=_reviews(n=1, seed=seq)[0])
+
+
+def test_routing_is_stable_and_remaps_boundedly():
+    r1 = StreamRouter([0, 1, 2, 3])
+    r2 = StreamRouter([0, 1, 2, 3])
+    placement = {pid: r1.route(pid) for pid in range(200)}
+    assert placement == {pid: r2.route(pid) for pid in range(200)}
+    assert len(set(placement.values())) == 4  # every shard owns something
+    # Adding a 5th shard moves well under half the keys (mod-5 would move
+    # ~80% of them); that is the point of consistent hashing.
+    r1.add_shard(4)
+    moved = sum(1 for pid in range(200) if r1.route(pid) != placement[pid])
+    assert 0 < moved < 100
+    # And every moved key landed on the new shard, not shuffled elsewhere.
+    assert all(r1.route(pid) == 4 for pid in range(200)
+               if r1.route(pid) != placement[pid])
+
+
+def test_remove_shard_returns_orphans_and_reroutes():
+    router = StreamRouter([0, 1], capacity=8)
+    events = [_event(i, pid=i) for i in range(8)]
+    for e in events:
+        router.offer(e)
+    victim = router.route(events[0].product_id)
+    orphans = router.remove_shard(victim)
+    assert all(router.route(e.product_id) != victim for e in events)
+    survivors = router.shard_ids
+    assert survivors == [1 - victim]
+    for e in orphans:  # re-offer lands on the survivor
+        assert router.offer(e)
+
+
+def test_drop_oldest_policy_bounds_queue():
+    router = StreamRouter([0], capacity=3, policy="drop_oldest")
+    for i in range(5):
+        assert router.offer(_event(i, pid=0))
+    assert router.depth(0) == 3
+    st = router.stats()
+    assert st.dropped == 2 and st.refused == 0 and st.routed == 5
+    assert [e.seq for e in router.drain(0)] == [2, 3, 4]  # oldest went first
+
+
+def test_block_policy_refuses_and_recovers():
+    router = StreamRouter([0], capacity=2, policy="block")
+    assert router.offer(_event(0, pid=0))
+    assert router.offer(_event(1, pid=0))
+    assert not router.offer(_event(2, pid=0))  # full: caller must re-offer
+    assert router.stats().refused == 1
+    assert [e.seq for e in router.drain(0, max_events=1)] == [0]
+    assert router.offer(_event(2, pid=0))  # space freed, lands now
+    assert [e.seq for e in router.drain(0)] == [1, 2]
+    with pytest.raises(ValueError, match="backpressure policy"):
+        StreamRouter([0], policy="yolo")
+
+
+# -- ingest / stats verbs ----------------------------------------------------
+
+
+def test_ingest_ack_cursor_and_drain_update():
+    client = _client()
+    fit = client.fit(_reviews(n=20, seed=0), num_topics=4, base_vocab=120)
+    ack1 = client.ingest(fit.handle_id, _reviews(n=3, seed=1))
+    ack2 = client.ingest(fit.handle_id, _reviews(n=2, seed=2))
+    assert (ack1.acked, ack1.queued) == (3, 3)
+    assert (ack2.acked, ack2.queued) == (5, 5)  # cumulative + monotonic
+    st = client.stats()
+    assert st.ingest_queued[fit.handle_id] == 5
+    assert st.ingest_acked[fit.handle_id] == 5
+    assert st.total_queued == 5 and st.num_handles == 1
+
+    upd = client.update(fit.handle_id, drain=True)
+    assert upd.drained == 5 and upd.num_new_reviews == 5
+    assert client.stats().total_queued == 0
+    # drain + explicit reviews compose; the queue is empty so only the
+    # explicit ones apply.
+    upd2 = client.update(fit.handle_id, _reviews(n=2, seed=3), drain=True)
+    assert upd2.drained == 0 and upd2.num_new_reviews == 2
+
+
+def test_failed_drain_update_keeps_queue():
+    """A rejected drain-update must not lose acked reviews: the queue is
+    cleared only after the update succeeds."""
+    client = _client()
+    fit = client.fit(_reviews(n=15, seed=0), num_topics=4, base_vocab=120)
+    client.ingest(fit.handle_id, _reviews(n=3, seed=1))
+    with pytest.raises(protocol.RemoteError) as ei:
+        client.update(fit.handle_id, drain=True, backend="bogus")
+    assert ei.value.code == "invalid_argument"
+    assert client.stats().ingest_queued[fit.handle_id] == 3
+    upd = client.update(fit.handle_id, drain=True)
+    assert upd.drained == 3 and upd.num_new_reviews == 3
+    # And the backlog was applied exactly once, not left for a re-drain.
+    assert client.stats().total_queued == 0
+    # An empty drain is a no-op success: periodic flushers shouldn't have
+    # to pre-check queue depth.
+    noop = client.update(fit.handle_id, drain=True)
+    assert noop.kind == "noop"
+    assert noop.drained == 0 and noop.num_new_reviews == 0
+
+
+def test_ingest_overload_rejects_batch_whole():
+    client = _client(max_ingest_queue=4)
+    fit = client.fit(_reviews(n=15, seed=0), num_topics=4, base_vocab=120)
+    client.ingest(fit.handle_id, _reviews(n=3, seed=1))
+    with pytest.raises(protocol.RemoteError) as ei:
+        client.ingest(fit.handle_id, _reviews(n=2, seed=2))
+    assert ei.value.code == "overloaded"
+    # Nothing partial: the cursor still covers exactly the accepted batch.
+    st = client.stats()
+    assert st.ingest_acked[fit.handle_id] == 3
+    assert st.ingest_queued[fit.handle_id] == 3
+    client.update(fit.handle_id, drain=True)
+    assert client.ingest(fit.handle_id, _reviews(n=2, seed=2)).acked == 5
+
+
+def test_ingest_requires_known_handle_and_reviews():
+    client = _client()
+    with pytest.raises(protocol.RemoteError) as ei:
+        client.ingest(99, _reviews(n=1))
+    assert ei.value.code == "not_found"
+    fit = client.fit(_reviews(n=15, seed=0), num_topics=4, base_vocab=120)
+    with pytest.raises(protocol.RemoteError) as ei:
+        client.ingest(fit.handle_id, [])
+    assert ei.value.code == "invalid_argument"
+
+
+def test_release_drops_ingest_state():
+    client = _client()
+    fit = client.fit(_reviews(n=15, seed=0), num_topics=4, base_vocab=120)
+    client.ingest(fit.handle_id, _reviews(n=3, seed=1))
+    client.release(fit.handle_id)
+    st = client.stats()
+    assert st.total_queued == 0 and st.ingest_acked == {}
+
+
+def test_evicted_session_keeps_acked_reviews():
+    """max_sessions=1 with concurrent ingest: session eviction is view-state
+    only — the evicted client resyncs and not one acked review is lost."""
+    server = VedaliaServer(backend="jnp", num_sweeps=4, update_sweeps=1,
+                           max_sessions=1)
+    a = VedaliaClient(server=server)
+    fit = a.fit(_reviews(n=20, seed=0), num_topics=4, base_vocab=120)
+    a.sync_view(fit.handle_id)
+    old_sid = a.session_id
+    acked = a.ingest(fit.handle_id, _reviews(n=4, seed=1)).acked
+
+    b = VedaliaClient(server=server)
+    b.sync_view(fit.handle_id)  # opens b's session -> evicts a's
+    assert old_sid not in server.sessions
+
+    acked = a.ingest(fit.handle_id, _reviews(n=2, seed=2)).acked
+    assert acked == 6  # the cursor survived the eviction
+    recovered = a.sync_view(fit.handle_id)
+    assert recovered.resync and len(recovered.topics) >= 1
+    upd = a.update(fit.handle_id, drain=True)
+    assert upd.drained == 6 and upd.num_new_reviews == 6
+    assert a.perplexity(fit.handle_id) > 0
+    assert not a.sync_view(fit.handle_id).resync  # back to deltas
+
+
+def test_heldout_perplexity_verb():
+    client = _client()
+    fit = client.fit(_reviews(n=25, seed=0), num_topics=4, base_vocab=120)
+    train_ppx = client.perplexity(fit.handle_id)
+    held = client.perplexity(fit.handle_id, reviews=_reviews(n=6, seed=9))
+    assert np.isfinite(held) and held > 0
+    assert held != pytest.approx(train_ppx)  # genuinely a different measure
+    # Scoring must not mutate the model.
+    assert client.perplexity(fit.handle_id) == pytest.approx(train_ppx)
+
+
+# -- drift score -------------------------------------------------------------
+
+
+def _topic(tid=0, prob=0.5, words=(1, 2, 3), weights=(0.5, 0.3, 0.2)):
+    return TopicView(topic_id=tid, probability=prob, expected_rating=3.0,
+                     expected_helpful=1.0, expected_unhelpful=0.0,
+                     top_words=list(words), top_word_weights=list(weights))
+
+
+def test_signature_distance_is_graded():
+    t = _topic()
+    sig = views_lib.topic_signature(t)
+    assert views_lib.signature_distance(sig, t) == 0.0
+    assert views_lib.signature_distance(None, t) == 1.0
+    # A pure reorder of top words moves the score a little (Jaccard 0,
+    # weights moved), nowhere near the binary topic_changed verdict.
+    reordered = _topic(words=(2, 1, 3), weights=(0.5, 0.3, 0.2))
+    d_reorder = views_lib.signature_distance(sig, reordered)
+    assert views_lib.topic_changed(sig, reordered)  # binary: resend
+    assert 0 < d_reorder < 0.3  # graded: mild drift
+    # A disjoint top-word set is maximal word drift.
+    swapped = _topic(words=(7, 8, 9))
+    assert views_lib.signature_distance(sig, swapped) > 0.6
+    assert views_lib.signature_distance(sig, swapped) <= 1.0
+    # Mass shift alone scales with the relative change.
+    halved = _topic(prob=0.25)
+    assert 0.1 < views_lib.signature_distance(sig, halved) < 0.5
+
+
+def test_view_drift_counts_removed_topics():
+    view = views_lib.ModelView(topics=[_topic(tid=0)])
+    sigs = {0: views_lib.topic_signature(_topic(tid=0)),
+            1: views_lib.topic_signature(_topic(tid=1))}
+    assert views_lib.view_drift(sigs, view) == pytest.approx(0.5)
+    assert views_lib.view_drift({}, views_lib.ModelView(topics=[])) == 0.0
+
+
+# -- scheduler ---------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def drift_run():
+    """One full drift-policy pipeline over a concept-shifted stream."""
+    events = synthetic_events(QUICK)
+    router = StreamRouter([0, 1], capacity=32)
+    servers = {s: VedaliaServer(backend="jnp", num_sweeps=4,
+                                update_sweeps=1) for s in (0, 1)}
+    clients = {s: VedaliaClient(server=servers[s]) for s in (0, 1)}
+    scheduler = IncrementalScheduler(
+        clients, router, microbatch=6, min_fit_reviews=8,
+        staleness_budget=8.0, refit_sweeps=3, refit_policy="drift",
+        fit_kwargs=dict(num_topics=4, base_vocab=QUICK.vocab_size,
+                        num_sweeps=4))
+    pump(events, router, scheduler, step_interval=2.0)
+    return events, router, servers, clients, scheduler
+
+
+def test_scheduler_fits_updates_and_refits(drift_run):
+    events, router, servers, clients, scheduler = drift_run
+    st = scheduler.stats
+    assert st.fits >= 2  # multiple products bootstrapped
+    assert st.updates >= 3
+    assert st.refits >= 1  # the concept shift tripped the trigger
+    assert st.refits < st.updates  # ...but not on every micro-batch
+    assert st.events_applied + st.events_held_out == len(events)
+    assert router.stats().total_queued == 0  # flush drained everything
+    for status in scheduler.products.values():
+        assert status.handle_id is not None
+        assert not status.unapplied_ts and not status.pending_fit
+        assert status.signatures  # drift anchor exists
+
+
+def test_scheduler_staleness_budget(drift_run):
+    _, _, _, _, scheduler = drift_run
+    st = scheduler.stats
+    assert len(st.staleness) == st.events_applied
+    assert st.staleness_p(50) <= st.staleness_p(99)
+    # The budget bounds how long an acked review waits; the p99 can exceed
+    # it only by one step interval (the scheduler checks at step time).
+    assert st.staleness_p(99) <= scheduler.staleness_budget + 2.0 + 1e-6
+
+
+def test_scheduler_serves_through_shards(drift_run):
+    _, _, _, clients, scheduler = drift_run
+    for status in scheduler.products.values():
+        view = clients[status.shard_id].sync_view(status.handle_id)
+        assert view.valid
+        held = status.heldout
+        assert held  # the guard reservoir filled
+        ppx = clients[status.shard_id].perplexity(
+            status.handle_id, reviews=held)
+        assert np.isfinite(ppx)
+
+
+def test_refit_policy_knobs():
+    with pytest.raises(ValueError, match="refit policy"):
+        IncrementalScheduler({0: _client()}, StreamRouter([0]),
+                             refit_policy="sometimes")
+    with pytest.raises(ValueError, match="no client"):
+        IncrementalScheduler({}, StreamRouter([0]))
+    # base_vocab is never inferred: streamed reviews can use words the
+    # bootstrap batch never saw.
+    with pytest.raises(ValueError, match="base_vocab"):
+        IncrementalScheduler({0: _client()}, StreamRouter([0]))
+    with pytest.raises(ValueError, match="base_vocab"):
+        IncrementalScheduler({0: _client()}, StreamRouter([0]),
+                             fit_kwargs=dict(num_topics=4))
+
+
+def test_drop_shard_rebootstraps_products_on_survivor():
+    """Permanent shard loss (no snapshot): remove_shard + drop_shard
+    reroutes the dead shard's products, which re-bootstrap on the
+    survivor instead of ingesting into a decommissioned client."""
+    spec = dataclasses.replace(QUICK, num_products=2, duration=24.0,
+                               shift_at=None)
+    events = synthetic_events(spec)
+    router = StreamRouter([0, 1], capacity=64)
+    clients = {0: _client(), 1: _client()}
+    sched = IncrementalScheduler(
+        clients, router, microbatch=5, min_fit_reviews=6,
+        staleness_budget=6.0, refit_sweeps=2, refit_policy="never",
+        fit_kwargs=dict(num_topics=4, base_vocab=spec.vocab_size,
+                        num_sweeps=3))
+    half = len(events) // 2
+    pump(events[:half], router, sched, step_interval=2.0)
+    assert {s.shard_id for s in sched.products.values()} == {0, 1}
+
+    with pytest.raises(ValueError, match="still in the router"):
+        sched.drop_shard(0)
+    orphans = router.remove_shard(0)
+    sched.drop_shard(0)
+    for e in orphans:
+        assert router.offer(e)
+    pump(events[half:], router, sched, step_interval=2.0)
+
+    statuses = list(sched.products.values())
+    assert all(s.shard_id == 1 for s in statuses)  # all rerouted
+    assert all(s.handle_id is not None for s in statuses)  # re-bootstrapped
+    assert clients[1].stats().num_handles == len(statuses)
+    for s in statuses:
+        assert clients[1].sync_view(s.handle_id).valid
+
+
+def test_oversized_ingest_batch_is_chunked():
+    """One dispatch bigger than the server's whole ingest queue must land
+    (chunked + fold-and-retry), not crash on `overloaded`."""
+    server = VedaliaServer(backend="jnp", num_sweeps=3, update_sweeps=1,
+                           max_ingest_queue=4)
+    client = VedaliaClient(server=server)
+    router = StreamRouter([0], capacity=64)
+    sched = IncrementalScheduler(
+        {0: client}, router, microbatch=50, min_fit_reviews=6,
+        staleness_budget=100.0, refit_policy="never", heldout_every=1000,
+        fit_kwargs=dict(num_topics=4, base_vocab=120, num_sweeps=3))
+    events = [_event(i, pid=0, t=0.1 * i) for i in range(20)]
+    for e in events[:6]:  # bootstrap fit
+        assert router.offer(e)
+    sched.step(1.0)
+    for e in events[6:]:  # one 14-review dispatch vs a 4-slot queue
+        assert router.offer(e)
+    sched.step(2.0)
+    status = sched.products[0]
+    assert status.acked == 14
+    assert sched.stats.overloaded_retries >= 1
+    sched.flush(3.0)
+    assert client.stats().total_queued == 0
+    assert sched.stats.events_applied == 20
+
+
+def test_always_and_never_policies():
+    spec = dataclasses.replace(QUICK, num_products=1, duration=15.0,
+                               shift_at=None)
+    events = synthetic_events(spec)
+
+    def run(policy):
+        router = StreamRouter([0], capacity=32)
+        sched = IncrementalScheduler(
+            {0: _client()}, router, microbatch=5, min_fit_reviews=6,
+            staleness_budget=6.0, refit_sweeps=2, refit_policy=policy,
+            fit_kwargs=dict(num_topics=4, base_vocab=spec.vocab_size,
+                            num_sweeps=3))
+        pump(events, router, sched, step_interval=2.0)
+        return sched.stats
+
+    always, never = run("always"), run("never")
+    assert always.refits == always.updates > 0
+    assert never.refits == 0 and never.updates == always.updates
+
+
+# -- snapshot / restore ------------------------------------------------------
+
+
+def test_snapshot_roundtrip_is_codec_exact(drift_run):
+    _, _, servers, _, _ = drift_run
+    for sid, server in servers.items():
+        snap = snapshot_server(server)
+        blob = json.dumps(snap)  # must be pure JSON
+        restored = restore_server(json.loads(blob))
+        assert snapshot_server(restored) == snap, f"shard {sid} mismatch"
+        assert sorted(restored.service.handles) \
+            == sorted(server.service.handles)
+        assert restored.ingest_acked == server.ingest_acked
+        # Id counters survive too: a restored server must never re-mint a
+        # session/cursor id a pre-kill client still holds.
+        assert restored._next_session == server._next_session
+        assert restored._next_cursor == server._next_cursor
+
+
+def test_snapshot_preserves_pending_ingest():
+    client = _client()
+    fit = client.fit(_reviews(n=15, seed=0), num_topics=4, base_vocab=120)
+    client.ingest(fit.handle_id, _reviews(n=3, seed=1))
+    snap = snapshot_server(client.server)
+    restored = restore_server(snap)
+    client.rebind(server=restored)
+    # Acked-but-unapplied reviews survived the kill.
+    assert client.stats().ingest_queued[fit.handle_id] == 3
+    upd = client.update(fit.handle_id, drain=True)
+    assert upd.drained == 3 and upd.num_new_reviews == 3
+
+
+def test_clients_recover_from_restore_via_resync(drift_run):
+    _, _, servers, clients, scheduler = drift_run
+    sid = 0
+    status = next(s for s in scheduler.products.values()
+                  if s.shard_id == sid)
+    client = clients[sid]
+    assert not client.sync_view(status.handle_id).resync  # warm deltas
+    restored = restore_server(snapshot_server(servers[sid]))
+    client.rebind(server=restored)
+    recovered = client.sync_view(status.handle_id)  # old session + cursor
+    assert recovered.resync and len(recovered.topics) >= 1
+    assert not client.sync_view(status.handle_id).resync  # deltas resume
+    # The restored model still updates and serves.
+    upd = client.update(status.handle_id, _reviews(n=2, seed=42))
+    assert upd.num_new_reviews == 2
+
+
+def test_snapshot_restores_backend_opts():
+    server = VedaliaServer(backend="jnp", num_sweeps=3, update_sweeps=1,
+                           backend_opts={"alias": {"mh_steps": 2}})
+    client = VedaliaClient(server=server)
+    client.fit(_reviews(n=15, seed=0), num_topics=4, base_vocab=120)
+    snap = snapshot_server(server)
+    restored = restore_server(json.loads(json.dumps(snap)))
+    assert restored.service._backend_opts == {"alias": {"mh_steps": 2}}
+    assert snapshot_server(restored) == snap
+
+
+def test_restore_rejects_unknown_format():
+    with pytest.raises(ValueError, match="snapshot format"):
+        restore_server({"format": 999})
+
+
+def test_rebind_argument_validation():
+    client = _client()
+    with pytest.raises(ValueError, match="exactly one"):
+        client.rebind()
+    with pytest.raises(ValueError, match="exactly one"):
+        client.rebind(lambda s: s, server=client.server)
