@@ -9,7 +9,6 @@ overall computation time by a large margin".
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.chital.simulator import SimSpec, run as simulate
 

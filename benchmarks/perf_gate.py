@@ -1,0 +1,157 @@
+"""CI perf-trajectory gate: bench summary vs the committed baseline.
+
+`benchmarks/run.py` writes `experiments/bench/summary.json` per run; this
+script compares the gated metrics against the repo-root
+`BENCH_BASELINE.json` and exits nonzero when a metric regresses more than
+the tolerance (default 25%). That turns the CI bench smoke from a
+pass/fail correctness check into a perf *trajectory*: speedups must land
+by refreshing the baseline, and regressions fail the job instead of
+landing silently.
+
+Refreshing the baseline (after an intentional perf change, from a clean
+run on main):
+
+    PYTHONPATH=src python -m benchmarks.run --only sampler,batch
+    python -m benchmarks.perf_gate --update
+
+The baseline must be measured on the machine class that gates it: CI
+compares absolute throughputs, so after the first CI run (or a runner
+class change) download the `bench-summary` artifact and refresh from it —
+`python -m benchmarks.perf_gate --summary summary.json --update` — so the
+committed numbers describe the CI runner, not a dev box.
+
+Metrics are throughput-shaped (higher is better). The baseline stores the
+flattened metric paths it gates, so adding a metric here and running
+`--update` is the whole workflow; `--update` refuses partial summaries so
+a gate can never be dropped silently.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINE = "BENCH_BASELINE.json"
+SUMMARY = os.path.join("experiments", "bench", "summary.json")
+TOLERANCE = 0.25
+
+#: bench name -> dotted paths into that bench's summary entry; all gated
+#: metrics are higher-is-better throughputs/ratios.
+METRICS = {
+    "sampler": [
+        "samplers.parallel.tokens_per_s",
+        "samplers.kernel.tokens_per_s",
+    ],
+    # The >=3x batched-vs-sequential speedup is asserted inside
+    # batch_bench itself on every run; the trajectory gates the absolute
+    # batched throughput, which is far less noisy than the ratio.
+    "batch": [
+        "models_per_s.batched",
+    ],
+}
+
+
+def _lookup(d: dict, path: str):
+    for part in path.split("."):
+        if not isinstance(d, dict) or part not in d:
+            return None
+        d = d[part]
+    return d
+
+
+def collect(summary: dict) -> dict:
+    """Flatten the gated metrics out of a run summary."""
+    out: dict[str, dict[str, float]] = {}
+    benches = summary.get("benches", {})
+    for bench, paths in METRICS.items():
+        if bench not in benches:
+            continue
+        vals = {}
+        for path in paths:
+            v = _lookup(benches[bench], path)
+            if isinstance(v, (int, float)):
+                vals[path] = float(v)
+        if vals:
+            out[bench] = vals
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--summary", default=SUMMARY)
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE,
+                    help="allowed fractional regression (default 0.25)")
+    ap.add_argument("--require", default="",
+                    help="comma-separated benches that must be present "
+                         "in the summary (CI passes sampler,batch)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current summary")
+    args = ap.parse_args(argv)
+
+    with open(args.summary) as f:
+        current = collect(json.load(f))
+
+    required = set(filter(None, args.require.split(",")))
+    missing = required - set(current)
+    if missing:
+        print(f"perf-gate: required bench(es) missing from "
+              f"{args.summary}: {sorted(missing)}", file=sys.stderr)
+        return 1
+
+    if args.update:
+        # A refresh must cover every gated bench: rewriting from a partial
+        # run would silently drop the missing benches' gates.
+        absent = set(METRICS) - set(current)
+        if absent:
+            print(f"perf-gate: refusing --update from a partial summary; "
+                  f"missing bench(es): {sorted(absent)} "
+                  f"(run benchmarks.run --only "
+                  f"{','.join(sorted(METRICS))})", file=sys.stderr)
+            return 1
+        with open(args.baseline, "w") as f:
+            json.dump(current, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"perf-gate: baseline refreshed -> {args.baseline}")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures = []
+    for bench, metrics in sorted(current.items()):
+        for path in metrics:
+            if path not in baseline.get(bench, {}):
+                print(f"perf-gate: [new ] {bench}.{path}: not in the "
+                      f"baseline yet (refresh with --update)")
+    for bench, metrics in sorted(baseline.items()):
+        if bench not in current:
+            print(f"perf-gate: [skip] {bench} (not in this summary)")
+            continue
+        for path, base in sorted(metrics.items()):
+            now = current[bench].get(path)
+            if now is None:
+                failures.append(f"{bench}.{path}: metric vanished "
+                                f"(baseline {base:g})")
+                continue
+            floor = base * (1.0 - args.tolerance)
+            delta = (now - base) / base if base else 0.0
+            status = "OK " if now >= floor else "REGRESSED"
+            print(f"perf-gate: [{status}] {bench}.{path}: "
+                  f"{now:g} vs baseline {base:g} ({delta:+.1%})")
+            if now < floor:
+                failures.append(
+                    f"{bench}.{path}: {now:g} < {floor:g} "
+                    f"(baseline {base:g} - {args.tolerance:.0%})")
+    if failures:
+        print("perf-gate: FAILED\n  " + "\n  ".join(failures),
+              file=sys.stderr)
+        return 1
+    print("perf-gate: all gated metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -28,7 +28,7 @@ DRYRUN_DIR = "experiments/dryrun"
 
 
 def param_count(cfg) -> int:
-    return sum(math.prod(l.shape) for l in jax.tree.leaves(M.build_schema(cfg)))
+    return sum(math.prod(leaf.shape) for leaf in jax.tree.leaves(M.build_schema(cfg)))
 
 
 def active_param_count(cfg) -> int:

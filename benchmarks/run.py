@@ -31,6 +31,8 @@ BENCHES = [
      "benchmarks.delta_view_bench"),
     ("stream", "streaming ingest throughput / staleness / refit economics",
      "benchmarks.stream_bench"),
+    ("batch", "batched multi-model fit engine vs sequential fits",
+     "benchmarks.batch_bench"),
     ("roofline", "roofline terms from the dry-run (deliverable g)",
      "benchmarks.roofline"),
 ]

@@ -68,7 +68,7 @@ def run(quick: bool = False) -> dict:
         t0 = time.time()
         s.run(seq_sweeps)
         dt = (time.time() - t0) * sweeps / seq_sweeps
-        from repro.core.types import Corpus, build_counts
+        from repro.core.types import build_counts
         import jax.numpy as jnp
 
         st = build_counts(cfg, corpus, jnp.asarray(s.z, jnp.int32))

@@ -36,7 +36,7 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", default="jnp",
                     choices=("jnp", "pallas", "distributed", "alias",
-                             "sparse", "auto"))
+                             "sparse", "batched", "auto"))
     ap.add_argument("--products", type=int, default=3)
     ap.add_argument("--reviews", type=int, default=200)
     ap.add_argument("--new-reviews", type=int, default=40)

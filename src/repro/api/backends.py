@@ -14,6 +14,9 @@ implementation is chosen by name:
                sweep (`core.alias`) — proposal-based fast sampler
   sparse       SparseLDA (Yao et al., 2009) sequential s/r/q-bucket sweep
                (`core.sparse`) — the paper's phone-side reference
+  batched      multi-model batched sweep (`core.batch`): M compatible
+               product models stacked into one launch — vmapped jnp oracle
+               on CPU, model-grid Pallas kernel on TPU
 
 All backends speak *stored* `LDAState` at the boundary (fixed point when
 ``cfg.w_bits`` is set — see `repro.api.codec`) so they are interchangeable
@@ -133,17 +136,21 @@ def select_backend(
     task: str = "fit",
     device_kind: Optional[str] = None,
     available: Optional[list[str]] = None,
+    num_models: int = 1,
 ) -> str:
     """Resolve the `"auto"` pseudo-backend for a workload.
 
     Routing order (first match wins):
       1. an explicit `device_kind` picks the backend built for that device
          class ("phone" -> sparse, "pod" -> distributed, "tpu" -> jnp);
-      2. updates go to the oracle sweep — incremental resampling needs
+      2. multi-model work (`num_models > 1` — batch fits, coalesced
+         refits) goes to the stacked `batched` sweep: one launch for all
+         M models instead of M cold launches;
+      3. updates go to the oracle sweep — incremental resampling needs
          exact-conditional warm-start semantics, not MH proposals;
-      3. large fits go to the proposal sampler (`alias`), whose per-token
+      4. large fits go to the proposal sampler (`alias`), whose per-token
          cost is independent of K;
-      4. everything else gets the jnp oracle.
+      5. everything else gets the jnp oracle.
     """
     names = set(available if available is not None else available_backends())
 
@@ -163,6 +170,8 @@ def select_backend(
             if cls is not None and cls.capabilities.device_kind == device_kind:
                 return n
         return pick("jnp")
+    if num_models > 1:
+        return pick("batched", "jnp")
     if task == "update":
         return pick("jnp")
     if num_tokens >= _LARGE_CORPUS_TOKENS:
@@ -357,3 +366,63 @@ class SparseSampler(_BaseSampler):
         # One sampler instance for the whole run: counts and bucket caches
         # are built once, not once per sweep.
         return self._sequential(cfg, state, corpus, key, num_sweeps)
+
+
+@register_backend("batched", SamplerCapabilities(device_kind="tpu"))
+class BatchedSampler(_BaseSampler):
+    """Multi-model batched sweep (`core.batch`): M compatible product
+    models stacked into one launch.
+
+    The stacked surface is `run_many`/`sweep_batch` (leading (M,) axis on
+    every `Corpus`/`LDAState` leaf; `serving.batch_engine` does the
+    bucketing and padding). `path` selects the execution path per launch:
+    "jnp" is the vmapped oracle sweep, "pallas" the model-grid fused
+    kernel, and "auto" (default) picks pallas on TPU and the oracle
+    elsewhere — the same split as the single-model backends.
+
+    The single-model `Sampler` protocol still works (an M=1 stack), so
+    `backend="batched"` is valid anywhere a backend name is accepted.
+    """
+
+    def __init__(self, path: str = "auto", block: int = 4096,
+                 token_block: int = 256):
+        if path not in ("auto", "jnp", "pallas"):
+            raise ValueError(f"unknown batched path {path!r}")
+        self.path = path
+        self.block = block
+        self.token_block = token_block
+
+    def _path(self) -> str:
+        if self.path != "auto":
+            return self.path
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+    def sweep_batch(self, cfg, states, corpora, keys):
+        """One fused sweep over stacked models ((M, 2) keys)."""
+        from repro.core import batch
+
+        return batch.sweep_batch(
+            cfg, states, corpora, keys, self.block, self.token_block,
+            self._path())
+
+    def run_many(self, cfg, corpora, keys, num_sweeps, states=None):
+        """Batched multi-sweep fit/refit: cold when `states` is None."""
+        from repro.core import batch
+
+        return batch.fit_many(
+            cfg, corpora, keys, num_sweeps, states=states, block=self.block,
+            token_block=self.token_block, path=self._path())
+
+    def _stack1(self, tree):
+        return jax.tree_util.tree_map(lambda x: x[None], tree)
+
+    def sweep(self, cfg, state, corpus, key):
+        out = self.sweep_batch(
+            cfg, self._stack1(state), self._stack1(corpus), key[None])
+        return jax.tree_util.tree_map(lambda x: x[0], out)
+
+    def run(self, cfg, corpus, key, num_sweeps, state=None):
+        out = self.run_many(
+            cfg, self._stack1(corpus), key[None], num_sweeps,
+            states=None if state is None else self._stack1(state))
+        return jax.tree_util.tree_map(lambda x: x[0], out)

@@ -255,6 +255,57 @@ class VedaliaClient:
             "device_kind": device_kind,
         }))
 
+    def fit_batch(
+        self,
+        review_sets: Sequence[Sequence[Review]],
+        *,
+        num_topics: int = 12,
+        base_vocab: Optional[int] = None,
+        alpha: float = 0.1,
+        beta: float = 0.01,
+        w_bits: Optional[int] = 8,
+        backend: Optional[str] = None,
+        num_sweeps: Optional[int] = None,
+        seed: Optional[int] = None,
+        device_kind: Optional[str] = None,
+    ) -> list[FitResult]:
+        """Fit one model per review set in one request; the server batches
+        compatible models into shared sampler launches (the `batched`
+        backend) and answers with one `FitResult` per set, in order."""
+        p = self._call("fit_batch", {
+            "review_sets": [protocol.encode_reviews(rs)
+                            for rs in review_sets],
+            "num_topics": num_topics,
+            "base_vocab": base_vocab,
+            "alpha": alpha,
+            "beta": beta,
+            "w_bits": w_bits,
+            "backend": backend,
+            "num_sweeps": num_sweeps,
+            "seed": seed,
+            "device_kind": device_kind,
+        })
+        return [self._fit_result(f) for f in p["fits"]]
+
+    def refine_batch(
+        self,
+        handle_ids: Sequence[int],
+        num_sweeps: int,
+        *,
+        backend: Optional[str] = None,
+        seed: Optional[int] = None,
+    ) -> list[FitResult]:
+        """Continue sampling several handles in one request — the wire
+        face of coalesced refits (stack-compatible handles share one
+        batched launch server-side)."""
+        p = self._call("refine_batch", {
+            "handle_ids": [int(h) for h in handle_ids],
+            "num_sweeps": num_sweeps,
+            "backend": backend,
+            "seed": seed,
+        })
+        return [self._fit_result(f) for f in p["fits"]]
+
     def fit_prepared(
         self,
         corpus_id: int,

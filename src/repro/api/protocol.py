@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import base64
 import json
-from typing import Any, Optional
+from typing import Optional
 
 import numpy as np
 
@@ -37,13 +37,18 @@ PROTOCOL_VERSION = 1
 #: handshake; everything else maps onto the service layer. `ingest` and
 #: `stats` are the streaming verbs: batched review ingestion with an ack
 #: cursor, and the observability surface backpressure decisions read.
+#: `fit_batch` / `refine_batch` are the multi-model verbs: M review sets
+#: (or M served handles) fitted/refitted through the batched sampler in
+#: as few launches as bucketing allows.
 KINDS = (
     "hello",
     "open_session",
     "prepare",
     "fit",
+    "fit_batch",
     "fit_prepared",
     "refine",
+    "refine_batch",
     "update",
     "ingest",
     "view",

@@ -228,6 +228,42 @@ class VedaliaServer:
         )
         return self._fit_payload(handle)
 
+    def _handle_fit_batch(self, payload: dict) -> dict:
+        """Fit one model per review set through the batched multi-model
+        engine (`VedaliaService.fit_batch`); one fit payload per set, in
+        request order."""
+        sets = [protocol.decode_reviews(s) for s in payload["review_sets"]]
+        handles = self.service.fit_batch(
+            sets,
+            num_topics=int(payload.get("num_topics", 12)),
+            base_vocab=payload.get("base_vocab"),
+            alpha=float(payload.get("alpha", 0.1)),
+            beta=float(payload.get("beta", 0.01)),
+            w_bits=payload.get("w_bits", 8),
+            backend=self._backend_arg(payload),
+            num_sweeps=payload.get("num_sweeps"),
+            seed=payload.get("seed"),
+            device_kind=payload.get("device_kind"),
+        )
+        return {"fits": [self._fit_payload(h) for h in handles]}
+
+    def _handle_refine_batch(self, payload: dict) -> dict:
+        """Warm-refit several handles in one coalesced launch
+        (`VedaliaService.refine_many`); one fit payload per handle."""
+        handles = [
+            self._handle_of({"handle_id": hid})
+            for hid in payload["handle_ids"]
+        ]
+        if not handles:
+            raise ValueError("refine_batch needs at least one handle_id")
+        self.service.refine_many(
+            handles,
+            int(payload["num_sweeps"]),
+            backend=self._backend_arg(payload),
+            seed=payload.get("seed"),
+        )
+        return {"fits": [self._fit_payload(h) for h in handles]}
+
     def _handle_fit_prepared(self, payload: dict) -> dict:
         cid = int(payload["corpus_id"])
         if cid not in self.preps:

@@ -156,13 +156,15 @@ class VedaliaService:
         num_tokens: int,
         task: str,
         device_kind: Optional[str] = None,
+        num_models: int = 1,
     ) -> str:
         """Concrete backend name for a call (routes the `auto` pseudo-backend
-        by workload: corpus size, fit-vs-update, device kind)."""
+        by workload: corpus size, fit-vs-update, device kind, model count)."""
         backend = backend or self.default_backend
         if backend == AUTO:
             backend = select_backend(
-                num_tokens=num_tokens, task=task, device_kind=device_kind)
+                num_tokens=num_tokens, task=task, device_kind=device_kind,
+                num_models=num_models)
         return backend
 
     def _key(self, seed: Optional[int] = None) -> jax.Array:
@@ -170,6 +172,13 @@ class VedaliaService:
             return jax.random.PRNGKey(seed)
         self._op += 1
         return jax.random.PRNGKey(self._seed * 1_000_003 + self._op)
+
+    def _keys(self, m: int, seed: Optional[int] = None) -> list[jax.Array]:
+        """One independent PRNG key per model of a batch."""
+        if seed is not None:
+            base = jax.random.PRNGKey(seed)
+            return [jax.random.fold_in(base, i) for i in range(m)]
+        return [self._key() for _ in range(m)]
 
     def _register(self, handle: ModelHandle) -> ModelHandle:
         self.handles[handle.handle_id] = handle
@@ -231,6 +240,94 @@ class VedaliaService:
             handle_id=self._new_id(), prep=prep, model=model,
             backend=backend, sweeps_run=sweeps))
 
+    def fit_batch(
+        self,
+        review_sets: Sequence[Sequence[Review]],
+        *,
+        num_topics: int = 12,
+        base_vocab: Optional[int] = None,
+        alpha: float = 0.1,
+        beta: float = 0.01,
+        w_bits: Optional[int] = 8,
+        backend: Optional[str] = None,
+        num_sweeps: Optional[int] = None,
+        seed: Optional[int] = None,
+        device_kind: Optional[str] = None,
+    ) -> list[ModelHandle]:
+        """Fit one model per review set — batched into as few sampler
+        launches as bucketing allows (`serving.batch_engine`).
+
+        All sets share the fit parameters, so the prepared models are
+        stack-compatible by construction; a `base_vocab` of None is
+        inferred over *all* sets jointly (per-set inference would make the
+        models vocabulary-incompatible).
+        """
+        if not len(review_sets):
+            raise ValueError("fit_batch() needs at least one review set")
+        for i, rs in enumerate(review_sets):
+            if not len(rs):
+                raise ValueError(f"fit_batch() review set {i} is empty")
+        if base_vocab is None:
+            base_vocab = max(_infer_base_vocab(rs) for rs in review_sets)
+        preps = [
+            rlda.prepare(
+                list(rs), base_vocab=base_vocab, num_topics=num_topics,
+                alpha=alpha, beta=beta, w_bits=w_bits,
+                seed=seed if seed is not None else self._seed)
+            for rs in review_sets
+        ]
+        return self.fit_batch_prepared(
+            preps, backend=backend, num_sweeps=num_sweeps, seed=seed,
+            device_kind=device_kind)
+
+    def fit_batch_prepared(
+        self,
+        preps: Sequence[RLDACorpus],
+        *,
+        backend: Optional[str] = None,
+        num_sweeps: Optional[int] = None,
+        seed: Optional[int] = None,
+        device_kind: Optional[str] = None,
+    ) -> list[ModelHandle]:
+        """Batched fit of already-prepared corpora (one handle each).
+
+        The `auto` route resolves multi-model fits to the `batched`
+        backend; an explicit non-batched backend (or a single model) falls
+        back to sequential `fit_prepared` calls, so the surface is safe to
+        call unconditionally.
+        """
+        if not len(preps):
+            raise ValueError("fit_batch_prepared() needs at least one corpus")
+        total_tokens = sum(p.corpus.num_tokens for p in preps)
+        backend = self._resolve(
+            backend, num_tokens=total_tokens, task="fit",
+            device_kind=device_kind, num_models=len(preps))
+        if backend != "batched" or len(preps) == 1:
+            return [
+                self.fit_prepared(
+                    p, backend=backend, num_sweeps=num_sweeps,
+                    seed=seed if seed is None else seed + i)
+                for i, p in enumerate(preps)
+            ]
+        import repro.serving.batch_engine as batch_engine
+
+        sweeps = num_sweeps if num_sweeps is not None else self.num_sweeps
+        states, _ = batch_engine.run_batched(
+            self.sampler("batched"),
+            [p.cfg for p in preps],
+            [p.corpus for p in preps],
+            self._keys(len(preps), seed),
+            sweeps,
+        )
+        return [
+            self._register(ModelHandle(
+                handle_id=self._new_id(), prep=p,
+                model=update.UpdatableModel(
+                    cfg=p.cfg, corpus=p.corpus, state=st),
+                backend="batched", sweeps_run=sweeps))
+            for p, st in zip(preps, states)
+        ]
+
     def adopt(
         self,
         prep: RLDACorpus,
@@ -267,6 +364,58 @@ class VedaliaService:
         handle.sweeps_run += num_sweeps
         handle.backend = backend
         return handle
+
+    def refine_many(
+        self,
+        handles: Sequence[ModelHandle],
+        num_sweeps: int,
+        *,
+        backend: Optional[str] = None,
+        seed: Optional[int] = None,
+    ) -> list[ModelHandle]:
+        """Warm-refit several served models at once.
+
+        The `auto` route resolves multi-model refits to the `batched`
+        backend: stack-compatible handles (bucketed by
+        `serving.batch_engine`) continue their chains in one launch
+        instead of N sequential `refine` calls. Incompatible handles, an
+        explicit non-batched backend, or a single handle fall back to
+        per-handle `refine`.
+        """
+        handles = list(handles)
+        if not handles:
+            return handles
+        # Dedup repeated handles (same served model named twice): each
+        # model must run its sweeps exactly once, not burn a stacked slot
+        # per mention and double-count sweeps_run.
+        unique = list({h.handle_id: h for h in handles}.values())
+        backend = self._resolve(
+            backend,
+            num_tokens=max(h.model.corpus.num_tokens for h in unique),
+            task="update", num_models=len(unique))
+        if backend != "batched" or len(unique) == 1:
+            for i, h in enumerate(unique):
+                # Per-handle seeds, like the fit_batch_prepared fallback:
+                # a shared explicit seed would give every model the same
+                # gumbel stream (correlated chains).
+                self.refine(h, num_sweeps, backend=backend,
+                            seed=seed if seed is None else seed + i)
+            return handles
+        import repro.serving.batch_engine as batch_engine
+
+        states, _ = batch_engine.run_batched(
+            self.sampler("batched"),
+            [h.cfg for h in unique],
+            [h.model.corpus for h in unique],
+            self._keys(len(unique), seed),
+            num_sweeps,
+            states=[h.model.state for h in unique],
+        )
+        for h, st in zip(unique, states):
+            h.model.state = st
+            h.sweeps_run += num_sweeps
+            h.backend = "batched"
+        return handles
 
     # -- update (§3.2) -----------------------------------------------------
 

@@ -9,7 +9,6 @@ variant (≤2 layers, d_model ≤ 512, ≤4 experts) of the same family.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

@@ -20,7 +20,6 @@ as `repro.api.codec`.
 
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fractional

@@ -24,7 +24,6 @@ shards; `docs` holds SHARD-LOCAL doc ids in [0, num_docs/n_shards).
 
 from __future__ import annotations
 
-from functools import partial
 
 import inspect
 
@@ -50,7 +49,6 @@ def _make_shard_map(fn, mesh, in_specs, out_specs):
 
 from jax.sharding import PartitionSpec as P
 
-from repro.core import fractional
 from repro.core.gibbs import resample_block
 from repro.core.types import LDAConfig
 

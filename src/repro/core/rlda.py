@@ -144,7 +144,6 @@ def prepare(
     information along with other latent variables into word observation, then
     sample the transformed data in an LDA-like fashion".
     """
-    rng = np.random.default_rng(seed)
     d_count = len(reviews)
     ratings = np.array([r.rating for r in reviews], np.float64)
     users = np.array([r.user for r in reviews], np.int64)

@@ -7,7 +7,6 @@ return values — selected by the model code's `use_kernel=True` path.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.chunk_scan.kernel import chunk_scan_pallas
 

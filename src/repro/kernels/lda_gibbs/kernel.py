@@ -18,6 +18,13 @@ in-kernel: int32 rows are scaled by 2^-(w_bits+1) before scoring.
 
 Grid: (num_token_blocks,). VMEM per step with TB=256, K=1024:
 3 f32/i32 tiles (rows_d, rows_w, gumbel) + broadcast totals ≈ 3.3 MB.
+
+The batched multi-model variant (`gibbs_resample_blocked_batched`) adds a
+leading *model grid dimension*: M stacked product models share one
+`pallas_call` with grid (M, num_token_blocks), and each token block's
+BlockSpec indexes its own model's gathered count rows and topic totals —
+self-exclusion and w_bits fixed-point rescaling are the same tile body, so
+the fused batch launch is exactly M independent single-model sweeps.
 """
 
 from __future__ import annotations
@@ -27,6 +34,46 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+def _resample_tile(
+    rows_d,
+    rows_w,
+    tot,
+    z,
+    w,
+    g,
+    *,
+    alpha: float,
+    beta: float,
+    beta_bar: float,
+    w_bits: int | None,
+):
+    """The shared (TB, K) score+Gumbel-max tile body.
+
+    Both the single-model and the model-grid batched kernels call this, so
+    a batched launch is bit-for-bit M independent single-model tiles.
+    """
+    if w_bits is not None:
+        scale = 2.0 ** -(w_bits + 1)
+        rows_d = rows_d.astype(jnp.float32) * scale
+        rows_w = rows_w.astype(jnp.float32) * scale
+        tot = tot.astype(jnp.float32) * scale
+    else:
+        rows_d = rows_d.astype(jnp.float32)
+        rows_w = rows_w.astype(jnp.float32)
+        tot = tot.astype(jnp.float32)
+
+    tb, k = rows_d.shape
+    topic_iota = jax.lax.broadcasted_iota(jnp.int32, (tb, k), 1)
+    own = jnp.where(topic_iota == z[:, None], w[:, None], 0.0)
+
+    rd = jnp.maximum(rows_d - own, 0.0)
+    rw = jnp.maximum(rows_w - own, 0.0)
+    tt = jnp.maximum(tot[None, :] - own, 1e-9)
+    logits = jnp.log(rd + alpha) + jnp.log(rw + beta) - jnp.log(tt + beta_bar)
+    z_new = jnp.argmax(logits + g, axis=-1).astype(z.dtype)
+    return jnp.where(w > 0.0, z_new, z)
 
 
 def _gibbs_kernel(
@@ -43,31 +90,48 @@ def _gibbs_kernel(
     beta_bar: float,
     w_bits: int | None,
 ):
-    rows_d = rows_d_ref[...]
-    rows_w = rows_w_ref[...]
-    tot = tot_ref[...]
-    if w_bits is not None:
-        scale = 2.0 ** -(w_bits + 1)
-        rows_d = rows_d.astype(jnp.float32) * scale
-        rows_w = rows_w.astype(jnp.float32) * scale
-        tot = tot.astype(jnp.float32) * scale
-    else:
-        rows_d = rows_d.astype(jnp.float32)
-        rows_w = rows_w.astype(jnp.float32)
-        tot = tot.astype(jnp.float32)
+    z_out_ref[...] = _resample_tile(
+        rows_d_ref[...],
+        rows_w_ref[...],
+        tot_ref[...],
+        z_ref[...],
+        w_ref[...],
+        g_ref[...],
+        alpha=alpha,
+        beta=beta,
+        beta_bar=beta_bar,
+        w_bits=w_bits,
+    )
 
-    z = z_ref[...]
-    w = w_ref[...]
-    tb, k = rows_d.shape
-    topic_iota = jax.lax.broadcasted_iota(jnp.int32, (tb, k), 1)
-    own = jnp.where(topic_iota == z[:, None], w[:, None], 0.0)
 
-    rd = jnp.maximum(rows_d - own, 0.0)
-    rw = jnp.maximum(rows_w - own, 0.0)
-    tt = jnp.maximum(tot[None, :] - own, 1e-9)
-    logits = jnp.log(rd + alpha) + jnp.log(rw + beta) - jnp.log(tt + beta_bar)
-    z_new = jnp.argmax(logits + g_ref[...], axis=-1).astype(z.dtype)
-    z_out_ref[...] = jnp.where(w > 0.0, z_new, z)
+def _gibbs_kernel_batched(
+    rows_d_ref,
+    rows_w_ref,
+    tot_ref,
+    z_ref,
+    w_ref,
+    g_ref,
+    z_out_ref,
+    *,
+    alpha: float,
+    beta: float,
+    beta_bar: float,
+    w_bits: int | None,
+):
+    # Block shapes carry a leading model dim of 1: this grid step's token
+    # block indexes *its own model's* gathered count rows and totals.
+    z_out_ref[0] = _resample_tile(
+        rows_d_ref[0],
+        rows_w_ref[0],
+        tot_ref[0],
+        z_ref[0],
+        w_ref[0],
+        g_ref[0],
+        alpha=alpha,
+        beta=beta,
+        beta_bar=beta_bar,
+        w_bits=w_bits,
+    )
 
 
 def gibbs_resample_blocked(
@@ -110,4 +174,54 @@ def gibbs_resample_blocked(
         out_shape=jax.ShapeDtypeStruct((n,), z.dtype),
         interpret=interpret,
         name="lda_gibbs_resample",
+    )(rows_d, rows_w, tot, z, weights, gumbel)
+
+
+def gibbs_resample_blocked_batched(
+    rows_d: jax.Array,  # (M, N, K) per-model gathered doc-topic count rows
+    rows_w: jax.Array,  # (M, N, K) per-model gathered word-topic count rows
+    tot: jax.Array,  # (M, K) per-model topic totals
+    z: jax.Array,  # (M, N)
+    weights: jax.Array,  # (M, N)
+    gumbel: jax.Array,  # (M, N, K)
+    *,
+    alpha: float,
+    beta: float,
+    beta_bar: float,
+    w_bits: int | None = None,
+    token_block: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """One kernel launch over M stacked models: grid (M, N // token_block).
+
+    Every model shares the hyperparameters (they are compile-time kernel
+    constants — the batch engine buckets models by them) while each grid
+    step's BlockSpecs select that model's count rows, totals, assignments
+    and noise, so the fused launch preserves exact per-model self-exclusion
+    and w_bits fixed-point weighting.
+    """
+    m, n, k = rows_d.shape
+    assert n % token_block == 0, (n, token_block)
+    assert k % 128 == 0, k
+    grid = (m, n // token_block)
+
+    kern = functools.partial(
+        _gibbs_kernel_batched,
+        alpha=alpha, beta=beta, beta_bar=beta_bar, w_bits=w_bits,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, token_block, k), lambda j, i: (j, i, 0)),
+            pl.BlockSpec((1, token_block, k), lambda j, i: (j, i, 0)),
+            pl.BlockSpec((1, k), lambda j, i: (j, 0)),
+            pl.BlockSpec((1, token_block), lambda j, i: (j, i)),
+            pl.BlockSpec((1, token_block), lambda j, i: (j, i)),
+            pl.BlockSpec((1, token_block, k), lambda j, i: (j, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, token_block), lambda j, i: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((m, n), z.dtype),
+        interpret=interpret,
+        name="lda_gibbs_resample_batched",
     )(rows_d, rows_w, tot, z, weights, gumbel)

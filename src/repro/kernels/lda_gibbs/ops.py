@@ -16,7 +16,10 @@ import jax.numpy as jnp
 
 from repro.core import codec
 from repro.core.types import Corpus, LDAConfig, LDAState
-from repro.kernels.lda_gibbs.kernel import gibbs_resample_blocked
+from repro.kernels.lda_gibbs.kernel import (
+    gibbs_resample_blocked,
+    gibbs_resample_blocked_batched,
+)
 
 
 def _interpret() -> bool:
@@ -83,3 +86,60 @@ def sweep(
     """Full kernel-path Gibbs sweep (resample + count rebuild)."""
     z_new = sweep_resample(cfg, state, corpus, key, token_block)
     return codec.rebuild_state(cfg, corpus, z_new)
+
+
+@partial(jax.jit, static_argnums=(0, 4))
+def sweep_many(
+    cfg: LDAConfig,
+    states: LDAState,  # stacked: z (M, N), n_dt (M, D, K), n_wt (M, V, K)
+    corpora: Corpus,  # stacked: docs/words/weights (M, N)
+    keys: jax.Array,  # (M, 2) one PRNG key per model
+    token_block: int = 256,
+) -> LDAState:
+    """One fused Gibbs sweep over M stacked models (single kernel launch).
+
+    `cfg` is the shared batch config: every stacked model has the same
+    num_topics/vocab/hyperparameters and `cfg.num_docs` is the padded
+    per-model document capacity (`serving.batch_engine` buckets and pads).
+    Gathers run per model (an (M, N) batched XLA gather), the model-grid
+    kernel fuses score+sample for all M models, and counts are rebuilt
+    per model by a vmapped scatter-add.
+    """
+    m, n = corpora.docs.shape
+    k = cfg.num_topics
+    kp = -(-k // 128) * 128
+    npad = -(-n // token_block) * token_block
+
+    rows_d = jax.vmap(lambda n_dt, d: n_dt[d])(states.n_dt, corpora.docs)
+    rows_w = jax.vmap(lambda n_wt, w: n_wt[w])(states.n_wt, corpora.words)
+
+    def pad3(x, fill=0):
+        return jnp.pad(
+            x, ((0, 0), (0, npad - n), (0, kp - k)), constant_values=fill
+        )
+
+    def pad2(x, fill=0):
+        return jnp.pad(x, ((0, 0), (0, npad - n)), constant_values=fill)
+
+    gumbel = jax.vmap(
+        lambda kk: jax.random.gumbel(kk, (npad, kp), jnp.float32)
+    )(keys)
+    # Padded topics get -inf scores via zero counts + -inf gumbel.
+    gumbel = jnp.where(jnp.arange(kp)[None, None, :] < k, gumbel, -jnp.inf)
+
+    z_new = gibbs_resample_blocked_batched(
+        pad3(rows_d),
+        pad3(rows_w),
+        jnp.pad(states.n_t, ((0, 0), (0, kp - k))),
+        pad2(states.z),
+        pad2(corpora.weights, 0.0),
+        gumbel,
+        alpha=cfg.alpha,
+        beta=cfg.beta,
+        beta_bar=cfg.beta_bar,
+        w_bits=cfg.w_bits,
+        token_block=token_block,
+        interpret=_interpret(),
+    )[:, :n]
+    return jax.vmap(lambda co, z: codec.rebuild_state(cfg, co, z))(
+        corpora, z_new)

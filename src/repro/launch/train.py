@@ -17,7 +17,6 @@ import json
 import jax
 
 from repro import configs
-from repro.launch import mesh as mesh_lib
 from repro.train.loop import train
 from repro.train.optim import OptConfig
 

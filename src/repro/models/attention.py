@@ -16,7 +16,6 @@ soft-capping, cross-attention, and two blocking strategies:
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -95,7 +94,6 @@ def flash_attention(
     qg = q.reshape(b, nq, q_block, hkv, g, hd).swapaxes(0, 1)  # (nq, B, ...)
     kb_ = k.reshape(b, nkv, kv_block, hkv, hd)
     vb_ = v.reshape(b, nkv, kv_block, hkv, hd)
-    kv_valid = jnp.arange(skv + pk) < skv  # mask padded kv
 
     def q_tile_positions(qb):
         return q_offset + qb * q_block + jnp.arange(q_block)

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +42,6 @@ from repro.models.layers import (
     mlp,
     rms_norm,
     rope,
-    softcap,
     unembed_chunked,
 )
 from repro.models.moe import moe_layer
@@ -889,7 +888,6 @@ def prefill(params, cfg: ArchConfig, batch, cache_len: int, *, impl="masked",
 
 def decode_step(params, cfg: ArchConfig, cache, tokens, pos):
     """One serving step: tokens (B,) at position `pos` -> (cache, logits)."""
-    b = tokens.shape[0]
     x = embed(tokens[:, None], params["embed"], cfg.embed_scale).astype(ACT_DTYPE)
     at = cfg.arch_type
 

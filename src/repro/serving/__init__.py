@@ -7,4 +7,8 @@ def __getattr__(name):  # lazy: TopicEngine pulls in the repro.api layer
         from repro.serving import topic_engine
 
         return getattr(topic_engine, name)
+    if name == "batch_engine":
+        import importlib
+
+        return importlib.import_module("repro.serving.batch_engine")
     raise AttributeError(f"module 'repro.serving' has no attribute {name!r}")

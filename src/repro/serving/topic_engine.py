@@ -4,13 +4,17 @@ Vedalia's workload is many *products*, each wanting an RLDA fit and a
 streamed model view. `TopicEngine` queues `FitRequest`s, buckets them by
 (num_topics, backend), and drains each wave through one shared
 `VedaliaClient` — every fit and view crosses the versioned wire protocol,
-so the engine exercises exactly what a remote deployment would. The
-bucketing groups *similar* work — compiled sweep programs are actually
-shared only when the full `LDAConfig` and padded token shapes coincide
-(jit keys on those, not on the bucket) — and is the seam where
-cross-product batching (stacking same-shape corpora into one sweep) plugs
-in later. The transformer `serving.Engine` and this engine are the two
-concrete faces of `serving.scheduler.WaveScheduler`.
+so the engine exercises exactly what a remote deployment would.
+
+Cross-product batching: a wave whose requests are fit-compatible (the
+bucket key now carries the full fit parameterization, not just
+(num_topics, backend)) and whose backend routes to the batched engine
+("auto" or "batched") is served by ONE `fit_batch` protocol call — the
+server stacks the models and runs them through
+`serving.batch_engine`/the `batched` sampler in shared launches. Other
+waves keep the per-request path. `fit_many` is the submit+drain
+convenience over that. The transformer `serving.Engine` and this engine
+are the two concrete faces of `serving.scheduler.WaveScheduler`.
 """
 
 from __future__ import annotations
@@ -59,7 +63,29 @@ class TopicEngine(WaveScheduler):
             raise ValueError(f"request {req.uid}: empty review set")
 
     def bucket_key(self, req: FitRequest):
-        return (req.num_topics, req.backend or self.default_backend)
+        # The full fit parameterization: requests sharing a key are
+        # batch-compatible, which is what lets `_run_wave` serve a whole
+        # wave with one `fit_batch` call. None-able ints map to -1 so keys
+        # stay sortable (the scheduler sorts buckets).
+        def opt(v):
+            return -1 if v is None else v
+
+        return (
+            req.num_topics,
+            req.backend or self.default_backend,
+            opt(req.base_vocab),
+            req.alpha,
+            req.beta,
+            opt(req.w_bits),
+            opt(req.num_sweeps),
+        )
+
+    def fit_many(self, requests: list[FitRequest]) -> list[TopicResult]:
+        """Submit-and-drain convenience: fit a batch of products through
+        wave scheduling (batched launches where buckets allow)."""
+        for req in requests:
+            self.submit(req)
+        return self.run()
 
     def serve_views(
         self, handle_ids: list[int], *, top_n: int = 10
@@ -84,6 +110,9 @@ class TopicEngine(WaveScheduler):
         return out
 
     def _run_wave(self, wave: list[FitRequest]) -> list[TopicResult]:
+        backend = wave[0].backend or self.default_backend
+        if len(wave) > 1 and backend in ("auto", "batched"):
+            return self._run_batched_wave(wave, backend)
         results = []
         for req in wave:
             t0 = time.time()
@@ -106,3 +135,32 @@ class TopicEngine(WaveScheduler):
                 fit_s=time.time() - t0,
             ))
         return results
+
+    def _run_batched_wave(
+        self, wave: list[FitRequest], backend: str
+    ) -> list[TopicResult]:
+        """One `fit_batch` call for the whole wave (the bucket key
+        guarantees the requests share every fit parameter). `fit_s` is the
+        amortized per-model share of the batch wall time."""
+        t0 = time.time()
+        fits = self.client.fit_batch(
+            [req.reviews for req in wave],
+            num_topics=wave[0].num_topics,
+            base_vocab=wave[0].base_vocab,
+            alpha=wave[0].alpha,
+            beta=wave[0].beta,
+            w_bits=wave[0].w_bits,
+            backend=backend,
+            num_sweeps=wave[0].num_sweeps,
+        )
+        fit_s = (time.time() - t0) / len(wave)
+        return [
+            TopicResult(
+                uid=req.uid,
+                fit=fit,
+                view=self.client.sync_view(fit.handle_id, top_n=req.top_n),
+                perplexity=fit.perplexity,
+                fit_s=fit_s,
+            )
+            for req, fit in zip(wave, fits)
+        ]

@@ -19,9 +19,16 @@ scheduler realizes that policy over the Vedalia protocol:
      drift accumulates across micro-batches — and scores a held-out
      reservoir (`perplexity(reviews=...)`). When mean drift exceeds
      `drift_threshold`, or held-out perplexity degrades past `ppx_guard` ×
-     the post-fit baseline, it schedules a full `refine` re-fit on a
-     fit-grade backend chosen by `select_backend` (alias for large
-     corpora, jnp otherwise), then re-anchors.
+     the post-fit baseline, it schedules a full re-fit, then re-anchors.
+
+Re-fits are **coalesced per scheduling window**: triggers queue during a
+`step`, and at the end of the step each shard's queued re-fits go out as
+ONE `refine_batch` call — the server stacks compatible models through
+`serving.batch_engine` and sweeps them in a single batched launch instead
+of N sequential `refine` calls. A shard whose server predates the
+`batched` backend (absent from its `hello`) degrades to the sequential
+per-product `refine` path, with the backend chosen by `select_backend`
+per corpus size (alias for large corpora, jnp otherwise).
 
 Every applied event contributes one **staleness sample** (apply time minus
 event time); `benchmarks/stream_bench.py` reports the p50/p99.
@@ -79,6 +86,8 @@ class SchedulerStats:
     fits: int = 0
     updates: int = 0
     refits: int = 0
+    refit_launches: int = 0  # wire calls actually made (<= refits)
+    coalesced_refits: int = 0  # refits that shared a batched launch
     drift_triggers: int = 0
     ppx_triggers: int = 0
     forced_by_staleness: int = 0
@@ -142,6 +151,9 @@ class IncrementalScheduler:
         self.fit_kwargs = dict(fit_kwargs or {})
         self.products: dict[int, ProductStatus] = {}
         self.stats = SchedulerStats()
+        # Re-fits triggered during the current scheduling window; flushed
+        # as one batched launch per shard at the end of each step.
+        self._refit_queue: list[ProductStatus] = []
         # Capability-aware refit routing: ask each shard what it can run.
         self._backends = {
             sid: c.hello().backends for sid, c in self.clients.items()
@@ -218,6 +230,9 @@ class IncrementalScheduler:
                     if overdue and len(status.unapplied_ts) < self.microbatch:
                         self.stats.forced_by_staleness += 1
                     self._apply(status, now)
+        # End of the scheduling window: every re-fit triggered above goes
+        # out now, one batched launch per shard.
+        self._flush_refits()
 
     def flush(self, now: float) -> None:
         """End of stream: drain everything and apply all residual batches."""
@@ -227,6 +242,7 @@ class IncrementalScheduler:
                 self._fit(status, now)
             elif status.handle_id is not None and status.unapplied_ts:
                 self._apply(status, now)
+        self._flush_refits()
 
     # -- internals -----------------------------------------------------------
 
@@ -312,7 +328,7 @@ class IncrementalScheduler:
         if self.refit_policy == "never":
             return
         if self.refit_policy == "always":
-            self._refit(status)
+            self._queue_refit(status)
             return
 
         # Drift trigger: continuous `views.topic_signature` distance of the
@@ -324,7 +340,7 @@ class IncrementalScheduler:
             # Already refitting: skip the held-out scoring (a server-side
             # prepare per call) — the refit re-baselines the guard anyway.
             self.stats.drift_triggers += 1
-            self._refit(status)
+            self._queue_refit(status)
             return
         guard = self._guard_ppx(status)
         if guard is None:
@@ -336,9 +352,48 @@ class IncrementalScheduler:
             return
         if guard > self.ppx_guard * status.baseline_ppx:
             self.stats.ppx_triggers += 1
-            self._refit(status)
+            self._queue_refit(status)
 
-    def _refit(self, status: ProductStatus) -> None:
+    def _queue_refit(self, status: ProductStatus) -> None:
+        """Defer a triggered re-fit to the end of the scheduling window so
+        same-window triggers coalesce into one batched launch per shard."""
+        if not any(s is status for s in self._refit_queue):
+            self._refit_queue.append(status)
+
+    def _flush_refits(self) -> None:
+        """Launch every queued re-fit: one `refine_batch` per shard where
+        the server advertises the `batched` backend, the sequential
+        per-product path otherwise."""
+        if not self._refit_queue:
+            return
+        queue, self._refit_queue = self._refit_queue, []
+        by_shard: dict[int, list[ProductStatus]] = {}
+        for status in queue:
+            # A shard drop between trigger and flush re-bootstraps the
+            # product elsewhere; its queued re-fit is moot.
+            if status.handle_id is None or status.shard_id not in self.clients:
+                continue
+            by_shard.setdefault(status.shard_id, []).append(status)
+        for sid, statuses in by_shard.items():
+            client = self.clients[sid]
+            if len(statuses) == 1 or "batched" not in self._backends[sid]:
+                for status in statuses:
+                    self._refit_one(status)
+                continue
+            # The window's coalesced launch: `auto` resolves the
+            # multi-model route server-side (-> the batched sampler), and
+            # `serving.batch_engine` buckets whatever is stack-compatible.
+            client.refine_batch(
+                [status.handle_id for status in statuses],
+                self.refit_sweeps, backend="auto")
+            self.stats.refits += len(statuses)
+            self.stats.refit_launches += 1
+            self.stats.coalesced_refits += len(statuses) - 1
+            for status in statuses:
+                status.baseline_ppx = self._guard_ppx(status)
+                self._anchor(status)
+
+    def _refit_one(self, status: ProductStatus) -> None:
         """Full re-fit via `refine`, on a fit-grade backend chosen by the
         capability-aware registry for this corpus size."""
         client = self.clients[status.shard_id]
@@ -347,6 +402,7 @@ class IncrementalScheduler:
             available=self._backends[status.shard_id])
         client.refine(status.handle_id, self.refit_sweeps, backend=backend)
         self.stats.refits += 1
+        self.stats.refit_launches += 1
         status.baseline_ppx = self._guard_ppx(status)
         self._anchor(status)
 

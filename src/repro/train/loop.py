@@ -10,7 +10,6 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.data.lm import batches_for
 from repro.models import model as M

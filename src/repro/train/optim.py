@@ -12,7 +12,7 @@ sharding rules (factored stats drop the factored dim's axis).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

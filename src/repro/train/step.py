@@ -12,7 +12,6 @@ accumulators would not fit (DESIGN.md §5).
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

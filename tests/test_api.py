@@ -8,7 +8,6 @@ Covers the PR-1 acceptance gates:
     still work and match the new API bit-for-bit where they share a path.
 """
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +24,7 @@ from repro.api import (
 )
 from repro.api.service import FitRequest
 from repro.core import gibbs, perplexity, update
-from repro.core.types import Corpus, LDAConfig, build_counts, init_state
+from repro.core.types import Corpus, LDAConfig, init_state
 from repro.data import reviews
 
 BACKENDS = ("jnp", "pallas", "distributed", "alias", "sparse")

@@ -10,7 +10,6 @@ import pytest
 from repro import configs
 from repro.models import model as M
 from repro.models.layers import logits_last
-from repro.models.params import count_params
 from repro.train.optim import OptConfig, make_optimizer
 from repro.train.step import make_train_step
 

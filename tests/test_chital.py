@@ -1,14 +1,12 @@
 """Chital marketplace: Eq. (6), credit economics, matching, simulation."""
 
-import math
 
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.chital.credit import CreditLedger
-from repro.chital.matching import MATCHERS, BuyerRequest, Matcher, Seller
+from repro.chital.matching import MATCHERS, BuyerRequest, Seller
 from repro.chital.simulator import SimSpec
 from repro.chital.simulator import run as simulate
 from repro.chital.verification import Submission, evaluate, verification_probability

@@ -4,7 +4,6 @@ The dry-run itself needs 512 forced host devices (its own process); here we
 test the pure pieces it is built from.
 """
 
-import numpy as np
 
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 

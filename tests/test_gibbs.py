@@ -3,12 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import alias, gibbs, perplexity
 from repro.core.sparse import DenseGibbsSampler, SparseLDASampler
 from repro.core.types import Corpus, LDAConfig, build_counts, init_state
-from repro.data import reviews
 
 
 def _planted_corpus(n_docs=60, vocab=120, k=6, seed=0, mean_tokens=40):

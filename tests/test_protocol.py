@@ -271,7 +271,7 @@ def test_delta_view_of_unchanged_model_is_empty(client):
 def test_delta_view_resends_after_update(client):
     fit = client.fit(_reviews(n=40, seed=0), num_topics=6, base_vocab=120,
                      seed=0)
-    first = client.sync_view(fit.handle_id, top_n=6)
+    client.sync_view(fit.handle_id, top_n=6)  # establish the cursor
     client.update(fit.handle_id, _reviews(n=10, seed=3), seed=2)
     delta = client.sync_view(fit.handle_id, top_n=6)
     assert delta.delta

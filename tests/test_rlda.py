@@ -6,7 +6,7 @@ import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core import gibbs, perplexity, rlda
+from repro.core import gibbs, rlda
 from repro.core.types import LDAConfig
 from repro.data import reviews
 

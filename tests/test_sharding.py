@@ -4,7 +4,6 @@ of the distribution layer; the 256/512-chip path is covered by dryrun)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import coreset, gibbs, perplexity, quality, rlda, update, views
-from repro.core.types import Corpus, LDAConfig, build_counts
+from repro.core.types import LDAConfig, build_counts
 from repro.data import reviews
 
 
