@@ -1,0 +1,243 @@
+"""AliasLDA fused-path throughput + quality parity — the large-fit gate.
+
+`select_backend` routes every >=100k-token fit to the `alias` backend, so
+the alias sweep's speed IS the system's large-fit speed. This bench
+measures three implementations of the sweep on one corpus:
+
+  legacy   the pre-PR jnp alias path, reproduced here verbatim as a live
+           baseline: per-row K-step sequential pairing scan for the alias
+           tables (O(V·K²) serially-dependent work per sweep) plus a
+           per-token N-way key split for every proposal draw
+  alias    the production jnp path (`core.alias.mh_sweep`): exact
+           prefix-sum table builder vectorized over the whole (V, K) table
+           + matrix-form word/doc cycle proposal draws — registry backend
+           `alias`, path="jnp"
+  fused    the Pallas kernel path (`kernels.alias_mh`), path="pallas" —
+           interpret mode on CPU, so its CPU number is a correctness/
+           latency probe, not a speed claim (the HBM-traffic win needs a
+           real TPU); reported, never gated here
+
+Gates (the CI acceptance criteria):
+  * throughput: the production alias path >= 3x legacy tokens/sec;
+  * quality: held-out (document-completion) perplexity of an alias fit
+    within 2% of a jnp-oracle fit on the same train/held-out split. Both
+    chains use the posterior-averaged predictive estimator (mean per-token
+    predictive probability over checkpoint states past burn-in) — a
+    single-state estimate wobbles by >10% with chain position and would
+    gate noise, not quality. All PRNG seeds are fixed, so the parity
+    number is reproducible run to run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.backends import get_backend
+from repro.core import codec, rlda
+from repro.core.types import build_counts, init_state
+from repro.data import reviews
+
+SPEEDUP_GATE = 3.0
+PARITY_GATE = 0.02
+
+
+# -- the pre-PR alias path, kept verbatim as the measured baseline ----------
+
+
+def _legacy_build_alias_table(probs, iters=None):
+    """Pre-PR builder: K sequential pairing rounds, argmin/argmax per
+    round (the per-row scan the parallel prefix-sum builder replaced)."""
+    k = probs.shape[-1]
+    if iters is None:
+        iters = k
+    p = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-30)
+    mass = p * k
+    thresh = jnp.ones(k, p.dtype)
+    alias = jnp.arange(k, dtype=jnp.int32)
+    settled = jnp.zeros(k, bool)
+
+    def body(carry, _):
+        mass, thresh, alias, settled = carry
+        i = jnp.argmin(jnp.where(settled, jnp.inf, mass))
+        j = jnp.argmax(jnp.where(settled, -jnp.inf, mass))
+        can = (~settled[i]) & (i != j) & (mass[i] < 1.0 - 1e-9)
+        thresh = thresh.at[i].set(jnp.where(can, mass[i], thresh[i]))
+        alias = alias.at[i].set(jnp.where(can, j, alias[i]))
+        mass = mass.at[j].add(jnp.where(can, mass[i] - 1.0, 0.0))
+        settled = settled.at[i].set(settled[i] | can)
+        return (mass, thresh, alias, settled), None
+
+    (mass, thresh, alias, settled), _ = jax.lax.scan(
+        body, (mass, thresh, alias, settled), None, length=iters)
+    return thresh, alias
+
+
+@partial(jax.jit, static_argnums=(0, 4))
+def _legacy_mh_sweep(cfg, state, corpus, key, mh_steps=2):
+    """Pre-PR sweep: vmapped K-step table scan + per-token key splits."""
+    k = cfg.num_topics
+    n_dt, n_wt, n_t = state.n_dt, state.n_wt, state.n_t
+    probs = n_wt + cfg.beta
+    thresh, alias = jax.vmap(
+        lambda p: _legacy_build_alias_table(p, iters=k))(probs)
+    docs, words, wts = corpus.docs, corpus.words, corpus.weights
+    z = state.z
+
+    def log_p(zt):
+        own = (zt == z) & (wts > 0)
+        sub = jnp.where(own, wts, 0.0)
+        ndt = jnp.maximum(n_dt[docs, zt] - sub, 0.0)
+        nwt = jnp.maximum(n_wt[words, zt] - sub, 0.0)
+        nt = jnp.maximum(n_t[zt] - sub, 1e-9)
+        return (jnp.log(ndt + cfg.alpha) + jnp.log(nwt + cfg.beta)
+                - jnp.log(nt + cfg.beta_bar))
+
+    def log_q(zt):
+        return jnp.log(n_wt[words, zt] + cfg.beta)
+
+    def sample_one(kk, w):
+        ku, kj = jax.random.split(kk)
+        j = jax.random.randint(kj, (), 0, k)
+        u = jax.random.uniform(ku, ())
+        return jnp.where(u < thresh[w, j], j, alias[w, j]).astype(jnp.int32)
+
+    def step(z_cur, k_step):
+        kp, ka = jax.random.split(k_step)
+        keys = jax.random.split(kp, words.shape[0])  # the N-way split
+        prop = jax.vmap(sample_one)(keys, words)
+        log_a = (log_p(prop) + log_q(z_cur)) - (log_p(z_cur) + log_q(prop))
+        accept = jnp.log(jax.random.uniform(ka, z_cur.shape)) < log_a
+        return jnp.where(accept & (wts > 0), prop, z_cur), None
+
+    z_new, _ = jax.lax.scan(step, z, jax.random.split(key, mh_steps))
+    return build_counts(cfg, corpus, z_new)
+
+
+# -- held-out quality helpers ------------------------------------------------
+
+
+def _heldout_split(corpus, frac=0.1, seed=0):
+    """Document-completion split: held-out tokens get weight 0 in the
+    train corpus and keep their weight in the scoring corpus."""
+    rng = np.random.default_rng(seed)
+    held = rng.random(corpus.num_tokens) < frac
+    train = dataclasses.replace(
+        corpus, weights=jnp.where(jnp.asarray(~held), corpus.weights, 0.0))
+    score = dataclasses.replace(
+        corpus, weights=jnp.where(jnp.asarray(held), corpus.weights, 0.0))
+    return train, score
+
+
+def _predictive_probs(cfg, state, score):
+    n_dt, n_wt, n_t = codec.decode_counts(cfg, state)
+    alpha_bar = cfg.alpha * cfg.num_topics
+    theta = (n_dt + cfg.alpha) / (n_dt.sum(-1, keepdims=True) + alpha_bar)
+    phi = (n_wt + cfg.beta) / (n_t[None, :] + cfg.beta_bar)
+    return jnp.sum(theta[score.docs] * phi[score.words], -1)
+
+
+def _averaged_heldout_ppx(cfg, sampler, train, score, key, burn, chk, gap):
+    """Posterior-averaged document-completion perplexity: mean per-token
+    predictive probability over `chk` states spaced `gap` sweeps apart
+    after `burn` burn-in sweeps."""
+    st = sampler.run(cfg, train, key, burn)
+    acc = None
+    for c in range(chk):
+        st = sampler.run(cfg, train, jax.random.fold_in(key, 1000 + c),
+                         gap, state=st)
+        p = _predictive_probs(cfg, st, score)
+        acc = p if acc is None else acc + p
+    p = acc / chk
+    w = score.weights
+    ll = jnp.sum(w * jnp.log(jnp.maximum(p, 1e-30)))
+    return float(jnp.exp(-ll / jnp.maximum(w.sum(), 1e-9)))
+
+
+# -- bench ------------------------------------------------------------------
+
+
+def run(quick: bool = False) -> dict:
+    n_reviews = 250 if quick else 800
+    k = 128  # table-build-bound regime: the path the auto-selector gates
+    sweeps = 5 if quick else 10
+    mh_steps = 4
+
+    spec = reviews.SyntheticSpec(
+        num_reviews=n_reviews, vocab_size=900, num_topics=12,
+        mean_tokens=70, num_users=60, seed=0)
+    revs = reviews.generate(spec).reviews
+    prep = rlda.prepare(revs, base_vocab=900, num_topics=k, w_bits=None)
+    cfg, corpus = prep.cfg, prep.corpus
+    n_tokens = corpus.num_tokens
+    out = {"num_tokens": int(n_tokens), "num_topics": k, "sweeps": sweeps,
+           "mh_steps": mh_steps, "tokens_per_s": {}}
+
+    st0 = init_state(cfg, corpus, jax.random.PRNGKey(0))
+
+    def time_sweeps(step_fn):
+        st = step_fn(st0, jax.random.PRNGKey(1))  # compile + warm
+        jax.block_until_ready(st.n_t)
+        t0 = time.time()
+        for i in range(sweeps):
+            st = step_fn(st, jax.random.PRNGKey(10 + i))
+        jax.block_until_ready(st.n_t)
+        return time.time() - t0
+
+    t_legacy = time_sweeps(
+        lambda st, kk: _legacy_mh_sweep(cfg, st, corpus, kk, mh_steps))
+    alias_jnp = get_backend("alias", mh_steps=mh_steps, path="jnp")
+    t_alias = time_sweeps(
+        lambda st, kk: alias_jnp.sweep(cfg, st, corpus, kk))
+    alias_fused = get_backend("alias", mh_steps=mh_steps, path="pallas")
+    t_fused = time_sweeps(
+        lambda st, kk: alias_fused.sweep(cfg, st, corpus, kk))
+
+    for name, t in (("legacy", t_legacy), ("alias", t_alias),
+                    ("fused_interpret", t_fused)):
+        tput = n_tokens * sweeps / max(t, 1e-9)
+        out["tokens_per_s"][name] = int(tput)
+        print(f"  {name:16s} {t:7.2f}s  {tput:12.0f} tok/s")
+    speedup = t_legacy / max(t_alias, 1e-9)
+    out["speedup_vs_legacy"] = round(speedup, 2)
+    print(f"  alias vs legacy: {speedup:.2f}x "
+          f"(fused column is interpret mode on CPU — not a speed claim)")
+
+    # Quality gate at a mixing-friendly K: held-out perplexity of the
+    # alias chain vs the jnp oracle chain on the same split, both
+    # posterior-averaged. Budgets are mixing-matched (the MH sampler needs
+    # more sweeps to burn through its stale proposals).
+    kq = 16
+    prep_q = rlda.prepare(revs, base_vocab=900, num_topics=kq, w_bits=None)
+    train, score = _heldout_split(prep_q.corpus, frac=0.1, seed=3)
+    ppx_oracle = _averaged_heldout_ppx(
+        prep_q.cfg, get_backend("jnp"), train, score,
+        jax.random.PRNGKey(5), burn=30, chk=8, gap=3)
+    ppx_alias = _averaged_heldout_ppx(
+        prep_q.cfg, alias_jnp, train, score,
+        jax.random.PRNGKey(6), burn=100, chk=8, gap=5)
+    rel = abs(ppx_alias - ppx_oracle) / ppx_oracle
+    out["heldout"] = {
+        "num_topics": kq,
+        "oracle": round(ppx_oracle, 2), "alias": round(ppx_alias, 2),
+        "rel_delta": round(rel, 4),
+    }
+    out["gates"] = {"speedup_min": SPEEDUP_GATE, "parity_max": PARITY_GATE}
+    print(f"  held-out ppx (K={kq}, averaged): oracle {ppx_oracle:.1f}  "
+          f"alias {ppx_alias:.1f}  delta {rel:.2%}")
+
+    assert speedup >= SPEEDUP_GATE, (
+        f"alias path speedup {speedup:.2f}x below the {SPEEDUP_GATE}x gate "
+        f"vs the legacy sweep")
+    assert rel <= PARITY_GATE, (
+        f"held-out perplexity delta {rel:.4f} above the {PARITY_GATE} gate")
+    return out
+
+
+if __name__ == "__main__":
+    run()

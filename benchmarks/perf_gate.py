@@ -50,6 +50,12 @@ METRICS = {
     "batch": [
         "models_per_s.batched",
     ],
+    # Same split for the alias path: the >=3x vs-legacy speedup and the
+    # held-out parity are asserted inside alias_bench; the trajectory
+    # gates the production path's absolute tokens/sec.
+    "alias": [
+        "tokens_per_s.alias",
+    ],
 }
 
 

@@ -33,6 +33,8 @@ BENCHES = [
      "benchmarks.stream_bench"),
     ("batch", "batched multi-model fit engine vs sequential fits",
      "benchmarks.batch_bench"),
+    ("alias", "AliasLDA fused path vs the legacy sweep (large-fit gate)",
+     "benchmarks.alias_bench"),
     ("roofline", "roofline terms from the dry-run (deliverable g)",
      "benchmarks.roofline"),
 ]

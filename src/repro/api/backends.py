@@ -11,7 +11,9 @@ implementation is chosen by name:
   distributed  client/server sharded sweep (`core.distributed`) — the
                paper's "model cache and updating server" on a pod
   alias        AliasLDA (Li et al., 2014a) stale-proposal + parallel-MH
-               sweep (`core.alias`) — proposal-based fast sampler
+               sweep — proposal-based fast sampler; vectorized oracle in
+               `core.alias`, fused proposal+MH Pallas kernel in
+               `kernels.alias_mh` (path="auto" picks pallas on TPU)
   sparse       SparseLDA (Yao et al., 2009) sequential s/r/q-bucket sweep
                (`core.sparse`) — the paper's phone-side reference
   batched      multi-model batched sweep (`core.batch`): M compatible
@@ -141,11 +143,14 @@ def select_backend(
     """Resolve the `"auto"` pseudo-backend for a workload.
 
     Routing order (first match wins):
-      1. an explicit `device_kind` picks the backend built for that device
+      1. multi-model work (`num_models > 1` — batch fits, coalesced
+         refits) goes to the stacked `batched` sweep — one launch for all
+         M models instead of M cold launches — *including* under an
+         explicit `device_kind`, as long as the batched backend is built
+         for that device class (an explicit "tpu" must not silently
+         serialize a coalesced refit);
+      2. an explicit `device_kind` picks the backend built for that device
          class ("phone" -> sparse, "pod" -> distributed, "tpu" -> jnp);
-      2. multi-model work (`num_models > 1` — batch fits, coalesced
-         refits) goes to the stacked `batched` sweep: one launch for all
-         M models instead of M cold launches;
       3. updates go to the oracle sweep — incremental resampling needs
          exact-conditional warm-start semantics, not MH proposals;
       4. large fits go to the proposal sampler (`alias`), whose per-token
@@ -161,6 +166,11 @@ def select_backend(
         return "jnp"
 
     if device_kind is not None:
+        if num_models > 1:
+            batched = _REGISTRY.get("batched")
+            if ("batched" in names and batched is not None
+                    and batched.capabilities.device_kind == device_kind):
+                return "batched"
         preferred = {"phone": "sparse", "pod": "distributed", "tpu": "jnp"}
         want = preferred.get(device_kind)
         if want in names:
@@ -298,23 +308,67 @@ class DistributedSampler(_BaseSampler):
     SamplerCapabilities(device_kind="tpu", proposal_based=True),
 )
 class AliasSampler(_BaseSampler):
-    """AliasLDA sweep-parallel MH (`core.alias.mh_sweep`).
+    """AliasLDA sweep-parallel MH (`core.alias` / `kernels.alias_mh`).
 
     Stale per-word alias proposals + parallel Metropolis–Hastings; the
     per-token cost is O(k_d), independent of K, so this is the large-corpus
-    fit path. Counts cross the boundary in stored units; `mh_sweep` runs in
-    real units and rebuilds counts by scatter-add.
+    fit path. Counts cross the boundary in stored units.
+
+    `path` selects the execution path per sweep — the same split as
+    `BatchedSampler`: "jnp" is the vectorized oracle (`core.alias.mh_sweep`
+    on decoded counts), "pallas" the fused proposal+MH kernel
+    (`kernels.alias_mh.ops`, interpret mode on CPU, bit-exact vs the
+    oracle from identical keys), and "auto" (default) picks pallas on TPU
+    and the oracle elsewhere.
+
+    The stacked `run_many` surface (leading (M,) axis, the
+    `BatchedSampler` protocol) lets `serving.batch_engine` bucket
+    multi-model alias fits into single launches: "pallas" rides the
+    model-grid `mh_sweep_many` kernel, "jnp" the vmapped oracle — all
+    sweeps of all M models scanned under one jit (`core.alias.run_many`).
     """
 
-    def __init__(self, mh_steps: int = 4):
+    def __init__(self, mh_steps: int = 4, path: str = "auto",
+                 token_block: int = 256):
+        if path not in ("auto", "jnp", "pallas"):
+            raise ValueError(f"unknown alias path {path!r}")
         self.mh_steps = mh_steps
+        self.path = path
+        self.token_block = token_block
+
+    def _path(self) -> str:
+        if self.path != "auto":
+            return self.path
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
 
     def sweep(self, cfg, state, corpus, key):
+        if self._path() == "pallas":
+            from repro.kernels.alias_mh import ops as kops
+
+            return kops.mh_sweep(
+                cfg, state, corpus, key, self.mh_steps, self.token_block)
         from repro.core import alias
 
         real = decode_state(cfg, state)
         return encode_state(
             cfg, alias.mh_sweep(cfg, real, corpus, key, self.mh_steps))
+
+    def run_many(self, cfg, corpora, keys, num_sweeps, states=None):
+        """Batched multi-sweep alias fit/refit (cold when `states` is
+        None): all sweeps of all M models scanned under one jit
+        (`core.alias.run_many`), with `_BaseSampler.run`'s per-model key
+        discipline so a batched run is comparable to M sequential runs
+        from the same keys."""
+        from repro.core import alias
+        from repro.core import batch as batch_lib
+
+        if states is None:
+            pairs = jax.vmap(jax.random.split)(keys)  # (M, 2, 2)
+            keys, subs = pairs[:, 0], pairs[:, 1]
+            states = batch_lib.init_many(cfg, corpora, subs)
+        return alias.run_many(
+            cfg, states, corpora, keys, num_sweeps, self.mh_steps,
+            self.token_block, self._path())
 
 
 @register_backend(

@@ -292,9 +292,11 @@ class VedaliaService:
         """Batched fit of already-prepared corpora (one handle each).
 
         The `auto` route resolves multi-model fits to the `batched`
-        backend; an explicit non-batched backend (or a single model) falls
-        back to sequential `fit_prepared` calls, so the surface is safe to
-        call unconditionally.
+        backend. Any resolved backend whose sampler carries the stacked
+        `run_many` surface (`batched`, `alias`) launches through
+        `serving.batch_engine`; other backends (or a single model) fall
+        back to sequential `fit_prepared` calls, so the surface is safe
+        to call unconditionally.
         """
         if not len(preps):
             raise ValueError("fit_batch_prepared() needs at least one corpus")
@@ -302,7 +304,8 @@ class VedaliaService:
         backend = self._resolve(
             backend, num_tokens=total_tokens, task="fit",
             device_kind=device_kind, num_models=len(preps))
-        if backend != "batched" or len(preps) == 1:
+        sampler = self.sampler(backend)
+        if len(preps) == 1 or not hasattr(sampler, "run_many"):
             return [
                 self.fit_prepared(
                     p, backend=backend, num_sweeps=num_sweeps,
@@ -313,7 +316,7 @@ class VedaliaService:
 
         sweeps = num_sweeps if num_sweeps is not None else self.num_sweeps
         states, _ = batch_engine.run_batched(
-            self.sampler("batched"),
+            sampler,
             [p.cfg for p in preps],
             [p.corpus for p in preps],
             self._keys(len(preps), seed),
@@ -324,7 +327,7 @@ class VedaliaService:
                 handle_id=self._new_id(), prep=p,
                 model=update.UpdatableModel(
                     cfg=p.cfg, corpus=p.corpus, state=st),
-                backend="batched", sweeps_run=sweeps))
+                backend=backend, sweeps_run=sweeps))
             for p, st in zip(preps, states)
         ]
 
@@ -376,11 +379,13 @@ class VedaliaService:
         """Warm-refit several served models at once.
 
         The `auto` route resolves multi-model refits to the `batched`
-        backend: stack-compatible handles (bucketed by
-        `serving.batch_engine`) continue their chains in one launch
-        instead of N sequential `refine` calls. Incompatible handles, an
-        explicit non-batched backend, or a single handle fall back to
-        per-handle `refine`.
+        backend; any resolved backend whose sampler carries the stacked
+        `run_many` surface (`batched`, `alias`) continues
+        stack-compatible handles' chains (bucketed by
+        `serving.batch_engine`) in one launch instead of N sequential
+        `refine` calls. Incompatible handles, a backend without the
+        stacked surface, or a single handle fall back to per-handle
+        `refine`.
         """
         handles = list(handles)
         if not handles:
@@ -393,7 +398,8 @@ class VedaliaService:
             backend,
             num_tokens=max(h.model.corpus.num_tokens for h in unique),
             task="update", num_models=len(unique))
-        if backend != "batched" or len(unique) == 1:
+        sampler = self.sampler(backend)
+        if len(unique) == 1 or not hasattr(sampler, "run_many"):
             for i, h in enumerate(unique):
                 # Per-handle seeds, like the fit_batch_prepared fallback:
                 # a shared explicit seed would give every model the same
@@ -404,7 +410,7 @@ class VedaliaService:
         import repro.serving.batch_engine as batch_engine
 
         states, _ = batch_engine.run_batched(
-            self.sampler("batched"),
+            sampler,
             [h.cfg for h in unique],
             [h.model.corpus for h in unique],
             self._keys(len(unique), seed),
@@ -414,7 +420,7 @@ class VedaliaService:
         for h, st in zip(unique, states):
             h.model.state = st
             h.sweeps_run += num_sweeps
-            h.backend = "batched"
+            h.backend = backend
         return handles
 
     # -- update (§3.2) -----------------------------------------------------

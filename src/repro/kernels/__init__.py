@@ -4,5 +4,7 @@
 #
 #   lda_gibbs    fused collapsed-Gibbs score + Gumbel-max resample — the
 #                paper's phone-side hot loop, blocked for the VPU/MXU
+#   alias_mh     fused AliasLDA stale-proposal draw + all Metropolis-
+#                Hastings rounds per VMEM tile — the large-fit path
 #   decode_attn  flash-decode GQA over (ring) KV caches — the serving path
 #   chunk_scan   chunked diagonal-decay linear recurrence (RWKV6 / Mamba2)

@@ -1,0 +1,206 @@
+"""jit'd wrapper around the alias_mh kernel: tables, gather, pad, un-pad.
+
+`mh_sweep(cfg, state, corpus, key)` is a drop-in replacement for
+`repro.core.alias.mh_sweep` that speaks *stored* state at the boundary
+(the `AliasSampler` backend contract): the stale word- and doc-proposal
+alias tables are built outside by the parallel prefix-sum builder
+(`core.alias.build_alias_tables` on the decoded counts), count/table rows
+are gathered (XLA gather — efficient on TPU), the kernel fuses the cycle
+proposal draws plus all `mh_steps` MH rounds per VMEM tile, and counts are
+rebuilt outside. On CPU the kernel body runs in interpret mode.
+
+Randomness is precomputed as (S, N) matrices with **exactly** the key
+discipline of `core.alias.mh_sweep` (per-round key -> split 3 -> bucket
+randint / bucket-vs-alias uniform / accept uniform at the true token
+count), which is what makes the fused sweep bit-exact against the jnp
+oracle from identical keys.
+
+`mh_sweep_many` is the model-grid batched variant: M stacked compatible
+models (the `serving.batch_engine` layout) in one launch, each model
+consuming its own key exactly as the single-model sweep would.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import alias as alias_core
+from repro.core import codec
+from repro.core.types import Corpus, LDAConfig, LDAState
+from repro.kernels.alias_mh.kernel import (
+    alias_mh_blocked,
+    alias_mh_blocked_batched,
+)
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _draws(key: jax.Array, n: int, k: int, mh_steps: int):
+    """(S, N) random matrices with `core.alias.mh_sweep`'s key discipline:
+    one key per MH round, split 3-ways into bucket / alias / accept draws
+    at the true token count (padding is appended afterwards)."""
+    js, ups, uas = [], [], []
+    for k_step in jax.random.split(key, mh_steps):
+        kj, ku, ka = jax.random.split(k_step, 3)
+        js.append(jax.random.randint(kj, (n,), 0, k))
+        ups.append(jax.random.uniform(ku, (n,)))
+        uas.append(jax.random.uniform(ka, (n,)))
+    return jnp.stack(js), jnp.stack(ups), jnp.stack(uas)
+
+
+@partial(jax.jit, static_argnums=(0, 4, 5))
+def mh_resample(
+    cfg: LDAConfig,
+    state: LDAState,
+    corpus: Corpus,
+    key: jax.Array,
+    mh_steps: int = 4,
+    token_block: int = 256,
+) -> jax.Array:
+    """One fused proposal+MH pass; returns new z (counts rebuilt by
+    caller). `state` is in stored units (int32 fixed point when
+    `cfg.w_bits` is set — rescaled inside the kernel)."""
+    n = corpus.num_tokens
+    k = cfg.num_topics
+    kp = -(-k // 128) * 128  # lane-pad K to 128
+    npad = -(-n // token_block) * token_block
+
+    # Stale proposal tables (word + doc cycles): built once per sweep from
+    # the decoded counts by the parallel prefix-sum builder, then gathered
+    # per token like the count rows. Fixed-point count rows are gathered
+    # *as int32* and rescaled inside the kernel.
+    thresh_w, alias_w = alias_core.build_alias_tables(
+        codec.decode_array(cfg, state.n_wt) + cfg.beta)
+    thresh_d, alias_d = alias_core.build_alias_tables(
+        codec.decode_array(cfg, state.n_dt) + cfg.alpha)
+    rows_d = state.n_dt[corpus.docs]  # (N, K) gather outside the kernel
+    rows_w = state.n_wt[corpus.words]
+    thresh_w_rows = thresh_w[corpus.words]
+    alias_w_rows = alias_w[corpus.words]
+    thresh_d_rows = thresh_d[corpus.docs]
+    alias_d_rows = alias_d[corpus.docs]
+
+    j_prop, u_prop, u_acc = _draws(key, n, k, mh_steps)
+
+    def pad2(x, fill=0):
+        return jnp.pad(
+            x, ((0, npad - n), (0, kp - k)), constant_values=fill)
+
+    def pad1(x, fill=0):
+        return jnp.pad(x, (0, npad - n), constant_values=fill)
+
+    def pad_s(x, fill=0):
+        return jnp.pad(x, ((0, 0), (0, npad - n)), constant_values=fill)
+
+    z_new = alias_mh_blocked(
+        pad2(rows_d),
+        pad2(rows_w),
+        jnp.pad(state.n_t, (0, kp - k)),
+        pad2(thresh_w_rows, 0.0),
+        pad2(alias_w_rows),
+        pad2(thresh_d_rows, 0.0),
+        pad2(alias_d_rows),
+        pad1(state.z),
+        pad1(corpus.weights, 0.0),
+        pad_s(j_prop),
+        pad_s(u_prop, 0.0),
+        pad_s(u_acc, 1.0),  # log(1) = 0: padding never NaNs the tile
+        alpha=cfg.alpha,
+        beta=cfg.beta,
+        beta_bar=cfg.beta_bar,
+        w_bits=cfg.w_bits,
+        token_block=token_block,
+        interpret=_interpret(),
+    )
+    return z_new[:n]
+
+
+@partial(jax.jit, static_argnums=(0, 4, 5))
+def mh_sweep(
+    cfg: LDAConfig,
+    state: LDAState,
+    corpus: Corpus,
+    key: jax.Array,
+    mh_steps: int = 4,
+    token_block: int = 256,
+) -> LDAState:
+    """Full kernel-path AliasLDA sweep (fused MH + count rebuild), stored
+    units in and out."""
+    z_new = mh_resample(cfg, state, corpus, key, mh_steps, token_block)
+    return codec.rebuild_state(cfg, corpus, z_new)
+
+
+@partial(jax.jit, static_argnums=(0, 4, 5))
+def mh_sweep_many(
+    cfg: LDAConfig,
+    states: LDAState,  # stacked: z (M, N), n_dt (M, D, K), n_wt (M, V, K)
+    corpora: Corpus,  # stacked: docs/words/weights (M, N)
+    keys: jax.Array,  # (M, 2) one PRNG key per model
+    mh_steps: int = 4,
+    token_block: int = 256,
+) -> LDAState:
+    """One fused AliasLDA sweep over M stacked models (single launch).
+
+    `cfg` is the shared batch config (`serving.batch_engine` buckets and
+    pads). Tables build for all M×V rows in one vectorized pass, gathers
+    run per model (batched XLA gather), the model-grid kernel fuses the
+    proposal+MH rounds for all M models, and counts are rebuilt per model
+    by a vmapped scatter-add — bit-exact M independent single-model sweeps.
+    """
+    m, n = corpora.docs.shape
+    k = cfg.num_topics
+    kp = -(-k // 128) * 128
+    npad = -(-n // token_block) * token_block
+
+    thresh_w, alias_w = alias_core.build_alias_tables(
+        codec.decode_array(cfg, states.n_wt) + cfg.beta)  # (M, V, K)
+    thresh_d, alias_d = alias_core.build_alias_tables(
+        codec.decode_array(cfg, states.n_dt) + cfg.alpha)  # (M, D, K)
+    rows_d = jax.vmap(lambda n_dt, d: n_dt[d])(states.n_dt, corpora.docs)
+    rows_w = jax.vmap(lambda n_wt, w: n_wt[w])(states.n_wt, corpora.words)
+    thresh_w_rows = jax.vmap(lambda t, w: t[w])(thresh_w, corpora.words)
+    alias_w_rows = jax.vmap(lambda a, w: a[w])(alias_w, corpora.words)
+    thresh_d_rows = jax.vmap(lambda t, d: t[d])(thresh_d, corpora.docs)
+    alias_d_rows = jax.vmap(lambda a, d: a[d])(alias_d, corpora.docs)
+
+    j_prop, u_prop, u_acc = jax.vmap(
+        lambda kk: _draws(kk, n, k, mh_steps))(keys)  # (M, S, N) each
+
+    def pad3(x, fill=0):
+        return jnp.pad(
+            x, ((0, 0), (0, npad - n), (0, kp - k)), constant_values=fill)
+
+    def pad2(x, fill=0):
+        return jnp.pad(x, ((0, 0), (0, npad - n)), constant_values=fill)
+
+    def pad_s(x, fill=0):
+        return jnp.pad(
+            x, ((0, 0), (0, 0), (0, npad - n)), constant_values=fill)
+
+    z_new = alias_mh_blocked_batched(
+        pad3(rows_d),
+        pad3(rows_w),
+        jnp.pad(states.n_t, ((0, 0), (0, kp - k))),
+        pad3(thresh_w_rows, 0.0),
+        pad3(alias_w_rows),
+        pad3(thresh_d_rows, 0.0),
+        pad3(alias_d_rows),
+        pad2(states.z),
+        pad2(corpora.weights, 0.0),
+        pad_s(j_prop),
+        pad_s(u_prop, 0.0),
+        pad_s(u_acc, 1.0),
+        alpha=cfg.alpha,
+        beta=cfg.beta,
+        beta_bar=cfg.beta_bar,
+        w_bits=cfg.w_bits,
+        token_block=token_block,
+        interpret=_interpret(),
+    )[:, :n]
+    return jax.vmap(lambda co, z: codec.rebuild_state(cfg, co, z))(
+        corpora, z_new)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracle for the alias_mh kernel.
+
+Semantics are exactly `repro.core.alias.mh_sweep`'s inner loop on one token
+tile: stale alias-table proposal draws on Li et al.'s alternating word/doc
+cycle, MH accept against the sweep-stale counts with exact self-exclusion,
+padding tokens (weight 0) keeping their assignment. Lookups use `take_along_axis` (vs the kernel's masked-iota lane
+select) so the two implementations are genuinely independent.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _take(mat: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take_along_axis(mat, idx[:, None], axis=-1)[:, 0]
+
+
+def mh_tile(
+    rows_d: jnp.ndarray,  # (TB, K) gathered doc-topic counts (real units)
+    rows_w: jnp.ndarray,  # (TB, K) gathered word-topic counts
+    tot: jnp.ndarray,  # (K,) topic totals
+    thresh_w: jnp.ndarray,  # (TB, K) word-table alias thresholds
+    alias_w: jnp.ndarray,  # (TB, K) word-table alias targets
+    thresh_d: jnp.ndarray,  # (TB, K) doc-table alias thresholds
+    alias_d: jnp.ndarray,  # (TB, K) doc-table alias targets
+    z0: jnp.ndarray,  # (TB,) sweep-stale assignments
+    weights: jnp.ndarray,  # (TB,) fractional token weights (0 = padding)
+    j_prop: jnp.ndarray,  # (S, TB) proposal bucket draws
+    u_prop: jnp.ndarray,  # (S, TB) bucket-vs-alias uniforms
+    u_acc: jnp.ndarray,  # (S, TB) accept uniforms
+    alpha: float,
+    beta: float,
+    beta_bar: float,
+) -> jnp.ndarray:
+    tot_rows = jnp.broadcast_to(tot[None, :], rows_d.shape)
+
+    def log_p(zt):
+        sub = jnp.where((zt == z0) & (weights > 0.0), weights, 0.0)
+        ndt = jnp.maximum(_take(rows_d, zt) - sub, 0.0)
+        nwt = jnp.maximum(_take(rows_w, zt) - sub, 0.0)
+        nt = jnp.maximum(_take(tot_rows, zt) - sub, 1e-9)
+        return (jnp.log(ndt + alpha) + jnp.log(nwt + beta)
+                - jnp.log(nt + beta_bar))
+
+    def log_q_w(zt):
+        return jnp.log(_take(rows_w, zt) + beta)
+
+    def log_q_d(zt):
+        return jnp.log(_take(rows_d, zt) + alpha)
+
+    z_cur = z0
+    for s in range(j_prop.shape[0]):
+        j = j_prop[s]
+        if s % 2 == 0:  # word-proposal round of the Li et al. cycle
+            thresh, alias_t, log_q = thresh_w, alias_w, log_q_w
+        else:  # doc-proposal round
+            thresh, alias_t, log_q = thresh_d, alias_d, log_q_d
+        prop = jnp.where(
+            u_prop[s] < _take(thresh, j), j, _take(alias_t, j)
+        ).astype(z0.dtype)
+        log_a = (log_p(prop) + log_q(z_cur)) - (log_p(z_cur) + log_q(prop))
+        accept = jnp.log(u_acc[s]) < log_a
+        z_cur = jnp.where(accept & (weights > 0.0), prop, z_cur)
+    return z_cur

@@ -87,6 +87,33 @@ def test_auto_selector_routes_by_workload():
                           available=["jnp", "pallas"]) == "jnp"
 
 
+def test_auto_selector_multi_model_wins_within_device_class():
+    """Regression: an explicit device_kind used to shadow `num_models` and
+    silently serialize coalesced refits. Multi-model work must stay on the
+    stacked sweep whenever the batched backend serves that device class."""
+    assert select_backend(device_kind="tpu", num_models=4) == "batched"
+    assert select_backend(device_kind="tpu", num_models=2,
+                          task="update") == "batched"
+    # Other device classes have no batched equivalent: the device pick wins.
+    assert select_backend(device_kind="phone", num_models=4) == "sparse"
+    assert select_backend(device_kind="pod", num_models=4) == "distributed"
+    # Degrades to the device pick when batched is unavailable.
+    assert select_backend(device_kind="tpu", num_models=4,
+                          available=["jnp", "alias"]) == "jnp"
+    # Single-model explicit-device routing is unchanged.
+    assert select_backend(device_kind="tpu", num_models=1) == "jnp"
+
+
+def test_alias_sampler_path_knob():
+    """AliasSampler mirrors BatchedSampler's path selector; bad paths fail
+    loudly at construction."""
+    assert get_backend("alias", path="jnp")._path() == "jnp"
+    assert get_backend("alias", path="pallas")._path() == "pallas"
+    assert get_backend("alias")._path() in ("jnp", "pallas")  # auto resolves
+    with pytest.raises(ValueError, match="alias path"):
+        get_backend("alias", path="cuda")
+
+
 def test_service_resolves_auto_backend():
     svc = VedaliaService(backend="auto", num_sweeps=4)
     handle = svc.fit(_reviews(n=20, seed=0), num_topics=4, base_vocab=120)

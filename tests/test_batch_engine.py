@@ -21,7 +21,7 @@ from repro.api.backends import backend_capabilities, get_backend
 from repro.api.protocol import RemoteError
 from repro.api.service import FitRequest, VedaliaService
 from repro.core import batch as batch_lib
-from repro.core import codec, gibbs, perplexity, rlda
+from repro.core import codec, gibbs, rlda
 from repro.core.types import LDAConfig
 from repro.data import reviews as reviews_data
 from repro.serving import batch_engine
@@ -243,28 +243,64 @@ def test_perf_gate_update_refuses_partial_summary(tmp_path):
     assert perf_gate.main(["--summary", str(summary),
                            "--baseline", str(baseline), "--update"]) == 1
     assert not baseline.exists()
-    # a full summary refreshes, and the gate then passes and regresses
+    # a full summary (every gated bench) refreshes, and the gate then
+    # passes and regresses
     summary.write_text(json.dumps({
         "benches": {
             "sampler": {"samplers": {
                 "parallel": {"tokens_per_s": 100},
                 "kernel": {"tokens_per_s": 100}}},
             "batch": {"models_per_s": {"batched": 10}, "speedup": 5},
+            "alias": {"tokens_per_s": {"alias": 1000}},
         }}))
     assert perf_gate.main(["--summary", str(summary),
                            "--baseline", str(baseline), "--update"]) == 0
     assert perf_gate.main(["--summary", str(summary),
                            "--baseline", str(baseline),
-                           "--require", "sampler,batch"]) == 0
+                           "--require", "sampler,batch,alias"]) == 0
     summary.write_text(json.dumps({
         "benches": {
             "sampler": {"samplers": {
                 "parallel": {"tokens_per_s": 50},  # -50%: regression
                 "kernel": {"tokens_per_s": 100}}},
             "batch": {"models_per_s": {"batched": 10}, "speedup": 5},
+            "alias": {"tokens_per_s": {"alias": 1000}},
         }}))
     assert perf_gate.main(["--summary", str(summary),
                            "--baseline", str(baseline)]) == 1
+
+
+def test_fit_batch_and_refine_many_stack_alias_backend(monkeypatch):
+    """Regression: the service used to serialize any explicit non-batched
+    backend; a backend with the stacked `run_many` surface (alias) must
+    launch through the batch engine from fit_batch AND refine_many —
+    observed directly by counting `run_batched` invocations, since every
+    softer assertion also holds on the sequential fallback path."""
+    launches = []
+    real_run_batched = batch_engine.run_batched
+
+    def counting_run_batched(sampler, *args, **kw):
+        out, stats = real_run_batched(sampler, *args, **kw)
+        launches.append((type(sampler).__name__, stats.num_launches))
+        return out, stats
+
+    monkeypatch.setattr(batch_engine, "run_batched", counting_run_batched)
+    svc = VedaliaService(backend="auto", num_sweeps=4)
+    handles = svc.fit_batch(_review_sets(3), num_topics=6, base_vocab=200,
+                            backend="alias", seed=3)
+    assert launches == [("AliasSampler", 1)]  # one stacked launch, not 3
+    assert all(h.backend == "alias" for h in handles)
+    # distinct per-handle chains (per-model key discipline held)
+    assert not np.array_equal(np.asarray(handles[0].state.z[:50]),
+                              np.asarray(handles[1].state.z[:50]))
+    for h in handles:
+        _assert_count_invariants(h.cfg, h.model.corpus, h.state)
+    before = [h.sweeps_run for h in handles]
+    svc.refine_many(handles, 2, backend="alias")
+    assert launches == [("AliasSampler", 1)] * 2  # warm refit batched too
+    assert [h.sweeps_run for h in handles] == [b + 2 for b in before]
+    assert all(h.backend == "alias" for h in handles)
+    assert all(svc.view(h).valid for h in handles)
 
 
 def test_refine_many_batches_compatible_handles():

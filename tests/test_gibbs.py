@@ -114,15 +114,70 @@ def test_alias_mh_sweep_converges():
     assert p1 < 0.7 * p0, (p0, p1)
 
 
+def _alias_reconstruction(thresh, al):
+    """p[t] = (thresh[t] + Σ_{j: alias[j]==t} (1-thresh[j])) / k."""
+    thresh, al = np.asarray(thresh), np.asarray(al)
+    recon = thresh.copy()
+    for j in range(len(thresh)):
+        recon[al[j]] += 1.0 - thresh[j]
+    return recon / len(thresh)
+
+
 def test_alias_table_is_exact_distribution():
-    """Alias table encodes the input distribution exactly:
-    p[t] = (thresh[t] + Σ_{j: alias[j]==t} (1-thresh[j])) / k."""
+    """Alias table encodes the input distribution exactly."""
     rng = np.random.default_rng(0)
     for k in (2, 3, 8, 33, 64):
         p = rng.dirichlet(np.full(k, 0.4))
         thresh, al = alias.build_alias_table(jnp.asarray(p, jnp.float32))
-        thresh, al = np.asarray(thresh), np.asarray(al)
-        recon = thresh.copy()
-        for j in range(k):
-            recon[al[j]] += 1.0 - thresh[j]
-        np.testing.assert_allclose(recon / k, p, atol=2e-5)
+        np.testing.assert_allclose(
+            _alias_reconstruction(thresh, al), p, atol=2e-5)
+
+
+def test_alias_table_exact_on_degenerate_rows():
+    """Property sweep over the shapes that break pairing builders: the
+    K-long drained-donor chain (one near-empty bucket), one-hot rows,
+    zero-probability entries, exactly-uniform rows, and large K. Every
+    threshold must stay in [0, 1] and the reconstruction must be exact."""
+    rng = np.random.default_rng(1)
+    cases = [
+        np.r_[1e-7, np.full(63, (1 - 1e-7) / 63)],  # drain chain
+        np.eye(16)[3],  # one-hot: zero-probability topics must never win
+        np.r_[np.zeros(12), rng.dirichlet(np.full(4, 0.3))],
+        np.full(32, 1 / 32),  # exactly uniform (all-heavy, zero excess)
+        np.array([0.999, 0.001]),
+        rng.dirichlet(np.full(256, 0.05)),  # large sparse K
+    ]
+    for p in cases:
+        thresh, al = alias.build_alias_table(jnp.asarray(p, jnp.float32))
+        t = np.asarray(thresh)
+        assert ((t >= 0.0) & (t <= 1.0)).all(), p
+        np.testing.assert_allclose(
+            _alias_reconstruction(thresh, al), p / p.sum(), atol=2e-5)
+        # zero-probability topics are unreachable: a zero bucket keeps no
+        # mass and no bucket above threshold aliases into it
+        zero = np.flatnonzero(p == 0.0)
+        if zero.size:
+            np.testing.assert_allclose(t[zero], 0.0, atol=1e-7)
+
+
+def test_alias_table_zero_row_uniform_fallback():
+    """An all-zero row (word never observed) falls back to an explicit
+    uniform distribution, not an epsilon-normalized artifact."""
+    thresh, al = alias.build_alias_table(jnp.zeros(16))
+    np.testing.assert_allclose(np.asarray(thresh), 1.0)
+    np.testing.assert_allclose(
+        _alias_reconstruction(thresh, al), np.full(16, 1 / 16), atol=1e-7)
+
+
+def test_alias_tables_batched_matches_per_row():
+    """The whole-(V, K) vectorized builder == the single-row builder on
+    every row, including a zero row mixed into the batch."""
+    rng = np.random.default_rng(2)
+    probs = rng.dirichlet(np.full(24, 0.2), size=40).astype(np.float32)
+    probs[7] = 0.0
+    thresh, al = alias.build_alias_tables(jnp.asarray(probs))
+    assert thresh.shape == al.shape == (40, 24)
+    for i in (0, 7, 13, 39):
+        t_i, a_i = alias.build_alias_table(jnp.asarray(probs[i]))
+        np.testing.assert_array_equal(np.asarray(thresh[i]), np.asarray(t_i))
+        np.testing.assert_array_equal(np.asarray(al[i]), np.asarray(a_i))

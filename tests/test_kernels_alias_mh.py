@@ -1,0 +1,206 @@
+"""alias_mh Pallas kernel vs pure-jnp oracles: bit-exact parity sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api.backends import get_backend
+from repro.core import alias, codec
+from repro.core.types import Corpus, LDAConfig, init_state
+from repro.kernels.alias_mh import ops as kops
+from repro.kernels.alias_mh.kernel import (
+    alias_mh_blocked,
+    alias_mh_blocked_batched,
+)
+from repro.kernels.alias_mh.ref import mh_tile
+
+
+def _tile_inputs(rng, n, k, dtype, mh_steps=3):
+    rows_d = jnp.asarray(rng.integers(0, 50, (n, k)).astype(dtype))
+    rows_w = jnp.asarray(rng.integers(1, 50, (n, k)).astype(dtype))
+    tot = jnp.asarray(rng.integers(1, 500, k).astype(dtype))
+    thresh_w, alias_w = alias.build_alias_tables(
+        jnp.asarray(rng.random((n, k)).astype(np.float32)) + 1e-3)
+    thresh_d, alias_d = alias.build_alias_tables(
+        jnp.asarray(rng.random((n, k)).astype(np.float32)) + 1e-3)
+    z = jnp.asarray(rng.integers(0, k, n).astype(np.int32))
+    wts = jnp.asarray(
+        (rng.random(n) * (rng.random(n) > 0.1)).astype(np.float32))
+    j_prop = jnp.asarray(rng.integers(0, k, (mh_steps, n)).astype(np.int32))
+    u_prop = jnp.asarray(rng.random((mh_steps, n)).astype(np.float32))
+    u_acc = jnp.asarray(
+        (rng.random((mh_steps, n)) * 0.98 + 0.01).astype(np.float32))
+    return (rows_d, rows_w, tot, thresh_w, alias_w, thresh_d, alias_d, z,
+            wts, j_prop, u_prop, u_acc)
+
+
+@pytest.mark.parametrize("n,k,token_block", [
+    (256, 128, 256), (512, 128, 256), (512, 256, 128), (256, 128, 64),
+])
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_kernel_matches_ref_tile(n, k, token_block, dtype):
+    """Same rows, tables and noise => the fused kernel must reproduce the
+    take_along_axis oracle exactly (both count representations)."""
+    rng = np.random.default_rng(int(n + k))
+    w_bits = 8 if dtype == np.int32 else None
+    (rows_d, rows_w, tot, thresh_w, alias_w, thresh_d, alias_d, z, wts,
+     j_prop, u_prop, u_acc) = _tile_inputs(rng, n, k, dtype)
+
+    out = alias_mh_blocked(
+        rows_d, rows_w, tot, thresh_w, alias_w, thresh_d, alias_d, z, wts,
+        j_prop, u_prop, u_acc,
+        alpha=0.1, beta=0.01, beta_bar=0.01 * k, w_bits=w_bits,
+        token_block=token_block, interpret=True,
+    )
+    if w_bits is not None:
+        scale = 2.0 ** -(w_bits + 1)
+        rd = rows_d.astype(jnp.float32) * scale
+        rw = rows_w.astype(jnp.float32) * scale
+        tt = tot.astype(jnp.float32) * scale
+    else:
+        rd, rw, tt = rows_d, rows_w, tot
+    ref = mh_tile(rd, rw, tt, thresh_w, alias_w, thresh_d, alias_d, z, wts,
+                  j_prop, u_prop, u_acc, 0.1, 0.01, 0.01 * k)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32])
+def test_batched_kernel_matches_ref_per_model(dtype):
+    """The model-grid kernel is M independent single-model tiles: each grid
+    step must index its own model's rows, tables, totals and noise."""
+    rng = np.random.default_rng(11)
+    m, n, k, token_block = 3, 512, 128, 256
+    w_bits = 8 if dtype == np.int32 else None
+    per_model = [_tile_inputs(rng, n, k, dtype) for _ in range(m)]
+    stacked = [jnp.stack([pm[i] for pm in per_model]) for i in range(12)]
+
+    out = alias_mh_blocked_batched(
+        *stacked,
+        alpha=0.1, beta=0.01, beta_bar=0.01 * k, w_bits=w_bits,
+        token_block=token_block, interpret=True,
+    )
+    assert out.shape == (m, n)
+    for i in range(m):
+        (rows_d, rows_w, tot, thresh_w, alias_w, thresh_d, alias_d, z, wts,
+         j_p, u_p, u_a) = per_model[i]
+        if w_bits is not None:
+            scale = 2.0 ** -(w_bits + 1)
+            rd = rows_d.astype(jnp.float32) * scale
+            rw = rows_w.astype(jnp.float32) * scale
+            tt = tot.astype(jnp.float32) * scale
+        else:
+            rd, rw, tt = rows_d, rows_w, tot
+        ref = mh_tile(rd, rw, tt, thresh_w, alias_w, thresh_d, alias_d, z,
+                      wts, j_p, u_p, u_a, 0.1, 0.01, 0.01 * k)
+        np.testing.assert_array_equal(np.asarray(out[i]), np.asarray(ref))
+
+
+def _corpus(rng, n, v, d):
+    return Corpus(
+        docs=jnp.asarray(rng.integers(0, d, n), jnp.int32),
+        words=jnp.asarray(rng.integers(0, v, n), jnp.int32),
+        weights=jnp.asarray(
+            (rng.random(n) * (rng.random(n) > 0.05)).astype(np.float32)),
+    )
+
+
+def _stored_state(cfg, corpus, key):
+    return codec.encode_state(cfg, init_state(cfg, corpus, key))
+
+
+@pytest.mark.parametrize("w_bits", [None, 8])
+def test_ops_mh_sweep_matches_core_alias_bitwise(w_bits):
+    """The fused sweep (tables + gathers + kernel + rebuild) must equal
+    `core.alias.mh_sweep` bit for bit from identical keys — the acceptance
+    gate for routing large fits through the kernel."""
+    rng = np.random.default_rng(0)
+    cfg = LDAConfig(num_topics=12, vocab_size=150, num_docs=40,
+                    w_bits=w_bits)
+    corpus = _corpus(rng, 3000, 150, 40)
+    st = _stored_state(cfg, corpus, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(7)
+
+    ref = codec.encode_state(cfg, alias.mh_sweep(
+        cfg, codec.decode_state(cfg, st), corpus, key, 4))
+    out = kops.mh_sweep(cfg, st, corpus, key, 4)
+    # The sweep must actually move assignments (dead-proposal regression).
+    assert int((np.asarray(ref.z) != np.asarray(st.z)).sum()) > 0
+    np.testing.assert_array_equal(np.asarray(out.z), np.asarray(ref.z))
+    np.testing.assert_array_equal(np.asarray(out.n_dt), np.asarray(ref.n_dt))
+    np.testing.assert_array_equal(np.asarray(out.n_wt), np.asarray(ref.n_wt))
+    np.testing.assert_array_equal(np.asarray(out.n_t), np.asarray(ref.n_t))
+
+
+@pytest.mark.parametrize("w_bits", [None, 8])
+def test_ops_mh_sweep_many_matches_single_model_sweeps(w_bits):
+    """Full batched fused sweep (vectorized tables + batched gathers +
+    model-grid kernel + vmapped rebuild) == the single-model fused sweep
+    per model, bit for bit."""
+    m = 3
+    cfg = LDAConfig(num_topics=12, vocab_size=150, num_docs=40,
+                    w_bits=w_bits)
+    corpora = [_corpus(np.random.default_rng(40 + i), 600, 150, 40)
+               for i in range(m)]
+    stacked = Corpus(
+        docs=jnp.stack([c.docs for c in corpora]),
+        words=jnp.stack([c.words for c in corpora]),
+        weights=jnp.stack([c.weights for c in corpora]),
+    )
+    keys = jax.random.split(jax.random.PRNGKey(9), m)
+    states = jax.vmap(
+        lambda co, k: _stored_state(cfg, co, k))(stacked, keys)
+    out = kops.mh_sweep_many(cfg, states, stacked, keys, 4)
+    for i in range(m):
+        st_i = jax.tree_util.tree_map(lambda x: x[i], states)
+        ref = kops.mh_sweep(cfg, st_i, corpora[i], keys[i], 4)
+        np.testing.assert_array_equal(np.asarray(out.z[i]),
+                                      np.asarray(ref.z))
+        np.testing.assert_array_equal(np.asarray(out.n_wt[i]),
+                                      np.asarray(ref.n_wt))
+
+
+def test_registry_alias_paths_agree_and_batch_engine_rides():
+    """`AliasSampler(path="pallas")` == `path="jnp"` through the registry,
+    and the stacked surface drives `batch_engine.run_batched` with the
+    per-model chains matching sequential runs on the bucket-padded corpora
+    from the same keys."""
+    from repro.core import batch as batch_lib
+    from repro.serving import batch_engine
+
+    rng = np.random.default_rng(5)
+    cfg = LDAConfig(num_topics=8, vocab_size=120, num_docs=30, w_bits=8)
+    corpus = _corpus(rng, 1200, 120, 30)
+    a = get_backend("alias", path="jnp").run(
+        cfg, corpus, jax.random.PRNGKey(2), 3)
+    b = get_backend("alias", path="pallas").run(
+        cfg, corpus, jax.random.PRNGKey(2), 3)
+    np.testing.assert_array_equal(np.asarray(a.z), np.asarray(b.z))
+
+    cfgs, corpora = [cfg] * 3, [corpus] * 3
+    keys = [jax.random.fold_in(jax.random.PRNGKey(0), i) for i in range(3)]
+    states, stats = batch_engine.run_batched(
+        get_backend("alias", path="pallas"), cfgs, corpora, keys, 2)
+    assert stats.num_launches == 1
+    padded = [batch_lib.pad_corpus(c, batch_engine.length_bucket(
+        c.num_tokens)) for c in corpora]
+    for i in range(3):
+        seq = get_backend("alias", path="pallas").run(
+            cfg, padded[i], keys[i], 2)
+        np.testing.assert_array_equal(
+            np.asarray(states[i].z),
+            np.asarray(seq.z[:corpora[i].num_tokens]))
+
+
+def test_kernel_keeps_padding_assignments():
+    rng = np.random.default_rng(3)
+    n, k = 256, 128
+    (rows_d, rows_w, tot, thresh_w, alias_w, thresh_d, alias_d, z, _,
+     j_prop, u_prop, u_acc) = _tile_inputs(rng, n, k, np.float32)
+    wts = jnp.zeros(n, jnp.float32)  # all padding
+    out = alias_mh_blocked(
+        rows_d, rows_w, tot, thresh_w, alias_w, thresh_d, alias_d, z, wts,
+        j_prop, u_prop, u_acc,
+        alpha=0.1, beta=0.01, beta_bar=1.28, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(z))
