@@ -1,0 +1,158 @@
+"""Offload-tier server-cost benchmark (paper §2.2 + §2.5).
+
+Runs the same synthetic review stream twice with `refit_policy="always"`
+(a refit per update window — the schedule depends only on the event flow,
+so both runs issue the *identical* refit task list):
+
+  server-only   the scheduler's built-in refit path: every full re-fit
+                burns `refit_sweeps x corpus-tokens` of server sweep-work;
+  offloaded     the `OffloadCoordinator` leases every refit to a ~1k-device
+                `DeviceFleet` (20% malicious, churn, stragglers) and the
+                server pays only for validation passes, Eq.(6) spot-checks,
+                adoption checks, and explicit fallbacks.
+
+Reported and gated:
+
+  offloaded_sweep_fraction   1 - server_sweep_work / server-only sweep-work
+                             (gate: >= 0.5 — the tier must at least halve
+                             the server's refit bill);
+  heldout_ppx_delta          relative gap between the two runs' mean
+                             held-out perplexity (gate: <= 0.02 — verified
+                             device fits serve as well as server fits);
+  adopted_phony              adopted submissions from malicious devices
+                             (gate: == 0; exported to the perf trajectory
+                             as the 1.0/0.0 `no_phony_adopted` indicator);
+  credit separation          mean honest credit > mean malicious credit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.api import VedaliaClient, VedaliaServer
+from repro.offload import DeviceFleet, FleetSpec, OffloadCoordinator
+from repro.stream import (
+    IncrementalScheduler,
+    StreamRouter,
+    StreamSpec,
+    pump,
+    synthetic_events,
+)
+
+SHARDS = (0, 1)
+
+
+def _run_stream(events, spec, refit_sweeps, executor=None):
+    router = StreamRouter(list(SHARDS), capacity=256)
+    servers = {s: VedaliaServer(backend="jnp", num_sweeps=4,
+                                update_sweeps=1) for s in SHARDS}
+    clients = {s: VedaliaClient(server=servers[s]) for s in SHARDS}
+    sched = IncrementalScheduler(
+        clients, router, microbatch=6, min_fit_reviews=8,
+        staleness_budget=8.0, refit_sweeps=refit_sweeps,
+        refit_policy="always", refit_executor=executor,
+        fit_kwargs=dict(num_topics=4, base_vocab=spec.vocab_size,
+                        num_sweeps=4))
+    pump(events, router, sched, step_interval=2.0)
+    heldout = {}
+    for pid, status in sched.products.items():
+        if status.heldout:
+            heldout[pid] = float(clients[status.shard_id].perplexity(
+                status.handle_id, reviews=status.heldout))
+    return sched, heldout
+
+
+def run(quick: bool = False) -> dict:
+    spec = StreamSpec(num_products=4, duration=40.0 if quick else 80.0,
+                      rate=2.5, shape="burst", shift_at=20.0, seed=0)
+    events = synthetic_events(spec)
+    refit_sweeps = 6
+    fleet_spec = FleetSpec(num_devices=1000, malicious_frac=0.2,
+                           fabricate_frac=0.5, churn_prob=0.05,
+                           straggler_frac=0.1, straggler_factor=8.0,
+                           backend="jnp", seed=0)
+
+    print(f"  stream: {len(events)} events, {spec.num_products} products, "
+          f"refit_sweeps={refit_sweeps}")
+    base_sched, base_heldout = _run_stream(events, spec, refit_sweeps)
+    base_work = base_sched.stats.refit_sweep_work
+    print(f"  server-only: {base_sched.stats.refits} refits, "
+          f"sweep-work {base_work:,.0f} token-sweeps")
+
+    fleet = DeviceFleet(fleet_spec)
+    coord = OffloadCoordinator(fleet, spot_check_sweeps=2, seed=0)
+    off_sched, off_heldout = _run_stream(events, spec, refit_sweeps,
+                                         executor=coord)
+    st = coord.stats
+    assert st.tasks == base_sched.stats.refits, \
+        "refit schedules diverged — the comparison is invalid"
+
+    offloaded = 1.0 - st.server_sweep_work / base_work
+    shared = sorted(set(base_heldout) & set(off_heldout))
+    base_mean = float(np.mean([base_heldout[p] for p in shared]))
+    off_mean = float(np.mean([off_heldout[p] for p in shared]))
+    ppx_delta = abs(off_mean - base_mean) / base_mean
+
+    ledger = coord.marketplace.ledger
+    honest_credit = float(np.mean(
+        [ledger.get(d.device_id) for d in fleet.devices.values()
+         if d.honest]))
+    malicious_credit = float(np.mean(
+        [ledger.get(d.device_id) for d in fleet.devices.values()
+         if not d.honest]))
+
+    print(f"  offloaded: {st.adopted}/{st.tasks} adopted "
+          f"({st.fallback_unmatched} unmatched, "
+          f"{st.fallback_rejected} rejected, {st.churned} churned, "
+          f"{st.lease_timeouts} lease timeouts, "
+          f"{st.invalid_submissions} invalid uploads)")
+    print(f"  server sweep-work {st.server_sweep_work:,.0f} vs "
+          f"{base_work:,.0f} -> {offloaded:.1%} moved off-server "
+          f"(devices ran {st.device_sweep_work:,.0f})")
+    print(f"  held-out ppx {off_mean:.1f} vs server-only {base_mean:.1f} "
+          f"({ppx_delta:+.2%})")
+    print(f"  credit: honest {honest_credit:+.3f} vs malicious "
+          f"{malicious_credit:+.3f}; adopted_phony={st.adopted_phony}")
+
+    # The tier's acceptance gates, asserted on every run.
+    assert offloaded >= 0.5, \
+        f"only {offloaded:.1%} of refit sweep-work moved off-server"
+    assert ppx_delta <= 0.02, \
+        f"held-out perplexity drifted {ppx_delta:.2%} from server-only"
+    assert st.adopted_phony == 0, \
+        f"{st.adopted_phony} phony model(s) adopted"
+    assert honest_credit > malicious_credit, \
+        "credit failed to separate honest from malicious devices"
+    assert st.adopted > 0 and st.device_sweep_work > 0
+
+    return {
+        "stream": dataclasses.asdict(spec),
+        "fleet": dataclasses.asdict(fleet_spec),
+        "refits": st.tasks,
+        "adopted": st.adopted,
+        "adopted_phony": st.adopted_phony,
+        "no_phony_adopted": 1.0 if st.adopted_phony == 0 else 0.0,
+        "offloaded_sweep_fraction": round(offloaded, 4),
+        "server_sweep_work": round(st.server_sweep_work, 1),
+        "server_only_sweep_work": round(base_work, 1),
+        "device_sweep_work": round(st.device_sweep_work, 1),
+        "fallback_unmatched": st.fallback_unmatched,
+        "fallback_rejected": st.fallback_rejected,
+        "lease_timeouts": st.lease_timeouts,
+        "churned": st.churned,
+        "invalid_submissions": st.invalid_submissions,
+        "heldout_ppx": {"server_only": round(base_mean, 2),
+                        "offloaded": round(off_mean, 2),
+                        "rel_delta": round(ppx_delta, 4)},
+        "credit": {"honest": round(honest_credit, 4),
+                   "malicious": round(malicious_credit, 4)},
+        "matched_rate": round(coord.marketplace.matched_rate(), 4),
+        "verification_rate": round(
+            coord.marketplace.verification_rate(), 4),
+    }
+
+
+if __name__ == "__main__":
+    run()

@@ -11,7 +11,7 @@ landing silently.
 Refreshing the baseline (after an intentional perf change, from a clean
 run on main):
 
-    PYTHONPATH=src python -m benchmarks.run --only sampler,batch
+    PYTHONPATH=src python -m benchmarks.run --only sampler,batch,alias,offload
     python -m benchmarks.perf_gate --update
 
 The baseline must be measured on the machine class that gates it: CI
@@ -55,6 +55,14 @@ METRICS = {
     # gates the production path's absolute tokens/sec.
     "alias": [
         "tokens_per_s.alias",
+    ],
+    # Offload tier: the fraction of refit sweep-work the device fleet
+    # takes off the server (ratio, higher is better), and the zero-
+    # adopted-phony gate as a 1.0/0.0 indicator — any phony adoption
+    # drops it to 0.0, far below every tolerance.
+    "offload": [
+        "offloaded_sweep_fraction",
+        "no_phony_adopted",
     ],
 }
 

@@ -35,6 +35,8 @@ BENCHES = [
      "benchmarks.batch_bench"),
     ("alias", "AliasLDA fused path vs the legacy sweep (large-fit gate)",
      "benchmarks.alias_bench"),
+    ("offload", "Chital offload tier: server sweep-work eliminated (§2.5)",
+     "benchmarks.offload_bench"),
     ("roofline", "roofline terms from the dry-run (deliverable g)",
      "benchmarks.roofline"),
 ]

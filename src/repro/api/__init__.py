@@ -43,6 +43,7 @@ _EXPORTS = {
     # service
     "FitRequest": "repro.api.service",
     "ModelHandle": "repro.api.service",
+    "SpotCheckResponse": "repro.api.service",
     "TopReviewsResponse": "repro.api.service",
     "UpdateResponse": "repro.api.service",
     "VedaliaService": "repro.api.service",
@@ -55,6 +56,8 @@ _EXPORTS = {
     "VedaliaServer": "repro.api.server",
     "VedaliaClient": "repro.api.client",
     "FitResult": "repro.api.client",
+    "ExportedModel": "repro.api.client",
+    "SpotCheckResult": "repro.api.client",
     "IngestResult": "repro.api.client",
     "PrepareResult": "repro.api.client",
     "ServerInfo": "repro.api.client",

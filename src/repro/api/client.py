@@ -20,9 +20,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional, Sequence
 
+import jax.numpy as jnp
+
 from repro.api import protocol
 from repro.api.server import VedaliaServer
 from repro.core.rlda import Review
+from repro.core.types import Corpus, LDAConfig, LDAState
 from repro.core.views import ModelView, TopicView
 
 Transport = Callable[[str], str]
@@ -120,6 +123,38 @@ class ViewResult:
 
 
 @dataclasses.dataclass(frozen=True)
+class ExportedModel:
+    """A served model checked out for device-local computation
+    (`export_model`): enough to warm-start any sampler backend on the
+    device and compute real perplexity locally."""
+
+    handle_id: int
+    cfg: LDAConfig
+    corpus: Corpus
+    state: LDAState  # stored units (fixed point when cfg.w_bits is set)
+    base_vocab: int
+    sweeps_run: int
+    num_tokens: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SpotCheckResult:
+    """Server verdict on an uploaded state (`spot_check`).
+
+    `state_perplexity` is the server's own recomputation (the claim is
+    never trusted); `post_perplexity` is set when the server ran re-Gibbs
+    sweeps on a throwaway copy (the real Eq. (6) `reverify`).
+    """
+
+    handle_id: int
+    valid: bool
+    reason: str
+    state_perplexity: Optional[float]
+    post_perplexity: Optional[float]
+    deviation: Optional[float]
+
+
+@dataclasses.dataclass(frozen=True)
 class TopReviewsResult:
     handle_id: int
     topic_id: int
@@ -148,6 +183,12 @@ class VedaliaClient:
         self.cursors: dict[int, str] = {}  # handle_id -> last synced cursor
 
     # -- plumbing -----------------------------------------------------------
+
+    @property
+    def transport(self) -> Transport:
+        """The underlying `str -> str` transport — share it to point more
+        clients (e.g. a simulated device fleet) at the same server."""
+        return self._transport
 
     def rebind(
         self,
@@ -343,6 +384,85 @@ class VedaliaClient:
                 "n_t": protocol.encode_array(state.n_t),
             },
             "backend": backend,
+            "sweeps_run": sweeps_run,
+        }))
+
+    # -- offload tier --------------------------------------------------------
+
+    def export_model(self, handle_id: int) -> ExportedModel:
+        """Check a served model out for local computation: config, corpus
+        and current state cross the wire; the handle keeps serving."""
+        p = self._call("export_model", {"handle_id": handle_id})
+        c = p["cfg"]
+        cfg = LDAConfig(
+            num_topics=int(c["num_topics"]),
+            vocab_size=int(c["vocab_size"]),
+            num_docs=int(c["num_docs"]),
+            alpha=float(c["alpha"]),
+            beta=float(c["beta"]),
+            w_bits=None if c["w_bits"] is None else int(c["w_bits"]),
+        )
+        corpus = Corpus(
+            docs=jnp.asarray(protocol.decode_array(p["corpus"]["docs"])),
+            words=jnp.asarray(protocol.decode_array(p["corpus"]["words"])),
+            weights=jnp.asarray(protocol.decode_array(p["corpus"]["weights"])),
+        )
+        arrays = protocol.decode_state_arrays(p["state"])
+        state = LDAState(
+            z=jnp.asarray(arrays["z"]),
+            n_dt=jnp.asarray(arrays["n_dt"]),
+            n_wt=jnp.asarray(arrays["n_wt"]),
+            n_t=jnp.asarray(arrays["n_t"]),
+        )
+        return ExportedModel(
+            handle_id=int(p["handle_id"]), cfg=cfg, corpus=corpus,
+            state=state, base_vocab=int(p["base_vocab"]),
+            sweeps_run=int(p["sweeps_run"]),
+            num_tokens=int(p["num_tokens"]),
+        )
+
+    def spot_check(
+        self,
+        handle_id: int,
+        state,
+        *,
+        claimed_perplexity: Optional[float] = None,
+        num_sweeps: int = 0,
+        claim_tol: float = 0.01,
+        backend: Optional[str] = None,
+        seed: Optional[int] = None,
+    ) -> SpotCheckResult:
+        """Ask the server to validate (and optionally re-Gibbs) a locally
+        computed state for `handle_id` without adopting it."""
+        p = self._call("spot_check", {
+            "handle_id": handle_id,
+            "state": protocol.encode_state_arrays(state),
+            "claimed_perplexity": claimed_perplexity,
+            "num_sweeps": num_sweeps,
+            "claim_tol": claim_tol,
+            "backend": backend,
+            "seed": seed,
+        })
+        return SpotCheckResult(
+            handle_id=int(p["handle_id"]),
+            valid=bool(p["valid"]),
+            reason=str(p["reason"]),
+            state_perplexity=None if p["state_perplexity"] is None
+            else float(p["state_perplexity"]),
+            post_perplexity=None if p["post_perplexity"] is None
+            else float(p["post_perplexity"]),
+            deviation=None if p["deviation"] is None
+            else float(p["deviation"]),
+        )
+
+    def adopt_state(
+        self, handle_id: int, state, *, sweeps_run: int = 0
+    ) -> FitResult:
+        """Swap a device-computed state (stored units) into the *existing*
+        served handle; the server re-validates before adopting."""
+        return self._fit_result(self._call("adopt_state", {
+            "handle_id": handle_id,
+            "state": protocol.encode_state_arrays(state),
             "sweeps_run": sweeps_run,
         }))
 

@@ -39,7 +39,11 @@ PROTOCOL_VERSION = 1
 #: cursor, and the observability surface backpressure decisions read.
 #: `fit_batch` / `refine_batch` are the multi-model verbs: M review sets
 #: (or M served handles) fitted/refitted through the batched sampler in
-#: as few launches as bucketing allows.
+#: as few launches as bucketing allows. `export_model` / `spot_check` /
+#: `adopt_state` are the offload-tier verbs (additive, no version bump):
+#: a device downloads a served model's corpus+state, computes locally, and
+#: the server validates + re-Gibbs-spot-checks the uploaded state before
+#: swapping it into the *existing* served handle.
 KINDS = (
     "hello",
     "open_session",
@@ -54,6 +58,9 @@ KINDS = (
     "view",
     "top_reviews",
     "adopt",
+    "adopt_state",
+    "export_model",
+    "spot_check",
     "perplexity",
     "stats",
     "release",
@@ -127,6 +134,28 @@ def decode_array(d: dict) -> np.ndarray:
             d["shape"]).copy()
     except (KeyError, TypeError, ValueError) as e:
         raise ProtocolError(f"bad array payload: {e}") from None
+
+
+#: The four arrays of an `LDAState`, in wire order — shared by every verb
+#: that moves model state (`adopt`, `adopt_state`, `export_model`,
+#: `spot_check`).
+STATE_FIELDS = ("z", "n_dt", "n_wt", "n_t")
+
+
+def encode_state_arrays(state) -> dict:
+    """LDAState (stored units) -> {"z": {...}, "n_dt": {...}, ...}."""
+    return {name: encode_array(getattr(state, name)) for name in STATE_FIELDS}
+
+
+def decode_state_arrays(d: dict) -> dict:
+    """Wire state dict -> {name: ndarray}; raises ProtocolError when a
+    field is missing or malformed."""
+    if not isinstance(d, dict):
+        raise ProtocolError("state payload must be a JSON object")
+    try:
+        return {name: decode_array(d[name]) for name in STATE_FIELDS}
+    except KeyError as e:
+        raise ProtocolError(f"state payload missing field {e}") from None
 
 
 def encode_review(r: Review) -> dict:

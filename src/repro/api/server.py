@@ -311,6 +311,79 @@ class VedaliaServer:
         )
         return self._fit_payload(handle)
 
+    def _decode_state(self, payload: dict) -> LDAState:
+        """Wire `state` field -> LDAState (shape checks happen later, in
+        `VedaliaService.validate_state`, so malformed submissions come back
+        as a typed `valid=False` instead of a wire error where possible)."""
+        arrays = protocol.decode_state_arrays(payload["state"])
+        return LDAState(
+            z=jnp.asarray(arrays["z"]),
+            n_dt=jnp.asarray(arrays["n_dt"]),
+            n_wt=jnp.asarray(arrays["n_wt"]),
+            n_t=jnp.asarray(arrays["n_t"]),
+        )
+
+    def _handle_export_model(self, payload: dict) -> dict:
+        """A device downloads everything needed to continue a served model
+        locally: config, the handle's (token-parallel) corpus, and the
+        current stored-unit state — the offload tier's task lease."""
+        handle = self._handle_of(payload)
+        cfg = handle.cfg
+        corpus = handle.model.corpus
+        return {
+            "handle_id": handle.handle_id,
+            "cfg": {
+                "num_topics": cfg.num_topics,
+                "vocab_size": cfg.vocab_size,
+                "num_docs": cfg.num_docs,
+                "alpha": cfg.alpha,
+                "beta": cfg.beta,
+                "w_bits": cfg.w_bits,
+            },
+            "base_vocab": handle.prep.base_vocab,
+            "corpus": {
+                "docs": protocol.encode_array(corpus.docs),
+                "words": protocol.encode_array(corpus.words),
+                "weights": protocol.encode_array(corpus.weights),
+            },
+            "state": protocol.encode_state_arrays(handle.state),
+            "sweeps_run": handle.sweeps_run,
+            "num_tokens": corpus.num_tokens,
+        }
+
+    def _handle_spot_check(self, payload: dict) -> dict:
+        """Validate + recompute-perplexity (+ optional re-Gibbs on a
+        throwaway copy) of an uploaded state. Never touches the handle."""
+        handle = self._handle_of(payload)
+        state = self._decode_state(payload)
+        res = self.service.spot_check(
+            handle,
+            state,
+            claimed_perplexity=payload.get("claimed_perplexity"),
+            num_sweeps=int(payload.get("num_sweeps", 0)),
+            claim_tol=float(payload.get("claim_tol", 0.01)),
+            backend=self._backend_arg(payload),
+            seed=payload.get("seed"),
+        )
+        return {
+            "handle_id": handle.handle_id,
+            "valid": res.valid,
+            "reason": res.reason,
+            "state_perplexity": res.state_perplexity,
+            "post_perplexity": res.post_perplexity,
+            "deviation": res.deviation,
+        }
+
+    def _handle_adopt_state(self, payload: dict) -> dict:
+        """Swap a verified device-computed state into an existing served
+        handle (re-validated server-side regardless of what the caller
+        already checked)."""
+        handle = self._handle_of(payload)
+        state = self._decode_state(payload)
+        self.service.adopt_state(
+            handle, state, sweeps_run=int(payload.get("sweeps_run", 0)))
+        return self._fit_payload(handle)
+
     def _handle_refine(self, payload: dict) -> dict:
         handle = self._handle_of(payload)
         self.service.refine(

@@ -26,6 +26,7 @@ import dataclasses
 from typing import Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.api.backends import AUTO, Sampler, get_backend, select_backend
@@ -105,6 +106,25 @@ class TopReviewsResponse:
     handle_id: int
     topic_id: int
     review_ids: list[int]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpotCheckResponse:
+    """Outcome of the server-side check of a device-computed state.
+
+    `state_perplexity` is the server's own recomputation on the submitted
+    state (never trusted from the claim); `post_perplexity` is the
+    perplexity after `num_sweeps` of server-side re-Gibbs on a throwaway
+    copy — the Eq. (6) verification step made real. `deviation` is the
+    relative gap between the claimed and recomputed perplexity, when a
+    claim was supplied.
+    """
+
+    valid: bool
+    reason: str
+    state_perplexity: Optional[float] = None
+    post_perplexity: Optional[float] = None
+    deviation: Optional[float] = None
 
 
 def _infer_base_vocab(reviews: Sequence[Review]) -> int:
@@ -553,6 +573,123 @@ class VedaliaService:
         p = phi[words] @ theta_bar  # (N,)
         ll = float(np.sum(wts * np.log(np.maximum(p, 1e-30))))
         return float(np.exp(-ll / max(wts.sum(), 1e-9)))
+
+    # -- offload tier (§2.5.5 server-side checks) ---------------------------
+
+    def validate_state(
+        self, handle: ModelHandle, state: LDAState, *, count_tol: float = 2.0
+    ) -> tuple[bool, str]:
+        """Structural validation of an externally-computed state against the
+        handle's corpus — the Chital validation stage for *state-carrying*
+        submissions.
+
+        Checks: array shapes, z assignments in `[0, K)`, finite counts, and
+        count consistency with a scatter-rebuild from `(corpus, z)` — the
+        stored state of every legitimate sampler IS `rebuild_state(cfg,
+        corpus, z)`, so counts that disagree with their own assignments
+        (beyond `count_tol` stored units of rounding slack) mean the
+        submission was corrupted or fabricated.
+        """
+        cfg, corpus = handle.cfg, handle.model.corpus
+        z = np.asarray(state.z)
+        if z.shape != (corpus.num_tokens,):
+            return False, (f"z has shape {z.shape}; corpus needs "
+                           f"{(corpus.num_tokens,)}")
+        if not np.issubdtype(z.dtype, np.integer):
+            return False, f"z must be integer topic ids, got {z.dtype}"
+        if z.size and (z.min() < 0 or z.max() >= cfg.num_topics):
+            return False, (f"z assignments outside [0, {cfg.num_topics})")
+        expect = {
+            "n_dt": (cfg.num_docs, cfg.num_topics),
+            "n_wt": (cfg.vocab_size, cfg.num_topics),
+            "n_t": (cfg.num_topics,),
+        }
+        for name, shape in expect.items():
+            arr = np.asarray(getattr(state, name))
+            if arr.shape != shape:
+                return False, (f"{name} has shape {arr.shape}; corpus needs "
+                               f"{shape}")
+            if not np.all(np.isfinite(arr)):
+                return False, f"{name} contains non-finite entries"
+        rebuilt = codec.rebuild_state(cfg, corpus, jnp.asarray(z))
+        for name in expect:
+            got = np.asarray(getattr(state, name), np.float64)
+            want = np.asarray(getattr(rebuilt, name), np.float64)
+            dev = float(np.max(np.abs(got - want))) if got.size else 0.0
+            if dev > count_tol:
+                return False, (f"{name} inconsistent with its own "
+                               f"assignments (max deviation {dev:.1f} "
+                               f"stored units)")
+        return True, "ok"
+
+    def spot_check(
+        self,
+        handle: ModelHandle,
+        state: LDAState,
+        *,
+        claimed_perplexity: Optional[float] = None,
+        num_sweeps: int = 0,
+        claim_tol: float = 0.01,
+        backend: Optional[str] = None,
+        seed: Optional[int] = None,
+    ) -> SpotCheckResponse:
+        """Server-side check of a device-computed state, without touching
+        the served handle.
+
+        Always: structural validation plus the server's own perplexity
+        recomputation on the submitted state (compared against
+        `claimed_perplexity` when given — a fabricated claim fails here
+        deterministically). With `num_sweeps > 0`: additionally runs that
+        many re-Gibbs sweeps on a throwaway copy and reports the
+        post-check perplexity — the real `reverify` behind Eq. (6), an
+        unconverged submission reveals itself by a large drop.
+        """
+        ok, reason = self.validate_state(handle, state)
+        if not ok:
+            return SpotCheckResponse(valid=False, reason=reason)
+        cfg, corpus = handle.cfg, handle.model.corpus
+        state_ppx = float(perplexity_lib.perplexity(cfg, state, corpus))
+        deviation = None
+        if claimed_perplexity is not None:
+            claimed = float(claimed_perplexity)
+            deviation = abs(state_ppx - claimed) / max(abs(claimed), 1e-9)
+            if deviation > claim_tol:
+                return SpotCheckResponse(
+                    valid=False,
+                    reason=(f"claimed perplexity {claimed:.3f} deviates "
+                            f"{deviation:.1%} from recomputed "
+                            f"{state_ppx:.3f}"),
+                    state_perplexity=state_ppx, deviation=deviation)
+        post_ppx = None
+        if num_sweeps > 0:
+            backend = self._resolve(
+                backend, num_tokens=corpus.num_tokens, task="update")
+            post = self.sampler(backend).run(
+                cfg, corpus, self._key(seed), num_sweeps, state=state)
+            post_ppx = float(perplexity_lib.perplexity(cfg, post, corpus))
+        return SpotCheckResponse(
+            valid=True, reason="ok", state_perplexity=state_ppx,
+            post_perplexity=post_ppx, deviation=deviation)
+
+    def adopt_state(
+        self, handle: ModelHandle, state: LDAState, *, sweeps_run: int = 0
+    ) -> ModelHandle:
+        """Swap a device-computed state into an *existing* served handle —
+        the offload tier's adoption step (unlike `adopt`, which wraps a
+        state into a new handle). Validation always runs here: adoption is
+        the trust boundary, independent of the probabilistic Eq. (6) gate.
+        """
+        ok, reason = self.validate_state(handle, state)
+        if not ok:
+            raise ValueError(f"refusing to adopt state: {reason}")
+        handle.model.state = LDAState(
+            z=jnp.asarray(np.asarray(state.z)),
+            n_dt=jnp.asarray(np.asarray(state.n_dt)),
+            n_wt=jnp.asarray(np.asarray(state.n_wt)),
+            n_t=jnp.asarray(np.asarray(state.n_t)),
+        )
+        handle.sweeps_run += int(sweeps_run)
+        return handle
 
     def release(self, handle) -> None:
         """Drop a served handle (by handle or id); frees model state."""

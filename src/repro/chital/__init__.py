@@ -9,4 +9,10 @@ Five components, each mapped 1:1 to a module:
   simulator.py     event-driven network simulation of the whole system
   runtime.py       client-backed SellerRuntime: sellers fit server-prepared
                    corpora through the versioned Vedalia protocol
+
+`repro.offload` closes the loop with the serving stack: the stream
+scheduler's full re-fits are leased through this marketplace to a
+simulated device fleet, with `Marketplace.reverify` wired to a real
+server-side re-Gibbs spot-check and the verified winner adopted into the
+serving handle.
 """

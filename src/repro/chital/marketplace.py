@@ -35,11 +35,18 @@ SellerRuntime = Callable[[Seller, BuyerRequest], Submission]
 @dataclasses.dataclass
 class TaskRecord:
     buyer: BuyerRequest
-    match: Match
-    result: EvaluationResult
+    # Both None for an unmatched query: the buyer fell back to computing
+    # locally. The fallback is recorded (not dropped) so marketplace-level
+    # metrics average over *all* queries, not just the matched ones.
+    match: Optional[Match]
+    result: Optional[EvaluationResult]
     response_time: float  # buyer-observed latency
     local_time: float  # counterfactual: computing alone
     tickets_awarded: int
+
+    @property
+    def matched(self) -> bool:
+        return self.match is not None
 
 
 @dataclasses.dataclass
@@ -60,6 +67,11 @@ class Marketplace:
     # 1.0 a cheater at credit 0 has *positive* drift (1 - 2·p_v > 0 for
     # p_v < 1/2) and the feedback loop runs the wrong way.
     rejection_penalty: float = 2.0
+    # Optional server-side re-Gibbs hook: `reverify(sub) -> float` runs a
+    # few extra sweeps on the submitted model and returns the post-check
+    # perplexity (`repro.offload` wires a real `spot_check` here). None
+    # keeps the simulator's analytic `converged_perplexity` behavior.
+    reverify: Optional[Callable[[Submission], float]] = None
     seed: int = 0
     history: list[TaskRecord] = dataclasses.field(default_factory=list)
 
@@ -73,11 +85,23 @@ class Marketplace:
         self.sellers.append(seller)
         self.ledger.register(seller.seller_id)
 
-    def submit(self, buyer: BuyerRequest, now: float = 0.0) -> Optional[TaskRecord]:
-        """Run one buyer query through the full marketplace pipeline."""
+    def submit(self, buyer: BuyerRequest, now: float = 0.0) -> TaskRecord:
+        """Run one buyer query through the full marketplace pipeline.
+
+        An unmatched query (not enough available sellers) is recorded as an
+        explicit local-fit fallback entry — `match`/`result` are None and the
+        response time equals the local time — so `mean_time_saved` and
+        `matched_rate` average over every query instead of silently
+        conditioning on the matched ones.
+        """
         match = self.matcher.match(buyer, self.sellers, now, self.rng)
         if match is None:
-            return None  # not enough available sellers; caller retries later
+            local = buyer.task_tokens / max(buyer.local_speed, 1e-9)
+            rec = TaskRecord(
+                buyer=buyer, match=None, result=None,
+                response_time=local, local_time=local, tickets_awarded=0)
+            self.history.append(rec)
+            return rec
 
         s1, s2 = match.sellers
         sub1 = self.runtime(s1, buyer)
@@ -94,6 +118,7 @@ class Marketplace:
             self.ledger.get(s2.seller_id),
             self.rng,
             deviation_tol=self.deviation_tol,
+            reverify=self.reverify,
         )
 
         tickets = 0
@@ -129,12 +154,25 @@ class Marketplace:
         return rec
 
     # -- metrics ---------------------------------------------------------------
-    def verification_rate(self) -> float:
+    def matched_rate(self) -> float:
+        """Fraction of submitted queries the matcher found a seller pair
+        for; the rest fell back to local computation."""
         if not self.history:
             return 0.0
-        return float(np.mean([r.result.verified for r in self.history]))
+        return float(np.mean([r.matched for r in self.history]))
+
+    def verification_rate(self) -> float:
+        """Fraction of *evaluated* (matched) queries where Eq.(6) fired —
+        unmatched fallbacks never reach the verification stage, so they are
+        excluded by construction rather than silently counted as 0."""
+        evaluated = [r.result.verified for r in self.history if r.result is not None]
+        if not evaluated:
+            return 0.0
+        return float(np.mean(evaluated))
 
     def mean_time_saved(self) -> float:
+        """Mean (local − observed) latency over ALL queries; a local-fit
+        fallback contributes exactly 0 saved."""
         if not self.history:
             return 0.0
         return float(np.mean([r.local_time - r.response_time for r in self.history]))

@@ -28,6 +28,23 @@ def verification_probability(c1: float, c2: float, p1: float, p2: float) -> floa
     return 1.0 - (sig + 2.0 * ratio) / 3.0
 
 
+def sole_submission_verification_probability(c1: float, c2: float) -> float:
+    """Eq. (6) degenerate case: only one submission survived validation.
+
+    With no second model to match perplexities against, the ratio term is
+    dropped at its *worst* case (0), not its best (1):
+
+        p_v = 1 - (1/3) · 1/(1+e^-(c₁+c₂))  ∈  (2/3, 1)
+
+    so a lone unvetted model faces near-certain verification — the cross-
+    check that normally substitutes for verification simply never happened.
+    (Using `verification_probability(c1, c2, p, p)` here would set the
+    ratio to 1 and make the sole submission *least* likely to be verified.)
+    """
+    sig = 1.0 / (1.0 + math.exp(-(c1 + c2)))
+    return 1.0 - sig / 3.0
+
+
 @dataclasses.dataclass
 class Submission:
     seller_id: int
@@ -75,7 +92,7 @@ def evaluate(
         winner = sub1 if s1_ok else sub2
         loser = sub2 if s1_ok else sub1
         # Sole valid model still faces verification with certainty-ish prior:
-        pv = verification_probability(credit1, credit2, winner.perplexity, winner.perplexity)
+        pv = sole_submission_verification_probability(credit1, credit2)
         return _verify(winner, loser, pv, rng, deviation_tol, reverify)
 
     # -- selection: lower perplexity wins ------------------------------------

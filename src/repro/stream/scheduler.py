@@ -56,6 +56,17 @@ from repro.stream.sources import ReviewEvent
 
 REFIT_POLICIES = ("drift", "always", "never")
 
+#: A pluggable full-refit executor, called once per shard per scheduling
+#: window: ``(shard_id, client, statuses, num_sweeps, now) -> launches``.
+#: It must bring every status's served handle to a freshly-refit state by
+#: whatever means it owns (the offload tier leases the work to a device
+#: fleet and falls back to server-side `refine` on timeout) and return the
+#: number of wire launches it made. The scheduler still re-anchors and
+#: re-baselines each product afterwards, so the drift guard is executor-
+#: agnostic.
+RefitExecutor = Callable[
+    [int, VedaliaClient, "list[ProductStatus]", int, float], int]
+
 # Staleness percentiles are reported over a sliding window of the most
 # recent samples: a scheduler that lives for days at production rates
 # must not grow one float per event forever.
@@ -88,6 +99,11 @@ class SchedulerStats:
     refits: int = 0
     refit_launches: int = 0  # wire calls actually made (<= refits)
     coalesced_refits: int = 0  # refits that shared a batched launch
+    # Token-weighted Gibbs sweep work the *server* ran for re-fits
+    # (sweeps x corpus tokens, summed). The built-in refit path accrues it
+    # here; a pluggable `refit_executor` accounts its own server-side work
+    # (spot-checks, fallbacks) instead — the offload bench compares the two.
+    refit_sweep_work: float = 0.0
     drift_triggers: int = 0
     ppx_triggers: int = 0
     forced_by_staleness: int = 0
@@ -123,6 +139,7 @@ class IncrementalScheduler:
         refit_sweeps: int = 10,
         refit_policy: str = "drift",
         fit_kwargs: Optional[dict] = None,
+        refit_executor: Optional[RefitExecutor] = None,
     ):
         if refit_policy not in REFIT_POLICIES:
             raise ValueError(
@@ -148,6 +165,7 @@ class IncrementalScheduler:
         self.max_heldout = max_heldout
         self.refit_sweeps = refit_sweeps
         self.refit_policy = refit_policy
+        self.refit_executor = refit_executor
         self.fit_kwargs = dict(fit_kwargs or {})
         self.products: dict[int, ProductStatus] = {}
         self.stats = SchedulerStats()
@@ -232,7 +250,7 @@ class IncrementalScheduler:
                     self._apply(status, now)
         # End of the scheduling window: every re-fit triggered above goes
         # out now, one batched launch per shard.
-        self._flush_refits()
+        self._flush_refits(now)
 
     def flush(self, now: float) -> None:
         """End of stream: drain everything and apply all residual batches."""
@@ -242,7 +260,7 @@ class IncrementalScheduler:
                 self._fit(status, now)
             elif status.handle_id is not None and status.unapplied_ts:
                 self._apply(status, now)
-        self._flush_refits()
+        self._flush_refits(now)
 
     # -- internals -----------------------------------------------------------
 
@@ -360,10 +378,13 @@ class IncrementalScheduler:
         if not any(s is status for s in self._refit_queue):
             self._refit_queue.append(status)
 
-    def _flush_refits(self) -> None:
-        """Launch every queued re-fit: one `refine_batch` per shard where
-        the server advertises the `batched` backend, the sequential
-        per-product path otherwise."""
+    def _flush_refits(self, now: float) -> None:
+        """Launch every queued re-fit, grouped per shard. With a pluggable
+        `refit_executor` the whole group is delegated to it (the offload
+        tier); the built-in path is one `refine_batch` per shard where the
+        server advertises the `batched` backend, the sequential
+        per-product path otherwise. Either way the scheduler re-anchors
+        and re-baselines each product afterwards."""
         if not self._refit_queue:
             return
         queue, self._refit_queue = self._refit_queue, []
@@ -375,36 +396,42 @@ class IncrementalScheduler:
                 continue
             by_shard.setdefault(status.shard_id, []).append(status)
         for sid, statuses in by_shard.items():
-            client = self.clients[sid]
-            if len(statuses) == 1 or "batched" not in self._backends[sid]:
-                for status in statuses:
-                    self._refit_one(status)
-                continue
+            launches = self._execute_refits(sid, statuses, now)
+            self.stats.refits += len(statuses)
+            self.stats.refit_launches += launches
+            self.stats.coalesced_refits += max(0, len(statuses) - launches)
+            for status in statuses:
+                status.baseline_ppx = self._guard_ppx(status)
+                self._anchor(status)
+
+    def _execute_refits(
+        self, sid: int, statuses: "list[ProductStatus]", now: float
+    ) -> int:
+        """Run one shard's due re-fits; returns the wire launches made."""
+        client = self.clients[sid]
+        if self.refit_executor is not None:
+            return self.refit_executor(
+                sid, client, list(statuses), self.refit_sweeps, now)
+        if len(statuses) > 1 and "batched" in self._backends[sid]:
             # The window's coalesced launch: `auto` resolves the
             # multi-model route server-side (-> the batched sampler), and
             # `serving.batch_engine` buckets whatever is stack-compatible.
             client.refine_batch(
                 [status.handle_id for status in statuses],
                 self.refit_sweeps, backend="auto")
-            self.stats.refits += len(statuses)
-            self.stats.refit_launches += 1
-            self.stats.coalesced_refits += len(statuses) - 1
-            for status in statuses:
-                status.baseline_ppx = self._guard_ppx(status)
-                self._anchor(status)
-
-    def _refit_one(self, status: ProductStatus) -> None:
-        """Full re-fit via `refine`, on a fit-grade backend chosen by the
-        capability-aware registry for this corpus size."""
-        client = self.clients[status.shard_id]
-        backend = select_backend(
-            num_tokens=status.tokens_ingested, task="fit",
-            available=self._backends[status.shard_id])
-        client.refine(status.handle_id, self.refit_sweeps, backend=backend)
-        self.stats.refits += 1
-        self.stats.refit_launches += 1
-        status.baseline_ppx = self._guard_ppx(status)
-        self._anchor(status)
+            self.stats.refit_sweep_work += float(sum(
+                self.refit_sweeps * s.tokens_ingested for s in statuses))
+            return 1
+        for status in statuses:
+            # Full re-fit via `refine`, on a fit-grade backend chosen by
+            # the capability-aware registry for this corpus size.
+            backend = select_backend(
+                num_tokens=status.tokens_ingested, task="fit",
+                available=self._backends[sid])
+            client.refine(status.handle_id, self.refit_sweeps, backend=backend)
+            self.stats.refit_sweep_work += float(
+                self.refit_sweeps * status.tokens_ingested)
+        return len(statuses)
 
     def _anchor(self, status: ProductStatus) -> None:
         """Store the post-(re)fit topic signatures as the drift anchor."""

@@ -252,12 +252,14 @@ def test_perf_gate_update_refuses_partial_summary(tmp_path):
                 "kernel": {"tokens_per_s": 100}}},
             "batch": {"models_per_s": {"batched": 10}, "speedup": 5},
             "alias": {"tokens_per_s": {"alias": 1000}},
+            "offload": {"offloaded_sweep_fraction": 0.7,
+                        "no_phony_adopted": 1.0},
         }}))
     assert perf_gate.main(["--summary", str(summary),
                            "--baseline", str(baseline), "--update"]) == 0
     assert perf_gate.main(["--summary", str(summary),
                            "--baseline", str(baseline),
-                           "--require", "sampler,batch,alias"]) == 0
+                           "--require", "sampler,batch,alias,offload"]) == 0
     summary.write_text(json.dumps({
         "benches": {
             "sampler": {"samplers": {
@@ -265,6 +267,8 @@ def test_perf_gate_update_refuses_partial_summary(tmp_path):
                 "kernel": {"tokens_per_s": 100}}},
             "batch": {"models_per_s": {"batched": 10}, "speedup": 5},
             "alias": {"tokens_per_s": {"alias": 1000}},
+            "offload": {"offloaded_sweep_fraction": 0.7,
+                        "no_phony_adopted": 1.0},
         }}))
     assert perf_gate.main(["--summary", str(summary),
                            "--baseline", str(baseline)]) == 1

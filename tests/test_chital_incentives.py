@@ -1,0 +1,191 @@
+"""Chital incentive primitives: ledger conservation, lottery, Eq. (6)
+degenerate (sole-submission) case, and marketplace fallback accounting."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.chital.credit import CreditLedger
+from repro.chital.lottery import Lottery, tickets_for
+from repro.chital.marketplace import Marketplace
+from repro.chital.matching import MATCHERS, BuyerRequest, Seller
+from repro.chital.verification import (
+    Submission,
+    evaluate,
+    sole_submission_verification_probability,
+    verification_probability,
+)
+
+# -- credit ledger conservation ----------------------------------------------
+
+
+@given(ops=st.lists(st.integers(0, 9999), min_size=0, max_size=60))
+@settings(max_examples=100, deadline=None)
+def test_ledger_conserves_under_arbitrary_transfers(ops):
+    """Σ credits == 0 after any transfer sequence, including transfers
+    involving sellers that were never registered."""
+    ledger = CreditLedger()
+    for i in range(3):
+        ledger.register(i)
+    for op in ops:
+        # Decode each drawn int into (from, to, amount): ids in [0, 9],
+        # so most are unregistered; amounts in {0.5, 1.0, 2.0}.
+        frm, to = op % 10, (op // 10) % 10
+        amount = [0.5, 1.0, 2.0][(op // 100) % 3]
+        ledger.transfer(frm, to, amount)
+    assert abs(ledger.total()) < 1e-9
+    # Every seller a transfer touched is now registered.
+    for op in ops:
+        assert op % 10 in ledger.credits
+        assert (op // 10) % 10 in ledger.credits
+
+
+def test_settle_pair_unregistered_and_self():
+    ledger = CreditLedger()
+    ledger.settle_pair(winner_id=7, loser_id=9)  # neither registered
+    assert ledger.get(7) == 1.0 and ledger.get(9) == -1.0
+    assert abs(ledger.total()) < 1e-9
+    before = dict(ledger.credits)
+    ledger.settle_pair(winner_id=7, loser_id=7)  # self-settlement: no-op
+    assert dict(ledger.credits) == before
+
+
+# -- lottery ------------------------------------------------------------------
+
+
+def test_ticket_floor_and_award_accumulates():
+    assert tickets_for(0, 50) == 0  # no tokens -> no tickets
+    assert tickets_for(1000, 0) == 0  # no iterations -> no tickets
+    lottery = Lottery()
+    assert lottery.award(1, 100, 5) == 500
+    assert lottery.award(1, 10, 2) == 20
+    assert lottery.tickets[1] == 520
+
+
+def test_draw_empty_and_zero_tickets():
+    lottery = Lottery()
+    rng = np.random.default_rng(0)
+    assert lottery.draw(rng, pot=100.0) == (None, 0.0)  # nobody played
+    lottery.award(1, 0, 5)  # a "winner" that earned 0 tickets
+    assert lottery.draw(rng, pot=100.0) == (None, 0.0)  # zero total tickets
+
+
+def test_zero_pot_draw_still_selects_and_resets():
+    lottery = Lottery()
+    lottery.award(1, 100, 5)
+    winner, amount = lottery.draw(np.random.default_rng(0), pot=0.0)
+    assert winner == 1 and amount == 0.0
+    assert not lottery.tickets  # the period reset even with an empty pot
+
+
+def test_draw_probability_proportional_to_tickets():
+    wins = {1: 0, 2: 0}
+    rng = np.random.default_rng(3)
+    for _ in range(400):
+        lottery = Lottery()
+        lottery.award(1, 100, 3)  # 300 tickets
+        lottery.award(2, 100, 1)  # 100 tickets
+        winner, _ = lottery.draw(rng, pot=1.0)
+        wins[winner] += 1
+    assert wins[1] + wins[2] == 400
+    assert 0.65 < wins[1] / 400 < 0.85  # expected 0.75
+
+
+# -- Eq. (6): sole-submission degenerate case (satellite regression) ---------
+
+
+@given(c1=st.floats(-10, 10), c2=st.floats(-10, 10))
+@settings(max_examples=200, deadline=None)
+def test_sole_submission_bounds_and_monotonicity(c1, c2):
+    pv = sole_submission_verification_probability(c1, c2)
+    assert 2.0 / 3.0 < pv < 1.0  # strict: sig ∈ (0, 1)
+    # More credit reduces verification, same direction as the pair case.
+    assert sole_submission_verification_probability(c1 + 1, c2) <= pv + 1e-12
+    # A sole unvetted submission must face *more* verification than an
+    # equally-credited pair, whatever the pair's perplexity ratio.
+    assert pv >= verification_probability(c1, c2, 100.0, 100.0)
+    assert pv >= verification_probability(c1, c2, 1.0, 1e6)
+
+
+def test_sole_valid_submission_faces_near_certain_verification():
+    """Regression: the sole-valid path used to call
+    `verification_probability(c1, c2, p, p)` — ratio 1.0, i.e. *minimal*
+    verification for the one submission nothing was cross-checked against."""
+    rng = np.random.default_rng(0)
+    ok = Submission(seller_id=1, perplexity=100.0, tokens_processed=10,
+                    iterations=5, converged_perplexity=100.0)
+    bad = Submission(seller_id=2, perplexity=50.0, tokens_processed=10,
+                     iterations=5, valid=False)
+    res = evaluate(ok, bad, 0.0, 0.0, rng)
+    assert res.winner.seller_id == 1
+    assert res.verification_prob == pytest.approx(
+        sole_submission_verification_probability(0.0, 0.0))
+    assert res.verification_prob > 2.0 / 3.0
+    # The buggy value: 1 - (sig + 2)/3 = 1/6 at zero credit.
+    sig = 1.0 / (1.0 + math.exp(0.0))
+    assert res.verification_prob != pytest.approx(1.0 - (sig + 2.0) / 3.0)
+
+
+def test_sole_valid_phony_submission_gets_caught():
+    """With verification near-certain, a phony sole survivor is rejected
+    on almost every draw (it always was *sampled* — now it actually fires)."""
+    caught = 0
+    for seed in range(50):
+        rng = np.random.default_rng(seed)
+        phony = Submission(seller_id=1, perplexity=10.0, tokens_processed=10,
+                           iterations=5, converged_perplexity=500.0)
+        bad = Submission(seller_id=2, perplexity=50.0, tokens_processed=10,
+                         iterations=5, valid=False)
+        res = evaluate(phony, bad, 0.0, 0.0, rng)
+        if res.rejected:
+            caught += 1
+    # p_v(0,0) = 1 - 0.5/3 ≈ 0.833; binomial(50, 0.833) < 33 is ~3e-4.
+    assert caught >= 33
+
+
+# -- marketplace fallback accounting (satellite regression) ------------------
+
+
+def _runtime(seller, buyer):
+    return Submission(seller_id=seller.seller_id, perplexity=100.0,
+                      tokens_processed=buyer.task_tokens, iterations=5,
+                      converged_perplexity=100.0)
+
+
+def _buyer(i, tokens=1000):
+    return BuyerRequest(buyer_id=100 + i, task_tokens=tokens, arrival=0.0,
+                        local_speed=100.0)
+
+
+def test_unmatched_query_recorded_as_fallback():
+    """Regression: unmatched buyers used to vanish from the history, so
+    matched_rate / mean_time_saved silently conditioned on matched ones."""
+    mp = Marketplace(matcher=MATCHERS["greedy_gain"](), runtime=_runtime,
+                     sellers=[Seller(seller_id=0, speed=500.0)], seed=0)
+    rec = mp.submit(_buyer(0))  # one seller: no pair possible
+    assert rec is not None and not rec.matched
+    assert rec.match is None and rec.result is None
+    assert rec.tickets_awarded == 0
+    assert rec.response_time == pytest.approx(rec.local_time)  # saved 0
+    assert len(mp.history) == 1
+    assert mp.matched_rate() == 0.0
+    assert mp.mean_time_saved() == pytest.approx(0.0)
+    assert mp.verification_rate() == 0.0  # no evaluated queries yet
+
+
+def test_matched_rate_averages_over_all_queries():
+    mp = Marketplace(matcher=MATCHERS["greedy_gain"](), runtime=_runtime,
+                     sellers=[Seller(seller_id=0, speed=500.0),
+                              Seller(seller_id=1, speed=800.0)], seed=0)
+    rec = mp.submit(_buyer(0), now=0.0)
+    assert rec.matched
+    # Both sellers are now busy: the next query falls back.
+    assert not mp.submit(_buyer(1), now=0.0).matched
+    assert mp.matched_rate() == pytest.approx(0.5)
+    # Matched query saved time; the fallback contributed exactly 0.
+    assert mp.mean_time_saved() > 0.0
+    matched_saved = (mp.history[0].local_time - mp.history[0].response_time)
+    assert mp.mean_time_saved() == pytest.approx(matched_saved / 2.0)

@@ -1,0 +1,366 @@
+"""Chital offload tier: state-carrying wire verbs, the simulated device
+fleet, and the coordinator's lease → validate → verify → adopt loop."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import VedaliaClient, VedaliaServer, protocol
+from repro.api.backends import get_backend
+from repro.core import perplexity as perplexity_lib
+from repro.data import reviews as reviews_data
+from repro.offload import (
+    CORRUPT,
+    FABRICATE,
+    FABRICATE_CLAIM_RATIO,
+    HONEST,
+    DeviceFleet,
+    FleetSpec,
+    OffloadCoordinator,
+    OffloadTask,
+)
+from repro.stream import (
+    IncrementalScheduler,
+    StreamRouter,
+    StreamSpec,
+    pump,
+    synthetic_events,
+)
+
+
+def _reviews(n=20, vocab=120, seed=0):
+    return reviews_data.generate(reviews_data.SyntheticSpec(
+        num_reviews=n, vocab_size=vocab, num_topics=4, mean_tokens=25,
+        seed=seed)).reviews
+
+
+def _client(**kw):
+    return VedaliaClient(backend="jnp", num_sweeps=4, update_sweeps=1, **kw)
+
+
+def _fit(client, n=20, seed=0):
+    return client.fit(_reviews(n=n, seed=seed), num_topics=4,
+                      base_vocab=120)
+
+
+# -- state codec --------------------------------------------------------------
+
+
+def test_state_arrays_roundtrip_and_missing_field():
+    client = _client()
+    fit = _fit(client)
+    exported = client.export_model(fit.handle_id)
+    enc = protocol.encode_state_arrays(exported.state)
+    assert set(enc) == set(protocol.STATE_FIELDS)
+    dec = protocol.decode_state_arrays(enc)
+    for name in protocol.STATE_FIELDS:
+        np.testing.assert_array_equal(
+            dec[name], np.asarray(getattr(exported.state, name)))
+    enc.pop("n_wt")
+    with pytest.raises(protocol.ProtocolError, match="missing field"):
+        protocol.decode_state_arrays(enc)
+    with pytest.raises(protocol.ProtocolError, match="JSON object"):
+        protocol.decode_state_arrays([1, 2, 3])
+
+
+# -- export / spot_check / adopt_state ---------------------------------------
+
+
+def test_export_model_roundtrip():
+    client = _client()
+    fit = _fit(client)
+    exported = client.export_model(fit.handle_id)
+    assert exported.handle_id == fit.handle_id
+    assert exported.cfg.num_topics == 4
+    assert exported.num_tokens == exported.corpus.num_tokens
+    assert exported.state.z.shape == (exported.corpus.num_tokens,)
+    # The exported state really is the served state: same perplexity.
+    ppx = float(perplexity_lib.perplexity(
+        exported.cfg, exported.state, exported.corpus))
+    assert ppx == pytest.approx(client.perplexity(fit.handle_id), rel=1e-6)
+
+
+def test_spot_check_accepts_honest_continuation():
+    client = _client()
+    fit = _fit(client)
+    exported = client.export_model(fit.handle_id)
+    # A real device-side continuation of the chain.
+    import jax
+    state = get_backend("jnp").run(
+        exported.cfg, exported.corpus, jax.random.PRNGKey(7), 3,
+        state=exported.state)
+    claimed = float(perplexity_lib.perplexity(
+        exported.cfg, state, exported.corpus))
+    check = client.spot_check(fit.handle_id, state,
+                              claimed_perplexity=claimed)
+    assert check.valid, check.reason
+    assert check.state_perplexity == pytest.approx(claimed, rel=1e-6)
+    assert check.post_perplexity is None  # no re-Gibbs requested
+
+
+def test_spot_check_catches_fabricated_claim():
+    client = _client()
+    fit = _fit(client)
+    exported = client.export_model(fit.handle_id)
+    true_ppx = float(perplexity_lib.perplexity(
+        exported.cfg, exported.state, exported.corpus))
+    check = client.spot_check(fit.handle_id, exported.state,
+                              claimed_perplexity=0.55 * true_ppx)
+    assert not check.valid
+    assert "claim" in check.reason
+
+
+def test_spot_check_catches_corrupted_state():
+    client = _client()
+    fit = _fit(client)
+    exported = client.export_model(fit.handle_id)
+    perm = np.random.default_rng(0).permutation(
+        int(exported.state.n_wt.shape[0]))
+    tampered = dataclasses.replace(
+        exported.state, n_wt=np.asarray(exported.state.n_wt)[perm])
+    check = client.spot_check(fit.handle_id, tampered)
+    assert not check.valid  # counts disagree with the assignments
+
+
+def test_spot_check_regibbs_leaves_handle_untouched():
+    client = _client()
+    fit = _fit(client)
+    exported = client.export_model(fit.handle_id)
+    before = client.perplexity(fit.handle_id)
+    check = client.spot_check(fit.handle_id, exported.state, num_sweeps=2,
+                              seed=3)
+    assert check.valid
+    assert check.post_perplexity is not None
+    assert np.isfinite(check.post_perplexity)
+    # The re-Gibbs ran on a throwaway copy: the served model is unchanged.
+    assert client.perplexity(fit.handle_id) == pytest.approx(before)
+
+
+def test_adopt_state_swaps_serving_state_and_validates():
+    client = _client()
+    fit = _fit(client)
+    exported = client.export_model(fit.handle_id)
+    import jax
+    state = get_backend("jnp").run(
+        exported.cfg, exported.corpus, jax.random.PRNGKey(11), 3,
+        state=exported.state)
+    device_ppx = float(perplexity_lib.perplexity(
+        exported.cfg, state, exported.corpus))
+    res = client.adopt_state(fit.handle_id, state, sweeps_run=3)
+    assert res.handle_id == fit.handle_id
+    assert client.perplexity(fit.handle_id) == pytest.approx(
+        device_ppx, rel=1e-6)
+    # The handle keeps serving views after adoption.
+    assert client.sync_view(fit.handle_id).valid
+
+    # A tampered state is refused at the trust boundary.
+    perm = np.random.default_rng(0).permutation(int(state.n_wt.shape[0]))
+    tampered = dataclasses.replace(state, n_wt=np.asarray(state.n_wt)[perm])
+    with pytest.raises(protocol.RemoteError, match="refusing to adopt"):
+        client.adopt_state(fit.handle_id, tampered)
+    assert client.perplexity(fit.handle_id) == pytest.approx(
+        device_ppx, rel=1e-6)  # refusal left the model alone
+
+
+# -- fleet --------------------------------------------------------------------
+
+
+def test_fleet_population_is_deterministic():
+    spec = FleetSpec(num_devices=20, malicious_frac=0.2, fabricate_frac=0.5,
+                     straggler_frac=0.1, seed=3)
+    a, b = DeviceFleet(spec), DeviceFleet(spec)
+    assert {i: d.behavior for i, d in a.devices.items()} \
+        == {i: d.behavior for i, d in b.devices.items()}
+    assert [d.speed for d in a.devices.values()] \
+        == [d.speed for d in b.devices.values()]
+    behaviors = [d.behavior for d in a.devices.values()]
+    assert behaviors.count(FABRICATE) == 2
+    assert behaviors.count(CORRUPT) == 2
+    assert behaviors.count(HONEST) == 16
+    assert sum(d.straggler_factor > 1.0 for d in a.devices.values()) == 2
+    sellers = a.sellers()
+    assert len(sellers) == 20
+    assert all(s.honest == a.devices[s.seller_id].honest for s in sellers)
+
+
+def _task(fit, tokens, num_sweeps=2, task_id=0):
+    return OffloadTask(task_id=task_id, shard_id=0, handle_id=fit.handle_id,
+                       product_id=0, tokens=tokens, num_sweeps=num_sweeps)
+
+
+def test_honest_device_runs_a_real_fit():
+    client = _client()
+    fit = _fit(client)
+    fleet = DeviceFleet(FleetSpec(num_devices=4, malicious_frac=0.0,
+                                  churn_prob=0.0, straggler_frac=0.0,
+                                  backend="jnp", seed=0))
+    exported = client.export_model(fit.handle_id)
+    task = _task(fit, tokens=exported.num_tokens)
+    run = fleet.execute(0, task, client.transport)
+    assert run.completed and not run.churned and not run.timed_out
+    sub = run.submission
+    assert sub.valid and sub.payload is not None
+    assert sub.iterations == task.num_sweeps
+    # The claimed perplexity is the *real* perplexity of the uploaded
+    # state — the server's recompute agrees exactly.
+    check = client.spot_check(fit.handle_id, sub.payload,
+                              claimed_perplexity=sub.perplexity)
+    assert check.valid, check.reason
+    # And the chain actually moved: the assignments changed.
+    assert not np.array_equal(np.asarray(sub.payload.z),
+                              np.asarray(exported.state.z))
+    # Replayable: same (seed, device, task) -> identical submission.
+    rerun = fleet.execute(0, task, client.transport)
+    assert rerun.submission.perplexity == sub.perplexity
+    np.testing.assert_array_equal(np.asarray(rerun.submission.payload.z),
+                                  np.asarray(sub.payload.z))
+
+
+def test_malicious_devices_are_caught_by_spot_check():
+    client = _client()
+    fit = _fit(client)
+    spec = FleetSpec(num_devices=2, malicious_frac=1.0, fabricate_frac=0.5,
+                     churn_prob=0.0, straggler_frac=0.0, backend="jnp",
+                     seed=0)
+    fleet = DeviceFleet(spec)
+    by_behavior = {d.behavior: d.device_id for d in fleet.devices.values()}
+    assert set(by_behavior) == {FABRICATE, CORRUPT}
+    exported = client.export_model(fit.handle_id)
+
+    fab = fleet.execute(by_behavior[FABRICATE],
+                        _task(fit, exported.num_tokens), client.transport)
+    true_ppx = float(perplexity_lib.perplexity(
+        exported.cfg, exported.state, exported.corpus))
+    assert fab.submission.perplexity == pytest.approx(
+        FABRICATE_CLAIM_RATIO * true_ppx)
+    check = client.spot_check(fit.handle_id, fab.submission.payload,
+                              claimed_perplexity=fab.submission.perplexity)
+    assert not check.valid  # implausibly good claim vs the recompute
+
+    cor = fleet.execute(by_behavior[CORRUPT],
+                        _task(fit, exported.num_tokens), client.transport)
+    check = client.spot_check(fit.handle_id, cor.submission.payload,
+                              claimed_perplexity=cor.submission.perplexity)
+    assert not check.valid  # tampered counts fail the rebuild check
+
+
+def test_churn_and_straggler_deadline():
+    client = _client()
+    fit = _fit(client)
+    fleet = DeviceFleet(FleetSpec(num_devices=1, malicious_frac=0.0,
+                                  churn_prob=1.0, backend="jnp", seed=0))
+    run = fleet.execute(0, _task(fit, 100), client.transport)
+    assert run.churned and not run.completed
+    assert not run.submission.valid and run.submission.payload is None
+
+    slow = DeviceFleet(FleetSpec(num_devices=1, malicious_frac=0.0,
+                                 churn_prob=0.0, straggler_frac=1.0,
+                                 straggler_factor=8.0, backend="jnp",
+                                 seed=0))
+    # Deadline sized for the advertised speed: the straggler (8x slower
+    # than advertised) misses it and the lease expires without an upload.
+    task = _task(fit, 100)
+    deadline = 2.0 * (task.tokens * task.num_sweeps) / slow.min_speed
+    run = slow.execute(0, task, client.transport, deadline=deadline)
+    assert run.timed_out and not run.completed
+    # No deadline -> the slow device eventually finishes a real fit.
+    run = slow.execute(0, task, client.transport)
+    assert run.completed and run.submission.valid
+
+
+# -- coordinator --------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def offload_run():
+    """One short adversarial stream driven through the offload tier."""
+    spec = StreamSpec(num_products=3, duration=30.0, rate=2.0,
+                      shape="burst", shift_at=15.0, seed=0)
+    events = synthetic_events(spec)
+    router = StreamRouter([0, 1], capacity=64)
+    servers = {s: VedaliaServer(backend="jnp", num_sweeps=4,
+                                update_sweeps=1) for s in (0, 1)}
+    clients = {s: VedaliaClient(server=servers[s]) for s in (0, 1)}
+    fleet = DeviceFleet(FleetSpec(num_devices=12, malicious_frac=0.25,
+                                  churn_prob=0.1, straggler_frac=0.15,
+                                  backend="jnp", seed=0))
+    coord = OffloadCoordinator(fleet, seed=0)
+    sched = IncrementalScheduler(
+        clients, router, microbatch=6, min_fit_reviews=8,
+        staleness_budget=8.0, refit_sweeps=3, refit_policy="always",
+        refit_executor=coord,
+        fit_kwargs=dict(num_topics=4, base_vocab=spec.vocab_size,
+                        num_sweeps=4))
+    pump(events, router, sched, step_interval=2.0)
+    return clients, fleet, coord, sched
+
+
+def test_coordinator_leases_every_refit(offload_run):
+    _, _, coord, sched = offload_run
+    st = coord.stats
+    assert sched.stats.refits > 0
+    assert st.tasks == sched.stats.refits
+    # The executor owns the launches 1:1 and the built-in server refit
+    # path never ran.
+    assert sched.stats.refit_launches == st.tasks
+    assert sched.stats.refit_sweep_work == 0.0
+    # Every task resolved: adopted from a device or explicitly fell back.
+    assert st.adopted + st.fallbacks == st.tasks
+    assert st.adopted > 0  # the fleet actually took work
+    assert st.device_sweep_work > 0
+
+
+def test_coordinator_never_adopts_phony(offload_run):
+    _, fleet, coord, _ = offload_run
+    assert coord.stats.adopted_phony == 0
+    # Validation did real work: the adversarial fleet produced invalid
+    # submissions and they were all caught before selection.
+    assert coord.stats.invalid_submissions > 0
+
+
+def test_coordinator_keeps_views_serving(offload_run):
+    clients, _, coord, sched = offload_run
+    for status in sched.products.values():
+        client = clients[status.shard_id]
+        assert client.sync_view(status.handle_id).valid
+        ppx = client.perplexity(status.handle_id)
+        assert np.isfinite(ppx) and ppx > 0
+
+
+def test_coordinator_credit_separates_honest_from_malicious(offload_run):
+    _, fleet, coord, _ = offload_run
+    ledger = coord.marketplace.ledger
+    honest = [ledger.get(d.device_id) for d in fleet.devices.values()
+              if d.honest]
+    malicious = [ledger.get(d.device_id) for d in fleet.devices.values()
+                 if not d.honest]
+    assert np.mean(honest) > np.mean(malicious)
+    assert abs(ledger.total()) < 1e-9  # zero-sum survived the whole run
+
+
+def test_coordinator_falls_back_when_fleet_is_empty():
+    """Zero devices: every lease is an unmatched fallback — the server
+    refits itself and serving never stalls."""
+    spec = StreamSpec(num_products=1, duration=15.0, rate=2.0,
+                      shape="burst", shift_at=None, seed=0)
+    events = synthetic_events(spec)
+    router = StreamRouter([0], capacity=64)
+    client = _client()
+    coord = OffloadCoordinator(
+        DeviceFleet(FleetSpec(num_devices=0)), seed=0)
+    sched = IncrementalScheduler(
+        {0: client}, router, microbatch=5, min_fit_reviews=6,
+        staleness_budget=6.0, refit_sweeps=2, refit_policy="always",
+        refit_executor=coord,
+        fit_kwargs=dict(num_topics=4, base_vocab=spec.vocab_size,
+                        num_sweeps=3))
+    pump(events, router, sched, step_interval=2.0)
+    st = coord.stats
+    assert st.tasks > 0
+    assert st.fallback_unmatched == st.tasks and st.adopted == 0
+    # The fallback really refined: full server sweep-work was charged.
+    assert st.server_sweep_work > 0
+    assert coord.marketplace.matched_rate() == 0.0
+    for status in sched.products.values():
+        assert client.sync_view(status.handle_id).valid
