@@ -11,7 +11,8 @@ landing silently.
 Refreshing the baseline (after an intentional perf change, from a clean
 run on main):
 
-    PYTHONPATH=src python -m benchmarks.run --only sampler,batch,alias,offload
+    PYTHONPATH=src python -m benchmarks.run \\
+        --only sampler,batch,alias,offload,distributed
     python -m benchmarks.perf_gate --update
 
 The baseline must be measured on the machine class that gates it: CI
@@ -63,6 +64,15 @@ METRICS = {
     "offload": [
         "offloaded_sweep_fraction",
         "no_phony_adopted",
+    ],
+    # Parameter-server fit tier: work-normalized weak-scaling efficiency
+    # on the simulated mesh and the sparse-sync bytes advantage over the
+    # replicated oracle tier (both ratios, higher is better). The hard
+    # correctness gates (mesh-1 bit-exactness, <=2% held-out gap) are
+    # asserted inside distributed_bench on every run.
+    "distributed": [
+        "weak_scaling_efficiency",
+        "sync_bytes_saving",
     ],
 }
 

@@ -37,6 +37,8 @@ BENCHES = [
      "benchmarks.alias_bench"),
     ("offload", "Chital offload tier: server sweep-work eliminated (§2.5)",
      "benchmarks.offload_bench"),
+    ("distributed", "pserver fit tier: weak scaling + sparse sync bytes",
+     "benchmarks.distributed_bench"),
     ("roofline", "roofline terms from the dry-run (deliverable g)",
      "benchmarks.roofline"),
 ]

@@ -16,7 +16,7 @@ All traffic crosses the wire protocol (versioned JSON envelopes); the
 sampler backend is selectable, including the workload-routing `auto`:
 
   PYTHONPATH=src python examples/serve_reviews.py \
-      [--backend jnp|pallas|distributed|alias|sparse|auto]
+      [--backend jnp|pallas|distributed|pserver|alias|sparse|auto]
 """
 
 import argparse
@@ -35,8 +35,8 @@ from repro.data import reviews
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--backend", default="jnp",
-                    choices=("jnp", "pallas", "distributed", "alias",
-                             "sparse", "batched", "auto"))
+                    choices=("jnp", "pallas", "distributed", "pserver",
+                             "alias", "sparse", "batched", "auto"))
     ap.add_argument("--products", type=int, default=3)
     ap.add_argument("--reviews", type=int, default=200)
     ap.add_argument("--new-reviews", type=int, default=40)

@@ -9,7 +9,13 @@ implementation is chosen by name:
   pallas       fused Pallas TPU kernel (`kernels.lda_gibbs`), interpret
                mode on CPU — the production TPU path
   distributed  client/server sharded sweep (`core.distributed`) — the
-               paper's "model cache and updating server" on a pod
+               paper's "model cache and updating server" on a pod, with
+               the (V, K) model fully replicated per shard (the small-mesh
+               oracle the pserver tier bit-compares against)
+  pserver      parameter-server fit tier (`repro.pserver`): doc-sharded
+               tokens, vocab-sharded word-topic state across the model
+               mesh axis, bounded-staleness support caches synced by
+               sparse delta-row exchange — the pod-scale production path
   alias        AliasLDA (Li et al., 2014a) stale-proposal + parallel-MH
                sweep — proposal-based fast sampler; vectorized oracle in
                `core.alias`, fused proposal+MH Pallas kernel in
@@ -150,7 +156,9 @@ def select_backend(
          for that device class (an explicit "tpu" must not silently
          serialize a coalesced refit);
       2. an explicit `device_kind` picks the backend built for that device
-         class ("phone" -> sparse, "pod" -> distributed, "tpu" -> jnp);
+         class ("phone" -> sparse, "pod" -> pserver, "tpu" -> jnp); the
+         replicated `distributed` backend stays registered as the pod
+         small-mesh oracle but is no longer the routed default;
       3. updates go to the oracle sweep — incremental resampling needs
          exact-conditional warm-start semantics, not MH proposals;
       4. large fits go to the proposal sampler (`alias`), whose per-token
@@ -171,7 +179,7 @@ def select_backend(
             if ("batched" in names and batched is not None
                     and batched.capabilities.device_kind == device_kind):
                 return "batched"
-        preferred = {"phone": "sparse", "pod": "distributed", "tpu": "jnp"}
+        preferred = {"phone": "sparse", "pod": "pserver", "tpu": "jnp"}
         want = preferred.get(device_kind)
         if want in names:
             return want
@@ -256,10 +264,20 @@ class DistributedSampler(_BaseSampler):
     """Client/server sharded sweep (`core.distributed`) on a device mesh.
 
     Counts cross the boundary in stored units and are decoded/encoded here;
-    the sharded sweep itself is real-valued float32. With a single data
-    shard (the CPU default) global doc ids are shard-local ids; on a
-    multi-shard mesh the caller contract of `core.distributed` applies
-    (documents contiguously partitioned, shard-local ids).
+    the sharded sweep itself is real-valued float32.
+
+    Caller contract (mesh): the mesh must use the production axis names of
+    `launch.mesh` — data parallelism on ("pod",) "data", an optional minor
+    "model" axis (unsharded here: the model is replicated). The lazy
+    default places every local device on the data axis of a
+    ("data", "model") mesh. With a single data shard global doc ids are
+    shard-local ids; on a multi-shard mesh the caller contract of
+    `core.distributed` applies (documents contiguously partitioned in
+    blocks of ceil(num_docs / n_shards), shard-local ids, token arrays
+    padded per shard — `core.distributed.shard_corpus` builds that
+    layout). The `pserver` backend does this partitioning itself and is
+    the routed pod default; this backend remains the replicated
+    small-mesh oracle.
     """
 
     # Compiled shard_map programs are cached per LDAConfig; streaming
@@ -275,7 +293,11 @@ class DistributedSampler(_BaseSampler):
 
     def _mesh(self):
         if self.mesh is None:
-            self.mesh = jax.make_mesh((jax.device_count(),), ("data",))
+            # Production axis names (launch.mesh), all devices on data: the
+            # old flat ("data",) default made lazily-built meshes
+            # incompatible with every production PartitionSpec.
+            self.mesh = jax.make_mesh(
+                (jax.device_count(), 1), ("data", "model"))
         return self.mesh
 
     def _sweep_fn(self, cfg: LDAConfig):
@@ -301,6 +323,44 @@ class DistributedSampler(_BaseSampler):
                 real.n_dt, real.n_wt, key)
         return encode_state(
             cfg, LDAState(z=z, n_dt=n_dt, n_wt=n_wt, n_t=n_t))
+
+
+@register_backend("pserver", SamplerCapabilities(device_kind="pod"))
+class PServerSampler(_BaseSampler):
+    """Parameter-server fit tier (`repro.pserver`) — the routed pod path.
+
+    Doc-sharded tokens across every mesh device, vocab-sharded
+    authoritative word-topic state across the "model" axis, and
+    bounded-staleness per-worker support caches synced by sparse delta-row
+    exchange every `staleness` sweeps — see `repro.pserver` for the
+    architecture and `core.distributed` for the replicated oracle it
+    bit-compares against at mesh size 1.
+
+    Unlike `DistributedSampler`, callers hand over a flat corpus with
+    *global* doc ids; the tier plans its own contiguous partition (any
+    corpus fits any mesh). `local` picks the per-worker sweep engine:
+    "gibbs" (the exact-conditional `core.distributed.local_sweep`),
+    "pallas" (the fused `kernels.lda_gibbs` tile kernel), "mh" (AliasLDA
+    stale-proposal MH whose accept step absorbs the cache staleness), or
+    "auto" (pallas on TPU, gibbs elsewhere). The mesh defaults to all
+    local devices on the data axis of a ("data", "model") mesh.
+    """
+
+    def __init__(self, mesh=None, block: int = 4096, staleness: int = 1,
+                 local: str = "auto", cap=None, mh_steps: int = 4,
+                 token_block: int = 256):
+        from repro.pserver.sampler import PServerFit
+
+        self._fit = PServerFit(
+            mesh=mesh, block=block, staleness=staleness, local=local,
+            cap=cap, mh_steps=mh_steps, token_block=token_block)
+        self.staleness = staleness
+
+    def sweep(self, cfg, state, corpus, key):
+        return self._fit.sweep(cfg, state, corpus, key)
+
+    def run(self, cfg, corpus, key, num_sweeps, state=None):
+        return self._fit.run(cfg, corpus, key, num_sweeps, state=state)
 
 
 @register_backend(

@@ -18,22 +18,35 @@ n_dt): there the partitioner cannot prove doc-locality and all-gathers the
 entire token corpus to every device each sweep — the dominant collective
 in the baseline dry-run. Here doc-locality is structural.
 
+This module keeps the *fully-replicated* model: every shard holds the whole
+(V, K) table and each server sync all-reduces it whole, so it is the
+small-mesh oracle. The production scale-out path — vocab-sharded state and
+sparse delta-row exchange — lives in `repro.pserver`, which reuses
+`local_sweep`, `make_shard_map`, and `partition_by_doc` from here.
+
 Caller contract: documents are partitioned contiguously across the data
-shards; `docs` holds SHARD-LOCAL doc ids in [0, num_docs/n_shards).
+shards in blocks of `sweep.d_local` (= ceil(num_docs / n_shards)); `docs`
+holds SHARD-LOCAL doc ids in [0, d_local). Any corpus fits any mesh: the
+last shard's tail is padding (zero-weight tokens, empty n_dt rows) and
+`shard_corpus` builds the padded layout host-side from a flat corpus.
 """
 
 from __future__ import annotations
-
 
 import inspect
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
 
 try:  # jax >= 0.5 exposes shard_map at top level
     from jax import shard_map as _shard_map
 except ImportError:  # 0.4.x: experimental API
     from jax.experimental.shard_map import shard_map as _shard_map
+
+from repro.core.gibbs import resample_block
+from repro.core.types import LDAConfig
 
 # The replication-check kwarg was renamed check_rep -> check_vma; detect by
 # signature rather than import location (intermediate versions mix the two).
@@ -42,19 +55,25 @@ _CHECK_KW = ("check_vma"
              else "check_rep")
 
 
-def _make_shard_map(fn, mesh, in_specs, out_specs):
+def make_shard_map(fn, mesh, in_specs, out_specs):
+    """Version-portable `shard_map` (replication checks off: every program
+    here produces replicated outputs by explicit psum)."""
     return _shard_map(fn, mesh=mesh, in_specs=in_specs,
                       out_specs=out_specs, **{_CHECK_KW: False})
 
 
-from jax.sharding import PartitionSpec as P
-
-from repro.core.gibbs import resample_block
-from repro.core.types import LDAConfig
+# Backwards-compatible alias (pre-pserver internal name).
+_make_shard_map = make_shard_map
 
 
-def _local_sweep(cfg, docs, words, z, wts, n_dt, n_wt, n_t, key, block):
-    """One full resampling pass over this shard's tokens (pure local)."""
+def local_sweep(cfg, docs, words, z, wts, n_dt, n_wt, n_t, key, block):
+    """One full resampling pass over one shard's tokens (pure local).
+
+    Identical schedule and key discipline to `gibbs.sweep`'s inner loop
+    (pad to `block` multiples, one subkey + one (block, K) Gumbel draw per
+    block), so a single-shard run is bit-comparable to the oracle. `n_dt`
+    and `n_wt` may be shard-local tables — `docs`/`words` just index rows.
+    """
     n = docs.shape[0]
     nblocks = -(-n // block)
     pad = nblocks * block - n
@@ -76,20 +95,86 @@ def _local_sweep(cfg, docs, words, z, wts, n_dt, n_wt, n_t, key, block):
     return jax.lax.map(body, (d_b, w_b, z_b, wt_b, keys)).reshape(-1)[:n]
 
 
+_local_sweep = local_sweep  # backwards-compatible alias
+
+
+def partition_by_doc(num_docs: int, docs: np.ndarray, n_shards: int):
+    """Host-side contiguous doc partition of a flat token stream.
+
+    Shard `w` owns docs `[w*d_local, (w+1)*d_local)` with
+    `d_local = ceil(num_docs / n_shards)`; each shard's tokens are padded
+    to the max per-shard token count `t_local`. Returns
+    ``(d_local, t_local, perm, inv)`` where `perm` is the
+    `(n_shards * t_local,)` map from padded slot to original token index
+    (sentinel `len(docs)` marks padding) and `inv` is the `(len(docs),)`
+    inverse (slot of each original token). With one shard `perm` is the
+    identity, which is what keeps single-shard runs bit-exact vs the
+    unsharded oracle.
+    """
+    docs = np.asarray(docs)
+    n = docs.shape[0]
+    d_local = -(-num_docs // n_shards)
+    shard = np.minimum(docs // d_local, n_shards - 1).astype(np.int64)
+    order = np.argsort(shard, kind="stable")
+    counts = np.bincount(shard, minlength=n_shards)
+    t_local = max(1, int(counts.max()))
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    within = np.arange(n, dtype=np.int64) - starts[shard[order]]
+    slots = shard[order] * t_local + within
+    perm = np.full(n_shards * t_local, n, np.int64)
+    perm[slots] = order
+    inv = np.empty(n, np.int64)
+    inv[order] = slots
+    return d_local, t_local, perm, inv
+
+
+def shard_corpus(cfg: LDAConfig, corpus, z, n_dt, n_shards: int):
+    """Pad + partition a flat corpus for an `n_shards` client/server sweep.
+
+    Returns ``(docs_l, words, z_sh, wts, n_dt_sh, inv)``: token arrays of
+    length `n_shards * t_local` (pad tokens carry weight 0 and doc/word 0,
+    so they keep their assignment and contribute nothing), `docs_l` in
+    shard-local ids, and `n_dt_sh` with rows padded to
+    `n_shards * d_local`. Recover original-order assignments with
+    ``z_sh[inv]`` and the true doc-topic table with
+    ``n_dt_sh[:cfg.num_docs]``.
+    """
+    d_local, t_local, perm, inv = partition_by_doc(
+        cfg.num_docs, np.asarray(corpus.docs), n_shards)
+    perm_j = jnp.asarray(perm)
+    shard_of = jnp.asarray(
+        (np.arange(n_shards * t_local) // t_local) * d_local, jnp.int32)
+
+    def take(x, fill):
+        return jnp.take(x, perm_j, mode="fill", fill_value=fill)
+
+    docs_l = take(corpus.docs, 0) - jnp.where(
+        perm_j < corpus.num_tokens, shard_of, 0)
+    pad_rows = n_shards * d_local - cfg.num_docs
+    n_dt_sh = jnp.pad(n_dt, ((0, pad_rows), (0, 0)))
+    return (docs_l.astype(jnp.int32), take(corpus.words, 0), take(z, 0),
+            take(corpus.weights, 0.0), n_dt_sh, jnp.asarray(inv))
+
+
 def make_client_server_sweep(cfg: LDAConfig, mesh, *, block: int = 8192,
                              sync_every: int = 1):
     """Returns jit-able fn(docs, words, z, wts, n_dt_local, n_wt, key) ->
     (z, n_dt_local, n_wt, n_t), running `sync_every` client-local sweeps
     per server sync. Counts are real-valued float32 (callers on the w_bits
-    path convert at the boundary)."""
+    path convert at the boundary).
+
+    Token arrays must be length `n_shards * t_local` for some per-shard
+    capacity (`shard_corpus` builds that layout, padding the last shard
+    with zero-weight tokens when `num_docs % n_shards != 0`), and
+    `n_dt_local` must have `n_shards * sweep.d_local` rows.
+    """
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     bspec = P(data_axes if len(data_axes) > 1 else data_axes[0])
     n_shards = 1
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     for a in data_axes:
         n_shards *= sizes[a]
-    assert cfg.num_docs % n_shards == 0, (cfg.num_docs, n_shards)
-    d_local = cfg.num_docs // n_shards
+    d_local = -(-cfg.num_docs // n_shards)
 
     def shard_fn(docs, words, z, wts, n_dt, n_wt, key):
         # Distinct randomness per client cohort.
@@ -110,8 +195,8 @@ def make_client_server_sweep(cfg: LDAConfig, mesh, *, block: int = 8192,
             key, sub = jax.random.split(key)
             cur_wt = n_wt_others + own_contrib(z)
             cur_t = cur_wt.sum(axis=0)
-            z = _local_sweep(cfg, docs, words, z, wts, n_dt, cur_wt, cur_t,
-                             sub, block)
+            z = local_sweep(cfg, docs, words, z, wts, n_dt, cur_wt, cur_t,
+                            sub, block)
             n_dt = (jnp.zeros_like(n_dt)
                     .at[docs, z].add(wts.astype(n_dt.dtype)))
 
@@ -120,7 +205,7 @@ def make_client_server_sweep(cfg: LDAConfig, mesh, *, block: int = 8192,
         n_wt_new = jax.lax.psum(own_contrib(z), data_axes)
         return z, n_dt, n_wt_new, n_wt_new.sum(axis=0)
 
-    mapped = _make_shard_map(
+    mapped = make_shard_map(
         shard_fn,
         mesh,
         (bspec, bspec, bspec, bspec, P(bspec[0], None),

@@ -1,0 +1,31 @@
+"""Parameter-server fit tier: sharded topic-count state on a device mesh.
+
+The scale-out rendering of "High Performance Latent Variable Models"
+(Li, Li, Ahmed et al.; PAPERS.md) for the Vedalia fit path. Where
+`repro.core.distributed` replicates the whole (V, K) word-topic table on
+every shard and all-reduces it whole per sync, this tier:
+
+  * doc-shards tokens and doc-topic counts across every mesh device
+    (`data` x `model` — all devices act as workers over disjoint docs),
+  * vocab-shards the authoritative word-topic table across the `model`
+    axis (`psum_scatter` assembly — no device materializes (V, K) at the
+    boundary on a model-sharded mesh),
+  * gives each worker a bounded-staleness *support cache*: only the rows
+    for words that actually occur in its documents (`topology.cap` rows,
+    typically << V), kept fresh for the worker's own deltas and stale for
+    remote ones inside a `staleness`-sweep window,
+  * syncs by exchanging per-worker *delta rows* (`all_gather` of
+    (cap, K) deltas + their global row ids) instead of the whole model —
+    see `sync.sync_bytes_per_device` for the accounting the
+    `distributed_bench` gate compares against the replicated baseline.
+
+Module map: `topology` (host-side placement plan), `sync` (delta
+exchange + bytes accounting), `sweep` (the shard_map program factory and
+the local sweep engines), `sampler` (the backend-shaped driver the
+`pserver` registry entry in `repro.api.backends` delegates to).
+"""
+
+from repro.pserver.sampler import PServerFit
+from repro.pserver.topology import PServerPlan, build_plan
+
+__all__ = ["PServerFit", "PServerPlan", "build_plan"]

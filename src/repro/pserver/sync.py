@@ -1,0 +1,76 @@
+"""Stale-synchronous delta exchange for the parameter-server fit tier.
+
+One sync moves only *delta rows*: each worker broadcasts the change its
+local sweeps made to its (cap, K) support cache since the last sync,
+tagged with global word ids, and every worker folds the rows that
+intersect its own support back into its cache. Device-side this is a
+single tiled `all_gather` over every mesh axis plus a searchsorted +
+scatter-add — no (V, K) tensor ever crosses the wire, which is the bytes
+advantage over `core.distributed`'s whole-model psum that
+`distributed_bench` gates (see the accounting helpers below).
+
+Sentinel support slots (id `v_pad`) carry zero deltas by construction
+(no token maps to them), so they may alias each other across workers
+without affecting the applied update.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def own_rows(words_l, z, wts, cap: int, num_topics: int):
+    """This worker's contribution to its support rows: (cap, K) scatter of
+    the current assignments (pad tokens carry weight 0)."""
+    return (jnp.zeros((cap, num_topics), jnp.float32)
+            .at[words_l, z].add(wts))
+
+
+def exchange_deltas(support, delta, cache, n_t, axes):
+    """One stale-synchronous sync step (inside `shard_map`).
+
+    `support` (cap,) sorted global ids (sentinels last), `delta` (cap, K)
+    this worker's count change since the last sync, `cache` (cap, K) the
+    synced support cache, `n_t` (K,) the synced global topic totals.
+    Returns the post-sync (cache, n_t): every worker's delta rows applied
+    wherever they intersect this worker's support (a worker's own delta is
+    part of the gather, so self-sync is the exact local update).
+    """
+    cap = support.shape[0]
+    all_idx = jax.lax.all_gather(support, axes, tiled=True)  # (W*cap,)
+    all_dlt = jax.lax.all_gather(delta, axes, tiled=True)    # (W*cap, K)
+    pos = jnp.searchsorted(support, all_idx)
+    hit = (pos < cap) & (
+        jnp.take(support, jnp.minimum(pos, cap - 1)) == all_idx)
+    pos = jnp.where(hit, pos, cap)  # out-of-bounds rows drop in the scatter
+    cache = cache.at[pos].add(jnp.where(hit[:, None], all_dlt, 0.0))
+    n_t = n_t + jax.lax.psum(delta.sum(axis=0), axes)
+    return cache, n_t
+
+
+# -- communication accounting (analytic; gated by distributed_bench) --------
+#
+# Both models assume bidirectional-ring collectives, the standard cost
+# model: an all-gather of per-device payload B delivers (W-1)*B received
+# bytes per device; an all-reduce of a replicated tensor of B bytes costs
+# ~2*(W-1)/W*B per device (reduce-scatter + all-gather).
+
+
+def sync_bytes_per_device(n_workers: int, cap: int, num_topics: int) -> int:
+    """Per-device bytes received per pserver sync: (W-1) workers' (cap, K)
+    float32 delta rows + their int32 global ids, plus the (K,) psum."""
+    if n_workers <= 1:
+        return 0
+    row_bytes = (num_topics + 1) * 4
+    psum = int(2 * (n_workers - 1) / n_workers * num_topics * 4)
+    return (n_workers - 1) * cap * row_bytes + psum
+
+
+def replicated_sync_bytes_per_device(
+        n_shards: int, vocab_size: int, num_topics: int) -> int:
+    """Per-device bytes of `core.distributed`'s whole-model psum of the
+    replicated (V, K) float32 table per server sync."""
+    if n_shards <= 1:
+        return 0
+    return int(2 * (n_shards - 1) / n_shards * vocab_size * num_topics * 4)

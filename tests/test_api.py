@@ -27,7 +27,7 @@ from repro.core import gibbs, perplexity, update
 from repro.core.types import Corpus, LDAConfig, init_state
 from repro.data import reviews
 
-BACKENDS = ("jnp", "pallas", "distributed", "alias", "sparse")
+BACKENDS = ("jnp", "pallas", "distributed", "pserver", "alias", "sparse")
 
 
 def _corpus(n=3000, v=120, d=40, k=8, w_bits=None, weighted=True, seed=0):
@@ -67,6 +67,7 @@ def test_backend_capabilities_metadata():
     assert set(BACKENDS) <= set(caps)
     assert caps["sparse"].device_kind == "phone"
     assert caps["distributed"].device_kind == "pod"
+    assert caps["pserver"].device_kind == "pod"
     assert caps["alias"].proposal_based and not caps["jnp"].proposal_based
     for name in BACKENDS:  # every backend declares the full record
         assert caps[name].warm_start and caps[name].weighted
@@ -77,14 +78,17 @@ def test_backend_capabilities_metadata():
 
 def test_auto_selector_routes_by_workload():
     assert select_backend(device_kind="phone") == "sparse"
-    assert select_backend(device_kind="pod") == "distributed"
+    assert select_backend(device_kind="pod") == "pserver"
     assert select_backend(device_kind="tpu") == "jnp"
     assert select_backend(task="update", num_tokens=10**7) == "jnp"
     assert select_backend(task="fit", num_tokens=10**6) == "alias"
     assert select_backend(task="fit", num_tokens=500) == "jnp"
-    # Routing degrades gracefully when a preferred backend is unregistered.
+    # Routing degrades gracefully when a preferred backend is unregistered:
+    # a pod without the pserver tier falls back to the replicated oracle.
     assert select_backend(num_tokens=10**6,
                           available=["jnp", "pallas"]) == "jnp"
+    assert select_backend(device_kind="pod",
+                          available=["jnp", "distributed"]) == "distributed"
 
 
 def test_auto_selector_multi_model_wins_within_device_class():
@@ -94,9 +98,11 @@ def test_auto_selector_multi_model_wins_within_device_class():
     assert select_backend(device_kind="tpu", num_models=4) == "batched"
     assert select_backend(device_kind="tpu", num_models=2,
                           task="update") == "batched"
-    # Other device classes have no batched equivalent: the device pick wins.
+    # Other device classes have no batched equivalent: the device pick wins
+    # (pod work must not silently serialize onto the tpu-class batched
+    # sweep — it stays on the sharded pserver tier).
     assert select_backend(device_kind="phone", num_models=4) == "sparse"
-    assert select_backend(device_kind="pod", num_models=4) == "distributed"
+    assert select_backend(device_kind="pod", num_models=4) == "pserver"
     # Degrades to the device pick when batched is unavailable.
     assert select_backend(device_kind="tpu", num_models=4,
                           available=["jnp", "alias"]) == "jnp"
@@ -165,7 +171,7 @@ def test_backend_perplexity_parity_with_oracle():
         st = get_backend(name).run(
             prep.cfg, prep.corpus, jax.random.PRNGKey(7), sweeps)
         perps[name] = float(perplexity.perplexity(prep.cfg, st, prep.corpus))
-    for name in ("pallas", "distributed"):
+    for name in ("pallas", "distributed", "pserver"):
         assert abs(np.log(perps[name]) - np.log(perps["jnp"])) < 0.2, perps
 
 
@@ -294,7 +300,7 @@ def test_service_periodic_full_recompute():
     assert kinds == ["incremental", "full_recompute"]
 
 
-@pytest.mark.parametrize("backend", ["pallas", "distributed"])
+@pytest.mark.parametrize("backend", ["pallas", "distributed", "pserver"])
 def test_service_fit_on_alternate_backends(backend):
     """The acceptance path: fit + view through each non-oracle backend."""
     svc = VedaliaService(backend=backend, num_sweeps=6)

@@ -254,12 +254,14 @@ def test_perf_gate_update_refuses_partial_summary(tmp_path):
             "alias": {"tokens_per_s": {"alias": 1000}},
             "offload": {"offloaded_sweep_fraction": 0.7,
                         "no_phony_adopted": 1.0},
+            "distributed": {"weak_scaling_efficiency": 1.0,
+                            "sync_bytes_saving": 4.0},
         }}))
     assert perf_gate.main(["--summary", str(summary),
                            "--baseline", str(baseline), "--update"]) == 0
-    assert perf_gate.main(["--summary", str(summary),
-                           "--baseline", str(baseline),
-                           "--require", "sampler,batch,alias,offload"]) == 0
+    assert perf_gate.main(
+        ["--summary", str(summary), "--baseline", str(baseline),
+         "--require", "sampler,batch,alias,offload,distributed"]) == 0
     summary.write_text(json.dumps({
         "benches": {
             "sampler": {"samplers": {
@@ -269,6 +271,8 @@ def test_perf_gate_update_refuses_partial_summary(tmp_path):
             "alias": {"tokens_per_s": {"alias": 1000}},
             "offload": {"offloaded_sweep_fraction": 0.7,
                         "no_phony_adopted": 1.0},
+            "distributed": {"weak_scaling_efficiency": 1.0,
+                            "sync_bytes_saving": 4.0},
         }}))
     assert perf_gate.main(["--summary", str(summary),
                            "--baseline", str(baseline)]) == 1

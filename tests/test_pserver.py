@@ -1,0 +1,228 @@
+"""Parameter-server fit tier (`repro.pserver`): oracle parity + sharding.
+
+Single-device tests pin the tier's strongest claim — at mesh size 1 the
+whole pipeline (plan, permuted layout, support cache, delta self-sync,
+boundary rebuild) is bit-exact vs `core.gibbs` from identical keys — plus
+the host-side plan invariants and the alternate local engines. The
+multi-worker path needs >1 XLA device, so those tests ship their body to
+a subprocess under `--xla_force_host_platform_device_count` (see
+`_subproc.py`).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _subproc import run_with_devices
+
+from repro.api.backends import get_backend
+from repro.core import gibbs, perplexity
+from repro.core.types import Corpus, LDAConfig, build_counts, init_state
+from repro.pserver import build_plan
+from repro.pserver.sampler import PServerFit
+from repro.pserver.sync import (
+    replicated_sync_bytes_per_device,
+    sync_bytes_per_device,
+)
+
+
+def _setup(n=3000, v=120, d=41, k=8, seed=0, unit=True):
+    rng = np.random.default_rng(seed)
+    cfg = LDAConfig(num_topics=k, vocab_size=v, num_docs=d)
+    wts = (np.ones(n, np.float32) if unit
+           else rng.random(n).astype(np.float32))
+    corpus = Corpus(
+        docs=jnp.asarray(rng.integers(0, d, n), jnp.int32),
+        words=jnp.asarray(rng.integers(0, v, n), jnp.int32),
+        weights=jnp.asarray(wts),
+    )
+    return cfg, corpus
+
+
+def _states_equal(a, b):
+    return all(
+        np.array_equal(np.asarray(getattr(a, f)), np.asarray(getattr(b, f)))
+        for f in ("z", "n_dt", "n_wt", "n_t"))
+
+
+# -- mesh-1 bit-exactness vs the jnp oracle ---------------------------------
+
+
+@pytest.mark.parametrize("staleness", [1, 3])
+def test_run_bitexact_vs_oracle(staleness):
+    """A 1-worker pserver run IS the oracle chain — any staleness (a
+    worker is never stale w.r.t. itself; unit weights keep the
+    cache-delta arithmetic exact in float32)."""
+    cfg, corpus = _setup()
+    ps = PServerFit(staleness=staleness, local="gibbs")
+    st = ps.run(cfg, corpus, jax.random.PRNGKey(7), 5)
+    ref = gibbs.run(cfg, corpus, jax.random.PRNGKey(7), 5)
+    assert _states_equal(st, ref)
+
+
+def test_single_sweep_bitexact_fractional_weights():
+    """One sweep is bit-exact even with fractional (RLDA) weights: the
+    first sweep scores straight off the input state, so no cache-delta
+    float arithmetic is involved yet."""
+    cfg, corpus = _setup(unit=False)
+    st0 = init_state(cfg, corpus, jax.random.PRNGKey(1))
+    ps = PServerFit(local="gibbs")
+    a = ps.sweep(cfg, st0, corpus, jax.random.PRNGKey(2))
+    b = gibbs.sweep(cfg, st0, corpus, jax.random.PRNGKey(2))
+    assert _states_equal(a, b)
+
+
+def test_wbits_run_bitexact_vs_oracle():
+    """The fixed-point path loops single-sweep programs so the per-sweep
+    quantization round-trip matches the oracle chain exactly."""
+    cfg, corpus = _setup(unit=False)
+    cfg = LDAConfig(num_topics=cfg.num_topics, vocab_size=cfg.vocab_size,
+                    num_docs=cfg.num_docs, w_bits=8)
+    ps = PServerFit(local="gibbs")
+    st = ps.run(cfg, corpus, jax.random.PRNGKey(3), 3)
+    ref = gibbs.run(cfg, corpus, jax.random.PRNGKey(3), 3)
+    assert st.n_wt.dtype == jnp.int32
+    assert _states_equal(st, ref)
+
+
+def test_warm_start_matches_oracle_continuation():
+    cfg, corpus = _setup()
+    ps = PServerFit(local="gibbs")
+    st = ps.run(cfg, corpus, jax.random.PRNGKey(0), 3)
+    cont_ps = ps.run(cfg, corpus, jax.random.PRNGKey(4), 2, state=st)
+    cont_or = get_backend("jnp").run(
+        cfg, corpus, jax.random.PRNGKey(4), 2, state=st)
+    assert _states_equal(cont_ps, cont_or)
+
+
+def test_backend_registration_routes_through_registry():
+    cfg, corpus = _setup()
+    st = get_backend("pserver", staleness=2).run(
+        cfg, corpus, jax.random.PRNGKey(1), 3)
+    assert _states_equal(st, build_counts(cfg, corpus, st.z))
+
+
+# -- local engines ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("local", ["mh", "pallas"])
+def test_alternate_local_engines_consistent(local):
+    """The MH and fused-kernel engines keep exact count invariants and
+    land in the oracle's quality band (their key schedules differ from the
+    jnp path, so these are statistical, not bitwise, gates)."""
+    cfg, corpus = _setup(n=4096, v=120, d=40, k=12)
+    sweeps = 30 if local == "mh" else 10  # MH burns through stale proposals
+    ps = PServerFit(staleness=2, local=local)
+    st = ps.run(cfg, corpus, jax.random.PRNGKey(2), sweeps)
+    reb = build_counts(cfg, corpus, st.z)
+    np.testing.assert_array_equal(np.asarray(st.n_wt), np.asarray(reb.n_wt))
+    p = perplexity.perplexity(cfg, st, corpus)
+    ref = gibbs.run(cfg, corpus, jax.random.PRNGKey(3), 10)
+    p_ref = perplexity.perplexity(cfg, ref, corpus)
+    assert abs(np.log(p) - np.log(p_ref)) < 0.25, (p, p_ref)
+
+
+def test_bad_options_fail_loudly():
+    with pytest.raises(ValueError, match="local engine"):
+        PServerFit(local="cuda")
+    with pytest.raises(ValueError, match="staleness"):
+        PServerFit(staleness=0)
+
+
+# -- host-side plan ---------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_data,n_model", [(1, 1), (2, 1), (2, 2), (3, 2)])
+def test_plan_invariants(n_data, n_model):
+    cfg, corpus = _setup(n=2500, v=90, d=37)
+    docs = np.asarray(corpus.docs)
+    words = np.asarray(corpus.words)
+    plan = build_plan(cfg, docs, words, n_data, n_model)
+    w_count = n_data * n_model
+    n = len(docs)
+
+    # perm/inv round-trip and padding sentinels.
+    assert plan.perm.shape == (w_count * plan.t_local,)
+    assert np.array_equal(plan.perm[plan.inv], np.arange(n))
+    assert ((plan.perm == n) | (plan.perm < n)).all()
+    # doc ownership: every slot's token belongs to the slot's worker.
+    valid = plan.perm < n
+    slot_worker = np.arange(len(plan.perm)) // plan.t_local
+    owner = np.minimum(docs[plan.perm[valid]] // plan.d_local, w_count - 1)
+    assert np.array_equal(owner, slot_worker[valid])
+    assert (plan.docs_l[valid] >= 0).all()
+    assert (plan.docs_l[valid] < plan.d_local).all()
+    # support: sorted distinct ids then sentinels; words_l resolves every
+    # token to its own word id through the worker's support row.
+    assert plan.v_pad % n_model == 0 and plan.v_pad >= cfg.vocab_size
+    for w in range(w_count):
+        row = plan.support[w]
+        real = row[row < plan.v_pad]
+        assert (np.diff(real) > 0).all()
+    resolved = plan.support[slot_worker[valid], plan.words_l[valid]]
+    assert np.array_equal(resolved, words[plan.perm[valid]])
+    # identity layout at one worker (the bit-exactness precondition).
+    if w_count == 1:
+        assert np.array_equal(plan.perm, np.arange(n))
+
+
+def test_plan_cap_override_validated():
+    cfg, corpus = _setup(n=500, v=60, d=10)
+    with pytest.raises(ValueError, match="cap"):
+        build_plan(cfg, np.asarray(corpus.docs), np.asarray(corpus.words),
+                   1, 1, cap=4)
+
+
+def test_sync_bytes_accounting_scales_with_support_not_vocab():
+    """The tier's bytes win: per-sync traffic is O(cap), the replicated
+    baseline's is O(V) — and both vanish on a single worker."""
+    assert sync_bytes_per_device(1, 100, 16) == 0
+    assert replicated_sync_bytes_per_device(1, 1000, 16) == 0
+    small = sync_bytes_per_device(4, 100, 16)
+    repl = replicated_sync_bytes_per_device(4, 1000, 16)
+    assert 0 < small < repl
+    assert sync_bytes_per_device(4, 200, 16) == 2 * small - int(
+        2 * 3 / 4 * 16 * 4)  # linear in cap (psum term fixed)
+
+
+# -- multi-worker (subprocess: needs >1 XLA device) -------------------------
+
+
+def test_multiworker_invariants_and_quality():
+    """On a (2, 2) mesh with staleness 2: counts stay exact invariants of
+    the assignments after a run, the model-sharded rebuild matches a
+    host-side rebuild, and quality lands in the oracle band."""
+    out = run_with_devices("""
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import gibbs, perplexity
+from repro.core.types import Corpus, LDAConfig, build_counts
+from repro.pserver.sampler import PServerFit
+
+rng = np.random.default_rng(0)
+n, v, d, k = 5000, 160, 61, 8
+cfg = LDAConfig(num_topics=k, vocab_size=v, num_docs=d)
+corpus = Corpus(docs=jnp.asarray(rng.integers(0, d, n), jnp.int32),
+                words=jnp.asarray(rng.integers(0, v, n), jnp.int32),
+                weights=jnp.ones(n, jnp.float32))
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+ps = PServerFit(mesh=mesh, staleness=2, local="gibbs")
+st = ps.run(cfg, corpus, jax.random.PRNGKey(7), 10)
+reb = build_counts(cfg, corpus, st.z)
+exact = all(np.array_equal(np.asarray(getattr(st, f)),
+                           np.asarray(getattr(reb, f)))
+            for f in ("n_dt", "n_wt", "n_t"))
+p = float(perplexity.perplexity(cfg, st, corpus))
+ref = gibbs.run(cfg, corpus, jax.random.PRNGKey(1), 10)
+p_ref = float(perplexity.perplexity(cfg, ref, corpus))
+warm = ps.run(cfg, corpus, jax.random.PRNGKey(8), 2, state=st)
+reb2 = build_counts(cfg, corpus, warm.z)
+warm_exact = bool(np.array_equal(np.asarray(warm.n_wt),
+                                 np.asarray(reb2.n_wt)))
+print(json.dumps({"devices": jax.device_count(), "exact": exact,
+                  "warm_exact": warm_exact,
+                  "logdiff": abs(float(np.log(p) - np.log(p_ref)))}))
+""", n_devices=4)
+    assert out["devices"] == 4
+    assert out["exact"] and out["warm_exact"]
+    assert out["logdiff"] < 0.2, out
