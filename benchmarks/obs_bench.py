@@ -1,0 +1,210 @@
+"""Observability tier: overhead gates + the end-to-end trace export.
+
+Two claims, both asserted on every run:
+
+1. **Zero-cost-when-disabled** — the instrument set the service layer puts
+   on the sampler hot path (a trace span + a `DeviceTimer` observing into
+   a labelled histogram) costs <= 1% of sampler throughput while
+   `repro.obs` is disabled, and <= 5% enabled. Measured min-of-reps,
+   interleaved A/B/C (bare / instrumented-disabled / instrumented-enabled)
+   so drift in machine load hits all three arms alike.
+
+2. **One trace id across the tiers** — a full stream -> scheduler ->
+   offload run produces at least one trace whose single id spans
+   client request, server verb dispatch, scheduler refit, offload lease,
+   and the adoption verb (the ISSUE 8 acceptance trace).
+
+Artifacts (uploaded by the CI bench smoke): `obs_trace.json` (Chrome
+trace-event JSON — open in chrome://tracing or Perfetto),
+`obs_trace.jsonl`, and `obs_metrics.json` (registry snapshot).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from repro import obs
+from repro.api import VedaliaClient, VedaliaServer, get_backend
+from repro.core import rlda
+from repro.data import reviews
+from repro.obs import metrics, timers, trace
+from repro.offload import DeviceFleet, FleetSpec, OffloadCoordinator
+from repro.stream import (
+    IncrementalScheduler,
+    StreamRouter,
+    StreamSpec,
+    pump,
+    synthetic_events,
+)
+
+OUTDIR = os.path.join("experiments", "bench")
+
+#: Overhead ceilings (fractions of bare-path wall time).
+MAX_DISABLED_OVERHEAD = 0.01
+MAX_ENABLED_OVERHEAD = 0.05
+
+
+def _overhead(quick: bool) -> dict:
+    """Min-of-reps interleaved timing of the sampler hot path, bare vs
+    wrapped in the service layer's instrument set."""
+    n_reviews = 120 if quick else 300
+    sweeps = 6 if quick else 20
+    reps = 7 if quick else 9
+    spec = reviews.SyntheticSpec(num_reviews=n_reviews, vocab_size=600,
+                                 num_topics=8, mean_tokens=60, seed=0)
+    prep = rlda.prepare(reviews.generate(spec).reviews, base_vocab=600,
+                        num_topics=12, w_bits=None)
+    cfg, corpus = prep.cfg, prep.corpus
+    sampler = get_backend("jnp")
+    hist = metrics.histogram(
+        "vedalia_obs_bench_sweep_seconds",
+        "obs_bench scratch histogram (the enabled-arm observation sink).")
+    state = sampler.run(cfg, corpus, jax.random.PRNGKey(0), 1)  # compile
+
+    def bare(s):
+        out = sampler.run(cfg, corpus, jax.random.PRNGKey(1), sweeps,
+                          state=s)
+        jax.block_until_ready(out.n_t)
+        return out
+
+    def instrumented(s):
+        # Exactly what `VedaliaService.refine` wraps around the sampler.
+        with trace.span("obs_bench.sweep"):
+            timer = timers.DeviceTimer(hist).start()
+            out = sampler.run(cfg, corpus, jax.random.PRNGKey(1), sweeps,
+                              state=s)
+            timer.sync(out.n_t)
+        jax.block_until_ready(out.n_t)
+        return out
+
+    t_bare, t_dis, t_en = [], [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        state = bare(state)
+        t_bare.append(time.perf_counter() - t0)
+
+        obs.disable()
+        t0 = time.perf_counter()
+        state = instrumented(state)
+        t_dis.append(time.perf_counter() - t0)
+
+        obs.enable()
+        t0 = time.perf_counter()
+        state = instrumented(state)
+        t_en.append(time.perf_counter() - t0)
+        obs.disable()
+
+    # Min is the noise-robust floor estimator: scheduling hiccups only ever
+    # add time, so the minimum of each arm is its honest cost.
+    base, dis, en = min(t_bare), min(t_dis), min(t_en)
+    disabled_overhead = dis / base - 1.0
+    enabled_overhead = en / base - 1.0
+    tput = corpus.num_tokens * sweeps / base
+    print(f"  sampler hot path: {tput:,.0f} tok/s bare "
+          f"({base * 1e3:.1f} ms/unit)")
+    print(f"  instrumented, obs disabled: {disabled_overhead:+.2%} "
+          f"(gate <= {MAX_DISABLED_OVERHEAD:.0%})")
+    print(f"  instrumented, obs enabled:  {enabled_overhead:+.2%} "
+          f"(gate <= {MAX_ENABLED_OVERHEAD:.0%})")
+    assert disabled_overhead <= MAX_DISABLED_OVERHEAD, (
+        f"disabled instrumentation costs {disabled_overhead:.2%} "
+        f"(> {MAX_DISABLED_OVERHEAD:.0%}): the zero-cost contract is broken")
+    assert enabled_overhead <= MAX_ENABLED_OVERHEAD, (
+        f"enabled instrumentation costs {enabled_overhead:.2%} "
+        f"(> {MAX_ENABLED_OVERHEAD:.0%})")
+    return {
+        "tokens_per_s_bare": int(tput),
+        "unit_ms": round(base * 1e3, 2),
+        "disabled_overhead": round(disabled_overhead, 4),
+        "enabled_overhead": round(enabled_overhead, 4),
+    }
+
+
+def _e2e_trace(quick: bool) -> dict:
+    """Drive a stream through scheduler + offload with obs on; assert one
+    trace id covers every tier, then export the artifacts."""
+    obs.enable()
+    trace.reset()
+    metrics.reset()
+    try:
+        spec = StreamSpec(num_products=2, duration=20.0, rate=2.0,
+                          shape="burst", seed=0)
+        events = synthetic_events(spec)
+        router = StreamRouter([0], capacity=64)
+        server = VedaliaServer(backend="jnp", num_sweeps=4, update_sweeps=1)
+        clients = {0: VedaliaClient(server=server)}
+        # Honest, churn-free fleet: the bench asserts that adoption
+        # *appears in the trace*, so adoption must actually happen.
+        fleet = DeviceFleet(FleetSpec(num_devices=6, malicious_frac=0.0,
+                                      churn_prob=0.0, straggler_frac=0.0,
+                                      backend="jnp", seed=0))
+        coord = OffloadCoordinator(fleet, seed=0)
+        sched = IncrementalScheduler(
+            clients, router, microbatch=6, min_fit_reviews=8,
+            staleness_budget=8.0, refit_sweeps=3, refit_policy="always",
+            refit_executor=coord,
+            fit_kwargs=dict(num_topics=4, base_vocab=spec.vocab_size,
+                            num_sweeps=4))
+        pump(events, router, sched, step_interval=2.0)
+        sched.publish_metrics()
+
+        spans = trace.spans()
+        by_trace: dict[str, set] = {}
+        for sp in spans:
+            by_trace.setdefault(sp.trace_id, set()).add(sp.name)
+        # The acceptance chain: client request -> server dispatch ->
+        # scheduler refit -> offload lease -> adoption, one trace id.
+        want = {"scheduler.refit", "offload.lease",
+                "client.adopt_state", "server.adopt_state"}
+        full = [tid for tid, names in by_trace.items()
+                if want <= names and any(n.startswith("client.")
+                                         for n in names)]
+        assert coord.stats.adopted > 0, "no lease was adopted; trace moot"
+        assert full, (
+            f"no single trace id spans {sorted(want)}; traces seen: "
+            f"{ {t: sorted(n) for t, n in by_trace.items()} }")
+
+        os.makedirs(OUTDIR, exist_ok=True)
+        n_events = trace.export_chrome(os.path.join(OUTDIR, "obs_trace.json"))
+        trace.export_jsonl(os.path.join(OUTDIR, "obs_trace.jsonl"))
+        snap = clients[0].metrics(format="prometheus")
+        with open(os.path.join(OUTDIR, "obs_metrics.json"), "w") as f:
+            json.dump({"enabled": snap.enabled, "metrics": snap.metrics}, f,
+                      indent=1)
+        print(f"  e2e trace: {len(by_trace)} traces, {n_events} spans, "
+              f"{len(full)} spanning all tiers "
+              f"(adopted={coord.stats.adopted})")
+        print(f"  artifacts: {OUTDIR}/obs_trace.json (chrome://tracing), "
+              f"obs_trace.jsonl, obs_metrics.json")
+        return {
+            "num_traces": len(by_trace),
+            "num_spans": len(spans),
+            "full_tier_traces": len(full),
+            "adopted": coord.stats.adopted,
+            "metric_families": len(snap.metrics),
+        }
+    finally:
+        obs.disable()
+        trace.reset()
+        metrics.reset()
+
+
+def run(quick: bool = False) -> dict:
+    overhead = _overhead(quick)
+    e2e = _e2e_trace(quick)
+    return {
+        **overhead,
+        "e2e": e2e,
+        # The perf-gate indicator: runner-independent 1.0/0.0 (the raw
+        # overheads above are the diagnostics; the gate itself is the
+        # asserts, so reaching this line means both passed).
+        "overhead_ok": 1.0,
+    }
+
+
+if __name__ == "__main__":
+    run(quick=True)

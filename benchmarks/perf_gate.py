@@ -12,7 +12,7 @@ Refreshing the baseline (after an intentional perf change, from a clean
 run on main):
 
     PYTHONPATH=src python -m benchmarks.run \\
-        --only sampler,batch,alias,offload,distributed
+        --only sampler,batch,alias,offload,distributed,obs
     python -m benchmarks.perf_gate --update
 
 The baseline must be measured on the machine class that gates it: CI
@@ -73,6 +73,12 @@ METRICS = {
     "distributed": [
         "weak_scaling_efficiency",
         "sync_bytes_saving",
+    ],
+    # Observability tier: the <=1% disabled / <=5% enabled instrumentation
+    # overhead ceilings and the all-tiers trace assertion run inside
+    # obs_bench on every run; the indicator is 1.0 iff both held.
+    "obs": [
+        "overhead_ok",
     ],
 }
 

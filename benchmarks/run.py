@@ -39,9 +39,36 @@ BENCHES = [
      "benchmarks.offload_bench"),
     ("distributed", "pserver fit tier: weak scaling + sparse sync bytes",
      "benchmarks.distributed_bench"),
+    ("obs", "observability overhead gates + end-to-end trace export",
+     "benchmarks.obs_bench"),
     ("roofline", "roofline terms from the dry-run (deliverable g)",
      "benchmarks.roofline"),
 ]
+
+
+def _run_context() -> dict:
+    """Who/what produced this summary — what makes perf trajectories
+    comparable (or knowably incomparable) across runner classes."""
+    import platform
+
+    ctx = {
+        "host": platform.node(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "cpu_count": os.cpu_count(),
+    }
+    try:
+        import jax
+
+        ctx.update({
+            "jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "device_kind": jax.devices()[0].device_kind,
+        })
+    except Exception as e:  # context must never fail the bench run
+        ctx["jax_error"] = repr(e)
+    return ctx
 
 
 def main(argv=None):
@@ -92,6 +119,7 @@ def main(argv=None):
         "profile": "full" if args.full else "quick",
         "requested": sorted(only) if only else valid,
         "wall_s": round(time.time() - t_start, 1),
+        "context": _run_context(),
         "failures": failures,
         "benches": results,
     }

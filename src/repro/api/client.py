@@ -27,6 +27,7 @@ from repro.api.server import VedaliaServer
 from repro.core.rlda import Review
 from repro.core.types import Corpus, LDAConfig, LDAState
 from repro.core.views import ModelView, TopicView
+from repro.obs import trace
 
 Transport = Callable[[str], str]
 
@@ -155,6 +156,20 @@ class SpotCheckResult:
 
 
 @dataclasses.dataclass(frozen=True)
+class MetricsResult:
+    """The server process's `repro.obs` registry (`metrics` verb).
+
+    `enabled` reports the server's obs switch — a disabled server answers
+    with an empty snapshot, not an error. `exposition` carries the
+    Prometheus text rendering when requested with `format="prometheus"`.
+    """
+
+    enabled: bool
+    metrics: dict
+    exposition: Optional[str]
+
+
+@dataclasses.dataclass(frozen=True)
 class TopReviewsResult:
     handle_id: int
     topic_id: int
@@ -210,7 +225,12 @@ class VedaliaClient:
             else server.handle_raw
 
     def _call(self, kind: str, payload: Optional[dict] = None) -> dict:
-        raw = self._transport(protocol.make_request(kind, payload))
+        # The wire context is computed *inside* the call span, so the
+        # server's dispatch span hangs off this client call — one trace id
+        # from device method to server verb, across any transport.
+        with trace.span(f"client.{kind}"):
+            raw = self._transport(protocol.make_request(
+                kind, payload, trace=trace.wire_context()))
         return protocol.parse_response(raw, expect_kind=kind)
 
     def _ensure_session(self) -> str:
@@ -558,7 +578,9 @@ class VedaliaClient:
             payload["rel_mass_tol"] = rel_mass_tol
         if weight_tol is not None:
             payload["weight_tol"] = weight_tol
-        raw = self._transport(protocol.make_request("view", payload))
+        with trace.span("client.view"):
+            raw = self._transport(protocol.make_request(
+                "view", payload, trace=trace.wire_context()))
         try:
             p = protocol.parse_response(raw, expect_kind="view")
         except protocol.RemoteError as e:
@@ -569,7 +591,9 @@ class VedaliaClient:
                 raise
             self.session_id = None
             payload["session_id"] = self._ensure_session()
-            raw = self._transport(protocol.make_request("view", payload))
+            with trace.span("client.view", retry=True):
+                raw = self._transport(protocol.make_request(
+                    "view", payload, trace=trace.wire_context()))
             p = protocol.parse_response(raw, expect_kind="view")
         result = ViewResult(
             handle_id=int(p["handle_id"]),
@@ -611,6 +635,17 @@ class VedaliaClient:
         if reviews is not None:
             payload["reviews"] = protocol.encode_reviews(reviews)
         return float(self._call("perplexity", payload)["perplexity"])
+
+    def metrics(self, format: str = "dict") -> MetricsResult:
+        """Fetch the server's metrics registry. An old server that predates
+        the verb answers `bad_request` ("unknown request kind"), which
+        surfaces as the usual typed `RemoteError` — no special casing."""
+        p = self._call("metrics", {"format": format})
+        return MetricsResult(
+            enabled=bool(p["enabled"]),
+            metrics=dict(p["metrics"]),
+            exposition=p.get("exposition"),
+        )
 
     def stats(self) -> StatsResult:
         p = self._call("stats")

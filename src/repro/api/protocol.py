@@ -43,7 +43,9 @@ PROTOCOL_VERSION = 1
 #: `adopt_state` are the offload-tier verbs (additive, no version bump):
 #: a device downloads a served model's corpus+state, computes locally, and
 #: the server validates + re-Gibbs-spot-checks the uploaded state before
-#: swapping it into the *existing* served handle.
+#: swapping it into the *existing* served handle. `metrics` (additive) is
+#: the observability verb: a dict snapshot — or Prometheus text — of the
+#: server process's `repro.obs` registry.
 KINDS = (
     "hello",
     "open_session",
@@ -63,6 +65,7 @@ KINDS = (
     "spot_check",
     "perplexity",
     "stats",
+    "metrics",
     "release",
     "release_corpus",
     "close_session",
@@ -194,18 +197,32 @@ def decode_reviews(ds) -> list[Review]:
 # -- envelopes ---------------------------------------------------------------
 
 
-def make_request(kind: str, payload: Optional[dict] = None) -> str:
+def make_request(kind: str, payload: Optional[dict] = None,
+                 trace: Optional[dict] = None) -> str:
+    """`trace` is the additive observability envelope field
+    (`{"trace_id", "parent_span_id"}`, see `repro.obs.trace.wire_context`);
+    servers that predate it ignore unknown envelope keys, so no version
+    bump. Omitted entirely when None — the common, obs-disabled case."""
     if kind not in KINDS:
         raise ProtocolError(f"unknown request kind {kind!r}; kinds: {KINDS}")
-    return json.dumps({
+    env = {
         "protocol_version": PROTOCOL_VERSION,
         "kind": kind,
         "payload": payload or {},
-    })
+    }
+    if trace is not None:
+        env["trace"] = trace
+    return json.dumps(env)
 
 
-def parse_request(raw: str) -> tuple[str, dict]:
-    """Server side: raw request -> (kind, payload); raises ProtocolError."""
+def parse_request_traced(raw: str) -> tuple[str, dict, Optional[dict]]:
+    """Server side: raw request -> (kind, payload, trace-or-None).
+
+    The third element is the additive `trace` envelope field when the
+    caller sent one (malformed values are passed through untouched —
+    `repro.obs.trace.remote_parent` treats anything non-conforming as
+    absent, because telemetry must never fail a request).
+    """
     try:
         env = json.loads(raw)
     except (TypeError, json.JSONDecodeError) as e:
@@ -225,6 +242,12 @@ def parse_request(raw: str) -> tuple[str, dict]:
     payload = env.get("payload", {})
     if not isinstance(payload, dict):
         raise ProtocolError("request payload must be a JSON object")
+    return kind, payload, env.get("trace")
+
+
+def parse_request(raw: str) -> tuple[str, dict]:
+    """Server side: raw request -> (kind, payload); raises ProtocolError."""
+    kind, payload, _ = parse_request_traced(raw)
     return kind, payload
 
 

@@ -28,6 +28,7 @@ come back as `ok=false` envelopes with a wire code.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax.numpy as jnp
@@ -38,6 +39,25 @@ from repro.api.backends import available_backends, backend_capabilities
 from repro.api.service import ModelHandle, VedaliaService
 from repro.core import rlda, views as views_lib
 from repro.core.types import LDAState
+from repro.obs import config as obs_config
+from repro.obs import metrics, trace
+
+_REQS_TOTAL = metrics.counter(
+    "vedalia_server_requests_total",
+    "Protocol requests handled, by verb and wire status.",
+    labels=("verb", "status"))
+_REQ_SECONDS = metrics.histogram(
+    "vedalia_server_request_seconds",
+    "End-to-end handle_raw latency per verb.",
+    labels=("verb",))
+_REQ_BYTES = metrics.histogram(
+    "vedalia_server_request_bytes",
+    "Request envelope size per verb.",
+    labels=("verb",), buckets=metrics.BYTE_BUCKETS)
+_RESP_BYTES = metrics.histogram(
+    "vedalia_server_response_bytes",
+    "Response envelope size per verb.",
+    labels=("verb",), buckets=metrics.BYTE_BUCKETS)
 
 
 @dataclasses.dataclass
@@ -105,29 +125,53 @@ class VedaliaServer:
 
     def handle_raw(self, raw: str) -> str:
         """One request envelope in, one response envelope out."""
+        if not obs_config._enabled:
+            return self._dispatch(raw)[2]
+        t0 = time.perf_counter()
+        kind, status, resp = self._dispatch(raw)
+        verb = kind or "<unparsed>"
+        _REQ_SECONDS.observe(time.perf_counter() - t0, verb=verb)
+        _REQS_TOTAL.inc(verb=verb, status=status)
+        _REQ_BYTES.observe(len(raw) if isinstance(raw, str) else 0, verb=verb)
+        _RESP_BYTES.observe(len(resp), verb=verb)
+        return resp
+
+    def _dispatch(self, raw: str) -> tuple[Optional[str], str, str]:
+        """(kind, wire status, response envelope). The obs-disabled fast
+        path calls this directly, so the error-mapping contract lives here
+        and `handle_raw` only adds telemetry."""
         kind = None
         try:
-            kind, payload = protocol.parse_request(raw)
+            kind, payload, wire_trace = protocol.parse_request_traced(raw)
             handler = getattr(self, f"_handle_{kind}")
-            return protocol.make_response(kind, handler(payload))
+            # Adopt the caller's trace (if any) so the dispatch span — and
+            # everything the handler opens below it — joins the trace that
+            # started on the client, across the wire rather than ambiently.
+            with trace.remote_parent(wire_trace), \
+                    trace.span(f"server.{kind}"):
+                response = protocol.make_response(kind, handler(payload))
+            return kind, "ok", response
         except protocol.NotFound as e:
-            return protocol.make_error(kind, "not_found", str(e))
+            return kind, "not_found", protocol.make_error(
+                kind, "not_found", str(e))
         except protocol.Overloaded as e:
             # Backpressure, not failure: the batch was rejected whole and
             # the client should retry after the queue drains.
-            return protocol.make_error(kind, "overloaded", str(e))
+            return kind, "overloaded", protocol.make_error(
+                kind, "overloaded", str(e))
         except protocol.ProtocolError as e:
-            return protocol.make_error(kind, e.code, str(e))
+            return kind, e.code, protocol.make_error(kind, e.code, str(e))
         except KeyError as e:
             # Only reached by `payload["field"]` in a handler: the request
             # is missing a required field. Server-object lookup misses are
             # typed (NotFound) and handled above.
-            return protocol.make_error(
+            return kind, "bad_request", protocol.make_error(
                 kind, "bad_request", f"missing required field {e}")
         except ValueError as e:
-            return protocol.make_error(kind, "invalid_argument", str(e))
+            return kind, "invalid_argument", protocol.make_error(
+                kind, "invalid_argument", str(e))
         except Exception as e:  # defensive: a server must always answer
-            return protocol.make_error(
+            return kind, "internal", protocol.make_error(
                 kind, "internal", f"{type(e).__name__}: {e}")
 
     # -- helpers ------------------------------------------------------------
@@ -571,6 +615,23 @@ class VedaliaServer:
             "total_queued": sum(queues.values()),
             "max_ingest_queue": self.max_ingest_queue,
         }
+
+    def _handle_metrics(self, payload: dict) -> dict:
+        """The `repro.obs` registry of this server process: a dict
+        snapshot always, plus Prometheus text when the caller asks
+        (`format: "prometheus"`). Answering is always allowed — with obs
+        disabled the snapshot is simply empty and `enabled` says why."""
+        fmt = payload.get("format", "dict")
+        if fmt not in ("dict", "prometheus"):
+            raise ValueError(
+                f"unknown metrics format {fmt!r}; use 'dict' or 'prometheus'")
+        out = {
+            "enabled": obs_config.enabled(),
+            "metrics": metrics.snapshot(),
+        }
+        if fmt == "prometheus":
+            out["exposition"] = metrics.render_prometheus()
+        return out
 
     def _handle_release(self, payload: dict) -> dict:
         handle = self._handle_of(payload)

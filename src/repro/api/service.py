@@ -35,6 +35,20 @@ from repro.core import views as views_lib
 from repro.core.rlda import Review, RLDACorpus
 from repro.core.types import LDAState
 from repro.core.views import ModelView
+from repro.obs import metrics, timers
+
+#: Backend-labelled service-op latency — the tier-attribution histogram
+#: ("where do the milliseconds go") the ISSUE's motivation asks for. Device
+#: ops (`fit`, `refine*`, `update`) stop via `DeviceTimer.sync(state)` so
+#: async dispatch can't fake a fast sampler.
+_OP_SECONDS = metrics.histogram(
+    "vedalia_service_op_seconds",
+    "Service operation latency by op and sampler backend.",
+    labels=("op", "backend"))
+_VIEW_BYTES = metrics.histogram(
+    "vedalia_service_view_bytes",
+    "Serialized view payload size (what a device downloads).",
+    labels=(), buckets=metrics.BYTE_BUCKETS)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -252,8 +266,11 @@ class VedaliaService:
             backend, num_tokens=prep.corpus.num_tokens, task="fit",
             device_kind=device_kind)
         sweeps = num_sweeps if num_sweeps is not None else self.num_sweeps
+        timer = timers.DeviceTimer(_OP_SECONDS, op="fit", backend=backend)
+        timer.start()
         state = self.sampler(backend).run(
             prep.cfg, prep.corpus, self._key(seed), sweeps)
+        timer.sync(state.n_wt)
         model = update.UpdatableModel(
             cfg=prep.cfg, corpus=prep.corpus, state=state)
         return self._register(ModelHandle(
@@ -335,6 +352,9 @@ class VedaliaService:
         import repro.serving.batch_engine as batch_engine
 
         sweeps = num_sweeps if num_sweeps is not None else self.num_sweeps
+        timer = timers.DeviceTimer(
+            _OP_SECONDS, op="fit_batch", backend=backend)
+        timer.start()
         states, _ = batch_engine.run_batched(
             sampler,
             [p.cfg for p in preps],
@@ -342,6 +362,7 @@ class VedaliaService:
             self._keys(len(preps), seed),
             sweeps,
         )
+        timer.sync(states[-1].n_wt)
         return [
             self._register(ModelHandle(
                 handle_id=self._new_id(), prep=p,
@@ -381,9 +402,12 @@ class VedaliaService:
         backend = self._resolve(
             backend or handle.backend,
             num_tokens=handle.model.corpus.num_tokens, task="update")
+        timer = timers.DeviceTimer(_OP_SECONDS, op="refine", backend=backend)
+        timer.start()
         handle.model.state = self.sampler(backend).run(
             handle.cfg, handle.model.corpus, self._key(seed), num_sweeps,
             state=handle.model.state)
+        timer.sync(handle.model.state.n_wt)
         handle.sweeps_run += num_sweeps
         handle.backend = backend
         return handle
@@ -429,6 +453,9 @@ class VedaliaService:
             return handles
         import repro.serving.batch_engine as batch_engine
 
+        timer = timers.DeviceTimer(
+            _OP_SECONDS, op="refine_many", backend=backend)
+        timer.start()
         states, _ = batch_engine.run_batched(
             sampler,
             [h.cfg for h in unique],
@@ -437,6 +464,7 @@ class VedaliaService:
             num_sweeps,
             states=[h.model.state for h in unique],
         )
+        timer.sync(states[-1].n_wt)
         for h, st in zip(unique, states):
             h.model.state = st
             h.sweeps_run += num_sweeps
@@ -471,6 +499,8 @@ class VedaliaService:
             backend or handle.backend,
             num_tokens=handle.model.corpus.num_tokens, task="update")
         handle.backend = backend
+        timer = timers.DeviceTimer(_OP_SECONDS, op="update", backend=backend)
+        timer.start()
         handle.model = update.add_documents(
             handle.model,
             np.asarray(prep_new.corpus.docs) + cfg.num_docs,
@@ -483,6 +513,7 @@ class VedaliaService:
             # Explicit: token-free trailing reviews still count as docs.
             num_docs=cfg.num_docs + len(new_reviews),
         )
+        timer.sync(handle.model.state.n_wt)
         # Corpus and per-review metadata must cover the appended documents.
         handle.prep = dataclasses.replace(
             prep,
@@ -523,14 +554,20 @@ class VedaliaService:
                 handle.cfg, handle.state,
                 mass_coverage=mass_coverage, max_topics=max_topics)
             topics = core
+        timer = timers.DeviceTimer(
+            _OP_SECONDS, op="view", backend=handle.backend)
+        timer.start()
         topic_ids = [int(t) for t in topics]
         view = views_lib.build_view(
             handle.prep, handle.state, topic_ids, top_n=top_n)
+        payload = view.to_json()
+        timer.stop()  # host-side op: nothing async to wait out
+        _VIEW_BYTES.observe(len(payload))
         return ViewResponse(
             handle_id=handle.handle_id,
             view=view,
             topic_ids=topic_ids,
-            payload=view.to_json(),
+            payload=payload,
             valid=view.validate(),
         )
 

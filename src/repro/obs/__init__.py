@@ -1,0 +1,23 @@
+"""Unified observability: metrics registry, wire-propagated traces, timers.
+
+One import surface for every tier:
+
+    from repro import obs
+    from repro.obs import metrics, trace, timers
+
+    obs.enable()                              # default is off (zero-cost)
+    with trace.span("scheduler.refit", shard=0):
+        _FIT_SECONDS.observe(dt, backend="pallas")
+
+See `repro.obs.config` for the switch contract, `repro.obs.metrics` for
+the registry, `repro.obs.trace` for spans + Chrome/JSONL export, and
+`repro.obs.timers` for `block_until_ready`-aware timing.
+"""
+
+from repro.obs import metrics, timers, trace  # noqa: F401  (re-exports)
+from repro.obs.config import disable, enable, enabled, scope
+
+__all__ = [
+    "enable", "disable", "enabled", "scope",
+    "metrics", "trace", "timers",
+]

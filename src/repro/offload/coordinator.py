@@ -36,7 +36,20 @@ from repro.api.client import VedaliaClient
 from repro.chital.marketplace import Marketplace
 from repro.chital.matching import MATCHERS, BuyerRequest, Seller
 from repro.chital.verification import Submission
+from repro.obs import metrics, trace
 from repro.offload.fleet import DeviceFleet, OffloadTask
+
+_LEASES = metrics.counter(
+    "vedalia_offload_leases_total",
+    "Lease outcomes: adopted, fallback_unmatched, fallback_rejected.",
+    labels=("outcome",))
+_VALIDATION_FAILURES = metrics.counter(
+    "vedalia_offload_validation_failures_total",
+    "Uploads rejected by the server-side validation stage.")
+_LEASE_EVENTS = metrics.counter(
+    "vedalia_offload_lease_events_total",
+    "Mid-lease fleet events (churned, timed_out).",
+    labels=("event",))
 
 #: Buyer ids live in their own range so fleet device ids never collide.
 BUYER_ID_BASE = 1_000_000
@@ -130,6 +143,13 @@ class OffloadCoordinator:
         return self.lease_timeout_factor * work / self.fleet.min_speed
 
     def _lease(self, shard_id, client, status, num_sweeps, now) -> None:
+        with trace.span("offload.lease", shard=shard_id,
+                        product=status.product_id) as sp:
+            self._lease_traced(
+                shard_id, client, status, num_sweeps, now, sp)
+
+    def _lease_traced(
+            self, shard_id, client, status, num_sweeps, now, sp) -> None:
         task = OffloadTask(
             task_id=self._next_task,
             shard_id=shard_id,
@@ -166,6 +186,8 @@ class OffloadCoordinator:
             self.stats.adopted += 1
             if not self.fleet.devices[winner.seller_id].honest:
                 self.stats.adopted_phony += 1
+            _LEASES.inc(outcome="adopted")
+            sp.set(outcome="adopted", device=winner.seller_id)
             return
 
         # Fallback: the marketplace produced nothing adoptable (no pair,
@@ -173,8 +195,12 @@ class OffloadCoordinator:
         # verification) — the server re-fits itself so views never stall.
         if rec.match is None:
             self.stats.fallback_unmatched += 1
+            outcome = "fallback_unmatched"
         else:
             self.stats.fallback_rejected += 1
+            outcome = "fallback_rejected"
+        _LEASES.inc(outcome=outcome)
+        sp.set(outcome=outcome)
         client.refine(task.handle_id, num_sweeps, backend="auto")
         self.stats.server_sweep_work += float(num_sweeps * task.tokens)
 
@@ -191,8 +217,10 @@ class OffloadCoordinator:
             deadline=self._deadline(task))
         if run.churned:
             self.stats.churned += 1
+            _LEASE_EVENTS.inc(event="churned")
         if run.timed_out:
             self.stats.lease_timeouts += 1
+            _LEASE_EVENTS.inc(event="timed_out")
         if not run.completed:
             return run.submission
         if self.fleet.devices[seller.seller_id].honest:
@@ -208,6 +236,7 @@ class OffloadCoordinator:
         self.stats.server_sweep_work += VALIDATION_COST_SWEEPS * task.tokens
         if not check.valid:
             self.stats.invalid_submissions += 1
+            _VALIDATION_FAILURES.inc()
             return dataclasses.replace(run.submission, valid=False)
         return run.submission
 

@@ -33,8 +33,28 @@ import numpy as np
 
 from repro.core import codec
 from repro.core.types import Corpus, LDAConfig, LDAState, init_state
+from repro.obs import metrics, timers
+from repro.pserver import sync as sync_lib
 from repro.pserver import topology
 from repro.pserver.sweep import make_pserver_program
+
+#: Sync accounting happens here, the host-side launch boundary — inside
+#: the compiled shard_map program there is no host to count on. Bytes are
+#: the analytic per-device cost of `pserver.sync` (what the wire would
+#: carry), not a measured transport.
+_SYNCS = metrics.counter(
+    "vedalia_pserver_syncs_total",
+    "Stale-synchronous model syncs executed (full windows only).")
+_SYNC_BYTES = metrics.counter(
+    "vedalia_pserver_sync_bytes_total",
+    "Analytic per-device bytes moved by pserver syncs.")
+_STALENESS = metrics.gauge(
+    "vedalia_pserver_staleness",
+    "Configured sweeps-per-sync window of the last launch.")
+_FIT_SECONDS = metrics.histogram(
+    "vedalia_pserver_fit_seconds",
+    "Wall time of one pserver program launch (device-synced).",
+    labels=("local",))
 
 
 class PServerFit:
@@ -137,10 +157,22 @@ class PServerFit:
         pad_rows = plan.n_workers * plan.d_local - cfg.num_docs
         n_dt_p = jnp.pad(real.n_dt, ((0, pad_rows), (0, 0)))
 
+        timer = timers.DeviceTimer(
+            _FIT_SECONDS, local=self._local()).start()
         with mesh:
             z_p, n_dt_p, n_wt, n_t = prog(
                 jnp.asarray(plan.docs_l), jnp.asarray(plan.words_l),
                 z_p, wts_p, sup, n_dt_p, cache0, real.n_t, keys)
+        timer.sync(n_wt)
+        # Sync accounting mirrors the program's schedule: one model sync
+        # per *full* staleness window (`divmod` in sweep.py — tail sweeps
+        # run on stale reads and never pay a trailing sync).
+        num_syncs = int(keys.shape[0]) // staleness
+        if num_syncs:
+            _SYNCS.inc(num_syncs)
+            _SYNC_BYTES.inc(num_syncs * sync_lib.sync_bytes_per_device(
+                plan.n_workers, plan.cap, cfg.num_topics))
+        _STALENESS.set(staleness)
         z = jnp.take(z_p, jnp.asarray(plan.inv))
         return LDAState(z=z, n_dt=n_dt_p[: cfg.num_docs],
                         n_wt=n_wt[: cfg.vocab_size], n_t=n_t)

@@ -37,6 +37,21 @@ import jax.numpy as jnp
 
 from repro.core import batch as batch_lib
 from repro.core.types import Corpus, LDAConfig, LDAState
+from repro.obs import metrics
+
+#: Padding waste is the honest cost of the power-of-two shape ladder:
+#: every padded token slot runs the sweep like a real one. The pair of
+#: counters gives the waste fraction without a separate ratio metric.
+_BUCKET_MODELS = metrics.histogram(
+    "vedalia_batch_bucket_models",
+    "Models stacked into each batched launch.",
+    labels=(), buckets=metrics.COUNT_BUCKETS)
+_PADDED_TOKENS = metrics.counter(
+    "vedalia_batch_padded_tokens_total",
+    "Token slots spent on padding across batched launches.")
+_REAL_TOKENS = metrics.counter(
+    "vedalia_batch_real_tokens_total",
+    "Real (unpadded) tokens swept by batched launches.")
 
 #: Token-length padding quantum: corpus lengths round up to a power-of-two
 #: multiple of this, which also keeps the fused kernel's token blocks full.
@@ -115,6 +130,10 @@ def _run_bucket(
     b_corps = [corpora[i] for i in idxs]
     n_pad = length_bucket(max(c.num_tokens for c in b_corps))
     d_pad = doc_bucket(max(c.num_docs for c in b_cfgs))
+    real_tokens = sum(c.num_tokens for c in b_corps)
+    _BUCKET_MODELS.observe(len(idxs))
+    _REAL_TOKENS.inc(real_tokens)
+    _PADDED_TOKENS.inc(len(idxs) * n_pad - real_tokens)
     bcfg = batch_lib.batch_cfg(b_cfgs, d_pad)
     stacked_c = batch_lib.stack_corpora(b_corps, n_pad)
     stacked_s = None

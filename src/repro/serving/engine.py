@@ -14,13 +14,13 @@ offload is enabled (see repro.chital and examples/serve_reviews.py).
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+from repro.obs import timers
 from repro.serving.scheduler import WaveScheduler
 
 
@@ -92,16 +92,16 @@ class Engine(WaveScheduler):
         prompts = jnp.asarray(np.stack([r.prompt for r in wave]), jnp.int32)
         batch = {"tokens": prompts, **self._extra_inputs(b)}
 
-        t0 = time.time()
+        t0 = timers.now()
         cache, logits = self._prefill(self.params, batch)
         logits = jax.block_until_ready(logits)
-        prefill_s = time.time() - t0
+        prefill_s = timers.now() - t0
 
         max_new = max(r.max_new_tokens for r in wave)
         temp = wave[0].temperature  # uniform within a wave (bucket_key)
         out = np.zeros((b, max_new), np.int32)
         tok = self._sample(logits, temp)
-        t1 = time.time()
+        t1 = timers.now()
         for i in range(max_new):
             out[:, i] = np.asarray(tok)
             if i == max_new - 1:
@@ -110,7 +110,7 @@ class Engine(WaveScheduler):
                 self.params, cache, tok, jnp.int32(plen + i))
             tok = self._sample(logits, temp)
         jax.block_until_ready(tok)
-        decode_s = time.time() - t1
+        decode_s = timers.now() - t1
 
         wave_id = self._waves_served
         self._waves_served += 1

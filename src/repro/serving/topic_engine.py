@@ -20,12 +20,12 @@ are the two concrete faces of `serving.scheduler.WaveScheduler`.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional
 
 from repro.api.client import FitResult, VedaliaClient, ViewResult
 from repro.api.protocol import RemoteError
 from repro.api.service import FitRequest
+from repro.obs import timers
 from repro.serving.scheduler import WaveScheduler
 
 
@@ -115,7 +115,7 @@ class TopicEngine(WaveScheduler):
             return self._run_batched_wave(wave, backend)
         results = []
         for req in wave:
-            t0 = time.time()
+            t0 = timers.now()
             fit = self.client.fit(
                 req.reviews,
                 num_topics=req.num_topics,
@@ -132,7 +132,7 @@ class TopicEngine(WaveScheduler):
                 fit=fit,
                 view=view,
                 perplexity=fit.perplexity,
-                fit_s=time.time() - t0,
+                fit_s=timers.now() - t0,
             ))
         return results
 
@@ -142,7 +142,7 @@ class TopicEngine(WaveScheduler):
         """One `fit_batch` call for the whole wave (the bucket key
         guarantees the requests share every fit parameter). `fit_s` is the
         amortized per-model share of the batch wall time."""
-        t0 = time.time()
+        t0 = timers.now()
         fits = self.client.fit_batch(
             [req.reviews for req in wave],
             num_topics=wave[0].num_topics,
@@ -153,7 +153,7 @@ class TopicEngine(WaveScheduler):
             backend=backend,
             num_sweeps=wave[0].num_sweeps,
         )
-        fit_s = (time.time() - t0) / len(wave)
+        fit_s = (timers.now() - t0) / len(wave)
         return [
             TopicResult(
                 uid=req.uid,

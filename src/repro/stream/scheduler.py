@@ -51,8 +51,26 @@ from repro.api.client import VedaliaClient
 from repro.api.protocol import RemoteError
 from repro.core import views as views_lib
 from repro.core.rlda import Review
+from repro.obs import config as obs_config
+from repro.obs import metrics, trace
 from repro.stream.router import StreamRouter
 from repro.stream.sources import ReviewEvent
+
+#: `SchedulerStats` counters published as labelled gauges (gauges, not
+#: counters: the stats object is the source of truth and restores from
+#: snapshots — the gauge mirrors whatever it says now).
+_SCHED_STAT = metrics.gauge(
+    "vedalia_scheduler_stat",
+    "IncrementalScheduler counters, one series per stat field.",
+    labels=("stat",))
+_STALENESS_P = metrics.gauge(
+    "vedalia_scheduler_staleness_seconds",
+    "View-staleness percentiles over the sliding sample window.",
+    labels=("quantile",))
+_QUEUE_DEPTH = metrics.gauge(
+    "vedalia_router_queue_depth",
+    "Per-shard router queue depth after the last scheduler step.",
+    labels=("shard",))
 
 REFIT_POLICIES = ("drift", "always", "never")
 
@@ -222,6 +240,16 @@ class IncrementalScheduler:
 
     def step(self, now: float) -> None:
         """Drain router queues and run fit/ingest/apply decisions at `now`."""
+        if not obs_config._enabled:
+            return self._step(now)
+        # The step span is the trace root of everything this window does:
+        # ingests, updates, and (via `_flush_refits`) refits and offload
+        # leases all hang off one trace id.
+        with trace.span("scheduler.step", now=now):
+            self._step(now)
+        self.publish_metrics()
+
+    def _step(self, now: float) -> None:
         for sid in self.router.shard_ids:
             events = self.router.drain(sid)
             by_product: dict[int, list[ReviewEvent]] = {}
@@ -396,7 +424,9 @@ class IncrementalScheduler:
                 continue
             by_shard.setdefault(status.shard_id, []).append(status)
         for sid, statuses in by_shard.items():
-            launches = self._execute_refits(sid, statuses, now)
+            with trace.span("scheduler.refit", shard=sid,
+                            num_products=len(statuses)):
+                launches = self._execute_refits(sid, statuses, now)
             self.stats.refits += len(statuses)
             self.stats.refit_launches += launches
             self.stats.coalesced_refits += max(0, len(statuses) - launches)
@@ -439,6 +469,22 @@ class IncrementalScheduler:
         status.signatures = {
             t.topic_id: views_lib.topic_signature(t) for t in view.topics
         }
+
+    def publish_metrics(self) -> None:
+        """Mirror `SchedulerStats` and the router's queue depths into the
+        obs registry (gauges). Runs after every step while obs is enabled;
+        call it directly for a final end-of-stream reading."""
+        if not obs_config._enabled:
+            return
+        for field in dataclasses.fields(SchedulerStats):
+            if field.name == "staleness":
+                continue
+            _SCHED_STAT.set(
+                float(getattr(self.stats, field.name)), stat=field.name)
+        _STALENESS_P.set(self.stats.staleness_p(50), quantile="p50")
+        _STALENESS_P.set(self.stats.staleness_p(99), quantile="p99")
+        for sid, depth in self.router.stats().depths.items():
+            _QUEUE_DEPTH.set(float(depth), shard=sid)
 
     def _guard_ppx(self, status: ProductStatus) -> Optional[float]:
         if not status.heldout:

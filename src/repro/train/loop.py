@@ -5,7 +5,6 @@ Used by examples/ (CPU, reduced configs) and launch/train.py (mesh path).
 
 from __future__ import annotations
 
-import time
 from typing import Callable, Optional
 
 import jax
@@ -13,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.data.lm import batches_for
 from repro.models import model as M
+from repro.obs import timers
 from repro.train import checkpoint as ckpt_lib
 from repro.train.optim import OptConfig, make_optimizer
 from repro.train.step import make_train_step
@@ -42,7 +42,7 @@ def train(
 
     data = batches_for(cfg, seq_len, global_batch, seed=seed)
     history = []
-    t0 = time.time()
+    t0 = timers.now()  # monotonic: wall_s can't go negative on an NTP step
     for step, batch in zip(range(num_steps), data):
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         params, opt_state, metrics = step_fn(
@@ -51,7 +51,7 @@ def train(
         if step % log_every == 0 or step == num_steps - 1:
             m = {k: float(v) for k, v in metrics.items()}
             m["step"] = step
-            m["wall_s"] = time.time() - t0
+            m["wall_s"] = timers.now() - t0
             history.append(m)
             if on_metrics:
                 on_metrics(step, m)
