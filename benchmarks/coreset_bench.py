@@ -38,8 +38,7 @@ def run(quick: bool = False) -> dict:
     keep[np.asarray(core, int)] = True
     n_wt = np.asarray(st.n_wt) * keep[None, :]
     n_dt = np.asarray(st.n_dt) * keep[None, :]
-    if prep.cfg.w_bits is not None:
-        pass  # counts already fixed point; masking zeros is representable
+    # Stored units either way (fixed-point masking by zeros is exact).
     st_core = LDAState(z=st.z, n_dt=jnp.asarray(n_dt), n_wt=jnp.asarray(n_wt),
                        n_t=jnp.asarray(n_wt.sum(0)))
     p_core = float(perplexity.perplexity(prep.cfg, st_core, prep.corpus))

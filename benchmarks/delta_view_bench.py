@@ -10,12 +10,19 @@ records the actual wire sizes:
   * delta sync of an *unchanged* model (must carry 0 topic payloads);
   * delta sync after a small incremental update vs the full sync a
     cursor-less client would have paid at the same moment —
-    `delta_ratio` = delta bytes / full bytes, the acceptance gate (< 1.0).
+    `delta_ratio` = delta bytes / full bytes, the acceptance gate (< 1.0);
+  * the same delta sync with the version-2 int8 quantized topic payload
+    (`quant="int8"`) — gates `quantized < unquantized delta < full` and
+    quantized <= 0.5x the unquantized delta, at <= 1% held-out perplexity
+    delta for the int8-quantized count table.
 """
 
 from __future__ import annotations
 
+import numpy as np
+
 from repro.api import VedaliaClient
+from repro.core import codec, quant, rlda
 from repro.data import reviews
 
 
@@ -53,6 +60,18 @@ def run(quick: bool = False) -> dict:
     delta_after = client.view(hid, since=unchanged.cursor, top_n=10)
     ratio = delta_after.payload_bytes / max(full_after.payload_bytes, 1)
 
+    # The same delta sync, opted into the version-2 int8 topic payload.
+    # Cursor signatures are computed from the unquantized view on both
+    # sides, so the *set* of re-sent topics is identical — only the
+    # per-topic encoding shrinks.
+    delta_q = client.view(hid, since=unchanged.cursor, top_n=10,
+                          quant="int8")
+    q_ratio = delta_q.payload_bytes / max(delta_after.payload_bytes, 1)
+    q_saving = delta_after.payload_bytes / max(delta_q.payload_bytes, 1)
+
+    ppl_delta = _quant_ppl_delta(
+        client, hid, _reviews(max(30, n_reviews // 5), vocab, seed=123))
+
     out = {
         "num_reviews": n_reviews,
         "new_reviews": new_reviews,
@@ -64,6 +83,10 @@ def run(quick: bool = False) -> dict:
         "delta_after_update_bytes": delta_after.payload_bytes,
         "delta_after_update_topics": len(delta_after.topics),
         "delta_ratio": round(ratio, 4),
+        "quantized_delta_bytes": delta_q.payload_bytes,
+        "quantized_ratio": round(q_ratio, 4),
+        "quantized_saving": round(q_saving, 4),
+        "quant_ppl_delta": round(ppl_delta, 6),
     }
     print(f"  full sync: {full.payload_bytes} bytes "
           f"({len(full.topics)} topics)")
@@ -74,11 +97,56 @@ def run(quick: bool = False) -> dict:
           f"{full_after.payload_bytes} bytes -> ratio {ratio:.3f} "
           f"({len(delta_after.topics)} of {len(delta_after.topic_ids)} "
           f"topics re-sent)")
+    print(f"  int8 delta: {delta_q.payload_bytes} vs unquantized "
+          f"{delta_after.payload_bytes} bytes -> ratio {q_ratio:.3f}; "
+          f"held-out ppl delta {ppl_delta:.2%}")
     assert len(unchanged.topics) == 0, (
         "delta view of an unchanged model must transmit 0 topic payloads")
     assert ratio < 1.0, (
         f"delta view must be smaller than a full resend (ratio {ratio:.3f})")
+    assert (delta_q.payload_bytes < delta_after.payload_bytes
+            < full_after.payload_bytes), (
+        f"payload ordering must hold: quantized {delta_q.payload_bytes} < "
+        f"delta {delta_after.payload_bytes} < full "
+        f"{full_after.payload_bytes}")
+    assert q_ratio <= 0.5, (
+        f"quantized delta view must be <= 0.5x the unquantized delta "
+        f"(ratio {q_ratio:.3f})")
+    assert ppl_delta <= 0.01, (
+        f"int8 count-table quantization must cost <= 1% held-out "
+        f"perplexity (delta {ppl_delta:.2%})")
     return out
+
+
+def _quant_ppl_delta(client, hid, heldout) -> float:
+    """Held-out perplexity delta of the int8-quantized count table.
+
+    Both sides run the same posterior-predictive formula as the server's
+    `heldout_perplexity` — the only difference is whether `n_wt` went
+    through the int8 quantize/dequantize round-trip — so the delta
+    isolates the quantization cost and nothing else.
+    """
+    exp = client.export_model(hid)
+    cfg = exp.cfg
+    sc = codec.codec_for(cfg)
+    n_wt = sc.decode_array_np(exp.state.n_wt)
+    n_t = sc.decode_array_np(exp.state.n_t)
+    prep = rlda.prepare(list(heldout), base_vocab=exp.base_vocab,
+                        num_topics=cfg.num_topics, alpha=cfg.alpha,
+                        beta=cfg.beta, w_bits=cfg.w_bits, seed=0)
+    words = np.asarray(prep.corpus.words)
+    wts = np.asarray(prep.corpus.weights, np.float64)
+    theta_bar = (n_t + cfg.alpha) / (n_t.sum() + cfg.alpha * cfg.num_topics)
+
+    def ppl(table):
+        phi = (table + cfg.beta) / (n_t[None, :] + cfg.beta_bar)
+        p = phi[words] @ theta_bar
+        ll = float(np.sum(wts * np.log(np.maximum(p, 1e-30))))
+        return float(np.exp(-ll / max(wts.sum(), 1e-9)))
+
+    exact = ppl(n_wt)
+    quantized = ppl(quant.fake_quantize_rows(n_wt, 8))
+    return abs(quantized - exact) / max(exact, 1e-9)
 
 
 if __name__ == "__main__":

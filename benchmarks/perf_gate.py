@@ -80,6 +80,14 @@ METRICS = {
     "obs": [
         "overhead_ok",
     ],
+    # Quantized delta views: bytes advantage of the version-2 int8 topic
+    # payload over the unquantized delta of the same sync (ratio, higher
+    # is better). The hard gates (quantized < delta < full payload
+    # ordering, quantized <= 0.5x delta, <= 1% held-out perplexity delta)
+    # are asserted inside delta_view_bench on every run.
+    "delta_view": [
+        "quantized_saving",
+    ],
 }
 
 

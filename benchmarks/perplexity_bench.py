@@ -38,11 +38,9 @@ def _lda_fit(corp, vocab, k, sweeps, seed=0):
 
 
 def _marginalize(prep, st, base_vocab, k):
-    n_wt_aug = np.asarray(st.n_wt, np.float64)
-    if prep.cfg.w_bits is not None:
-        from repro.core import fractional
+    from repro.core import codec
 
-        n_wt_aug = n_wt_aug / fractional.scale(prep.cfg.w_bits)
+    n_wt_aug = codec.codec_for(prep.cfg).decode_array_np(st.n_wt)
     base, _ = rlda.strip_rating(np.arange(prep.cfg.vocab_size))
     n_wt = np.zeros((base_vocab, k))
     np.add.at(n_wt, base, n_wt_aug)
@@ -57,14 +55,12 @@ def _tier_conditional_perplexity(prep, st, corp) -> float:
     This is the prediction task RLDA's structure is built for — a user
     reading 1-star reviews wants the 1-star topics (paper §3.1).
     """
-    from repro.core import fractional
+    from repro.core import codec
 
     cfg = st_cfg = prep.cfg
-    n_dt = np.asarray(st.n_dt, np.float64)
-    n_wt = np.asarray(st.n_wt, np.float64)
-    if cfg.w_bits is not None:
-        s = fractional.scale(cfg.w_bits)
-        n_dt, n_wt = n_dt / s, n_wt / s
+    sc = codec.codec_for(cfg)
+    n_dt = sc.decode_array_np(st.n_dt)
+    n_wt = sc.decode_array_np(st.n_wt)
     alpha_bar = cfg.alpha * cfg.num_topics
     theta = (n_dt + cfg.alpha) / (n_dt.sum(1, keepdims=True) + alpha_bar)
     phi_aug = (n_wt + cfg.beta) / (n_wt.sum(0, keepdims=True)
@@ -133,11 +129,9 @@ def run(quick: bool = False) -> dict:
 
         # (a) marginal perplexity (tier-summed counts) — the "structure tax"
         n_wt = _marginalize(prep, st, vocab, k)
-        n_dt = np.asarray(st.n_dt, np.float64)
-        if prep.cfg.w_bits is not None:
-            from repro.core import fractional
+        from repro.core import codec
 
-            n_dt = n_dt / fractional.scale(prep.cfg.w_bits)
+        n_dt = codec.codec_for(prep.cfg).decode_array_np(st.n_dt)
         st_m = LDAState(z=st.z, n_dt=jnp.asarray(n_dt, jnp.float32),
                         n_wt=jnp.asarray(n_wt, jnp.float32),
                         n_t=jnp.asarray(n_wt.sum(0), jnp.float32))

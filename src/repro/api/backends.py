@@ -66,15 +66,26 @@ class SamplerCapabilities:
                     multi-host), "phone" (sequential, cache-friendly).
     proposal_based: draws from a stale proposal corrected by MH rather
                     than the exact conditional (affects mixing per sweep).
+    quant_modes:    the `QuantSpec` modes this backend honors in its hot
+                    path. Every backend speaks stored state (f32/fixed)
+                    at the boundary; backends that additionally read
+                    *packed* sweep-stale tables (int8/int4 codes + per-row
+                    scales, dequantized in-kernel) list those modes too.
+                    A packed-spec config on a backend without packed
+                    support still fits correctly — it simply runs on the
+                    live f32/fixed representation.
     """
 
     warm_start: bool = True
     weighted: bool = True
     device_kind: str = "tpu"
     proposal_based: bool = False
+    quant_modes: tuple = ("f32", "fixed")
 
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        d["quant_modes"] = list(self.quant_modes)
+        return d
 
 
 @runtime_checkable
@@ -246,7 +257,12 @@ class JnpSampler(_BaseSampler):
                          block=self.block)
 
 
-@register_backend("pallas", SamplerCapabilities(device_kind="tpu"))
+@register_backend(
+    "pallas",
+    SamplerCapabilities(
+        device_kind="tpu",
+        quant_modes=("f32", "fixed", "int8", "int4_packed")),
+)
 class PallasSampler(_BaseSampler):
     """The fused Pallas score+Gumbel-max kernel (interpret mode on CPU)."""
 
@@ -365,7 +381,9 @@ class PServerSampler(_BaseSampler):
 
 @register_backend(
     "alias",
-    SamplerCapabilities(device_kind="tpu", proposal_based=True),
+    SamplerCapabilities(
+        device_kind="tpu", proposal_based=True,
+        quant_modes=("f32", "fixed", "int8", "int4_packed")),
 )
 class AliasSampler(_BaseSampler):
     """AliasLDA sweep-parallel MH (`core.alias` / `kernels.alias_mh`).

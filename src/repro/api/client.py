@@ -24,12 +24,20 @@ import jax.numpy as jnp
 
 from repro.api import protocol
 from repro.api.server import VedaliaServer
+from repro.core import codec as codec_lib
 from repro.core.rlda import Review
 from repro.core.types import Corpus, LDAConfig, LDAState
-from repro.core.views import ModelView, TopicView
+from repro.core.views import ModelView, TopicView, decode_topic_q
+from repro.core.quant import QuantSpec
 from repro.obs import trace
 
 Transport = Callable[[str], str]
+
+
+def _upload_spec(quant: Optional[str]):
+    """A `quant` keyword ("int8" / "int4_packed" / None) -> QuantSpec or
+    None, validated client-side so a typo fails before anything ships."""
+    return None if quant is None else QuantSpec.from_wire(quant)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -409,10 +417,21 @@ class VedaliaClient:
 
     # -- offload tier --------------------------------------------------------
 
-    def export_model(self, handle_id: int) -> ExportedModel:
+    def export_model(self, handle_id: int,
+                     *, quant: Optional[str] = None) -> ExportedModel:
         """Check a served model out for local computation: config, corpus
-        and current state cross the wire; the handle keeps serving."""
-        p = self._call("export_model", {"handle_id": handle_id})
+        and current state cross the wire; the handle keeps serving.
+
+        `quant` ("int8" / "int4_packed") asks the server to pack the big
+        count tables. The download shrinks by ~4x/8x; the returned state is
+        still *exact* because `z` ships raw and the counts are scatter-
+        rebuilt from it locally (same rule the server applies to quantized
+        uploads).
+        """
+        payload: dict = {"handle_id": handle_id}
+        if quant is not None:
+            payload["quant"] = quant
+        p = self._call("export_model", payload)
         c = p["cfg"]
         cfg = LDAConfig(
             num_topics=int(c["num_topics"]),
@@ -428,12 +447,16 @@ class VedaliaClient:
             weights=jnp.asarray(protocol.decode_array(p["corpus"]["weights"])),
         )
         arrays = protocol.decode_state_arrays(p["state"])
-        state = LDAState(
-            z=jnp.asarray(arrays["z"]),
-            n_dt=jnp.asarray(arrays["n_dt"]),
-            n_wt=jnp.asarray(arrays["n_wt"]),
-            n_t=jnp.asarray(arrays["n_t"]),
-        )
+        if protocol.state_arrays_quantized(p["state"]):
+            state = codec_lib.rebuild_state(
+                cfg, corpus, jnp.asarray(arrays["z"]))
+        else:
+            state = LDAState(
+                z=jnp.asarray(arrays["z"]),
+                n_dt=jnp.asarray(arrays["n_dt"]),
+                n_wt=jnp.asarray(arrays["n_wt"]),
+                n_t=jnp.asarray(arrays["n_t"]),
+            )
         return ExportedModel(
             handle_id=int(p["handle_id"]), cfg=cfg, corpus=corpus,
             state=state, base_vocab=int(p["base_vocab"]),
@@ -451,12 +474,16 @@ class VedaliaClient:
         claim_tol: float = 0.01,
         backend: Optional[str] = None,
         seed: Optional[int] = None,
+        quant: Optional[str] = None,
     ) -> SpotCheckResult:
         """Ask the server to validate (and optionally re-Gibbs) a locally
-        computed state for `handle_id` without adopting it."""
+        computed state for `handle_id` without adopting it. `quant` packs
+        the uploaded count tables (the server rebuilds exact counts from
+        the raw `z` before validating)."""
         p = self._call("spot_check", {
             "handle_id": handle_id,
-            "state": protocol.encode_state_arrays(state),
+            "state": protocol.encode_state_arrays(
+                state, spec=_upload_spec(quant)),
             "claimed_perplexity": claimed_perplexity,
             "num_sweeps": num_sweeps,
             "claim_tol": claim_tol,
@@ -476,13 +503,17 @@ class VedaliaClient:
         )
 
     def adopt_state(
-        self, handle_id: int, state, *, sweeps_run: int = 0
+        self, handle_id: int, state, *, sweeps_run: int = 0,
+        quant: Optional[str] = None,
     ) -> FitResult:
         """Swap a device-computed state (stored units) into the *existing*
-        served handle; the server re-validates before adopting."""
+        served handle; the server re-validates before adopting. `quant`
+        packs the uploaded count tables (the server rebuilds exact counts
+        from the raw `z` before validating)."""
         return self._fit_result(self._call("adopt_state", {
             "handle_id": handle_id,
-            "state": protocol.encode_state_arrays(state),
+            "state": protocol.encode_state_arrays(
+                state, spec=_upload_spec(quant)),
             "sweeps_run": sweeps_run,
         }))
 
@@ -561,10 +592,18 @@ class VedaliaClient:
         max_topics: Optional[int] = None,
         rel_mass_tol: Optional[float] = None,
         weight_tol: Optional[float] = None,
+        quant: Optional[str] = None,
     ) -> ViewResult:
         """One view sync. `since=None` -> full view; `since=<cursor>` ->
         delta against that cursor. Either way the response carries the next
-        cursor (when a session exists)."""
+        cursor (when a session exists).
+
+        `quant` ("int8" / "int4_packed") opts this sync into the
+        version-2 quantized topic payload: word weights arrive as packed
+        codes + one scale per topic, decoded transparently here. Delta
+        semantics are unchanged — drift is judged server-side on exact
+        weights.
+        """
         payload = {
             "handle_id": handle_id,
             "session_id": self._ensure_session(),
@@ -578,6 +617,8 @@ class VedaliaClient:
             payload["rel_mass_tol"] = rel_mass_tol
         if weight_tol is not None:
             payload["weight_tol"] = weight_tol
+        if quant is not None:
+            payload["quant"] = _upload_spec(quant).to_wire()
         with trace.span("client.view"):
             raw = self._transport(protocol.make_request(
                 "view", payload, trace=trace.wire_context()))
@@ -595,10 +636,16 @@ class VedaliaClient:
                 raw = self._transport(protocol.make_request(
                     "view", payload, trace=trace.wire_context()))
             p = protocol.parse_response(raw, expect_kind="view")
+        resp_mode = p.get("quant")
+        if resp_mode is not None:
+            bits = QuantSpec.from_wire(resp_mode).bits
+            topics_out = [decode_topic_q(d, bits) for d in p["topics"]]
+        else:
+            topics_out = [TopicView(**d) for d in p["topics"]]
         result = ViewResult(
             handle_id=int(p["handle_id"]),
             topic_ids=[int(t) for t in p["topic_ids"]],
-            topics=[TopicView(**d) for d in p["topics"]],
+            topics=topics_out,
             removed_topic_ids=[int(t) for t in p["removed_topic_ids"]],
             delta=bool(p["delta"]),
             resync=bool(p["resync"]),

@@ -1,11 +1,33 @@
-"""Public re-export of the shared fixed-point state codec.
+"""`repro.api.codec` — the one documented home of Vedalia's two codecs.
 
-The implementation lives in `repro.core.codec` (it sits *below* the
-samplers in the layering: core modules may depend on it without reaching
-up into the `repro.api` facade). This module is the stable public name.
+Historically this codebase grew two parallel array codecs and callers had
+to know which module owned which:
+
+1. **State codec** (`repro.core.codec`): stored-unit count tables <-> real
+   units — the paper §4.3 fixed-point story, now generalized by
+   :class:`QuantSpec` (modes ``f32`` / ``fixed`` / ``int8`` /
+   ``int4_packed``) and :class:`StateCodec` (resolve one per config with
+   :func:`codec_for`).
+2. **Wire array codec** (`repro.api.protocol`): ndarray <-> JSON-safe dict
+   — raw b64 bytes, or the versioned quantized form (dtype tag + per-row
+   scales + packed payload) when a packed spec is passed.
+
+This module re-exports both under distinct, documented names, and is the
+import surface serving-layer code should use. The implementations stay
+where the layering puts them (core below the samplers; protocol beside the
+envelopes).
+
+Deprecations: the cfg-threading wrappers `decode_array`/`decode_array_np`
+remain for sampler-facing compatibility, but serving paths should resolve
+a `StateCodec` once (`codec_for(cfg)`) and call its methods — the
+remaining `decode_array_np(cfg, x)` call sites in serving code have been
+migrated and new ones should not be added.
 """
 
 from repro.core.codec import (  # noqa: F401
+    QuantSpec,
+    StateCodec,
+    codec_for,
     decode_array,
     decode_array_np,
     decode_counts,
@@ -13,4 +35,39 @@ from repro.core.codec import (  # noqa: F401
     decode_state,
     encode_state,
     rebuild_state,
+    spec_for,
 )
+
+# Wire array codec (JSON-dict form; raw or quantized — see protocol.py).
+from repro.api.protocol import (  # noqa: F401
+    QUANT_STATE_FIELDS,
+    STATE_FIELDS,
+    decode_array as decode_wire_array,
+    decode_state_arrays,
+    encode_array as encode_wire_array,
+    encode_state_arrays,
+    state_arrays_quantized,
+)
+
+__all__ = [
+    # state codec
+    "QuantSpec",
+    "StateCodec",
+    "codec_for",
+    "spec_for",
+    "decode_array",
+    "decode_array_np",
+    "decode_counts",
+    "decode_counts_np",
+    "decode_state",
+    "encode_state",
+    "rebuild_state",
+    # wire array codec
+    "encode_wire_array",
+    "decode_wire_array",
+    "encode_state_arrays",
+    "decode_state_arrays",
+    "state_arrays_quantized",
+    "STATE_FIELDS",
+    "QUANT_STATE_FIELDS",
+]

@@ -29,6 +29,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.core import quant
 from repro.core.rlda import Review
 
 PROTOCOL_VERSION = 1
@@ -118,20 +119,71 @@ class Overloaded(RuntimeError):
 
 
 # -- tensor / record codecs --------------------------------------------------
+#
+# The array codec is versioned by shape, not by a number: the original
+# (raw) form is {"dtype", "shape", "b64"}; the quantized form (additive —
+# old decoders never receive it unless they asked) is
+#
+#     {"enc": "q", "mode": "int8"|"int4_packed", "dtype": "<orig dtype>",
+#      "shape": [...], "scales": {raw array}, "b64": "<packed codes>"}
+#
+# with per-trailing-axis-row float32 scales and uint8 code payload
+# (nibble-packed for int4, low nibble first — see `repro.core.quant`).
+# `decode_array` transparently handles both forms; servers only *emit* the
+# quantized form when the request opted in, so pre-quant clients keep
+# parsing every payload they can provoke.
 
 
-def encode_array(x) -> dict:
-    """ndarray -> {"dtype", "shape", "b64"} (raw little-endian bytes)."""
+def encode_array(x, spec=None) -> dict:
+    """ndarray -> wire dict.
+
+    Raw form (`spec=None`, the default): {"dtype", "shape", "b64"} with raw
+    little-endian bytes. With a packed `QuantSpec` (mode int8/int4_packed),
+    the lossy quantized form above: per-row scales + packed codes, an
+    integer factor smaller for float/int32 tables.
+    """
     a = np.ascontiguousarray(np.asarray(x))
+    if spec is None or not getattr(spec, "packed", False):
+        return {
+            "dtype": a.dtype.str,
+            "shape": list(a.shape),
+            "b64": base64.b64encode(a.tobytes()).decode("ascii"),
+        }
+    if a.ndim == 0:
+        raise ProtocolError("cannot quantize a 0-d array")
+    codes, scales = quant.quantize_rows(a.astype(np.float32), spec.bits)
     return {
+        "enc": "q",
+        "mode": spec.mode,
         "dtype": a.dtype.str,
         "shape": list(a.shape),
-        "b64": base64.b64encode(a.tobytes()).decode("ascii"),
+        "scales": encode_array(scales),
+        "b64": base64.b64encode(
+            np.ascontiguousarray(codes).tobytes()).decode("ascii"),
     }
 
 
 def decode_array(d: dict) -> np.ndarray:
+    """Wire dict -> ndarray; handles both the raw and quantized forms.
+
+    Quantized payloads dequantize to the original dtype (float dtypes
+    exactly; integer dtypes round to nearest — counts, so non-negative).
+    """
     try:
+        if d.get("enc") == "q":
+            spec = quant.QuantSpec.from_wire(d["mode"])
+            shape = tuple(int(s) for s in d["shape"])
+            k = shape[-1]
+            stored_k = k // 2 + k % 2 if spec.bits == 4 else k
+            codes = np.frombuffer(
+                base64.b64decode(d["b64"]), dtype=np.uint8
+            ).reshape(shape[:-1] + (stored_k,))
+            scales = decode_array(d["scales"])
+            out = quant.dequantize_rows(codes, scales, spec.bits, k)
+            dt = np.dtype(d["dtype"])
+            if dt.kind in "iu":
+                out = np.rint(out)
+            return out.astype(dt)
         buf = base64.b64decode(d["b64"])
         return np.frombuffer(buf, dtype=np.dtype(d["dtype"])).reshape(
             d["shape"]).copy()
@@ -144,15 +196,38 @@ def decode_array(d: dict) -> np.ndarray:
 #: `spot_check`).
 STATE_FIELDS = ("z", "n_dt", "n_wt", "n_t")
 
+#: State fields eligible for packed transport. `z` is the ground truth the
+#: server rebuilds counts from (and spot-checks), so it always ships raw;
+#: `n_t` is one row of K floats — not worth a lossy encode.
+QUANT_STATE_FIELDS = ("n_dt", "n_wt")
 
-def encode_state_arrays(state) -> dict:
-    """LDAState (stored units) -> {"z": {...}, "n_dt": {...}, ...}."""
-    return {name: encode_array(getattr(state, name)) for name in STATE_FIELDS}
+
+def encode_state_arrays(state, spec=None) -> dict:
+    """LDAState (stored units) -> {"z": {...}, "n_dt": {...}, ...}.
+
+    With a packed `spec`, the big count tables (`n_dt`, `n_wt`) ship as
+    quantized arrays; `z` and `n_t` stay raw. Receivers that need exact
+    counts rebuild them from `z` (see `server._decode_state`).
+    """
+    out = {}
+    for name in STATE_FIELDS:
+        field_spec = spec if name in QUANT_STATE_FIELDS else None
+        out[name] = encode_array(getattr(state, name), spec=field_spec)
+    return out
+
+
+def state_arrays_quantized(d: dict) -> bool:
+    """Did any field of a wire state dict use the quantized encoding?"""
+    return any(
+        isinstance(d.get(name), dict) and d[name].get("enc") == "q"
+        for name in STATE_FIELDS)
 
 
 def decode_state_arrays(d: dict) -> dict:
     """Wire state dict -> {name: ndarray}; raises ProtocolError when a
-    field is missing or malformed."""
+    field is missing or malformed. Quantized fields dequantize here —
+    callers that must not trust lossy counts check
+    `state_arrays_quantized` and rebuild from `z`."""
     if not isinstance(d, dict):
         raise ProtocolError("state payload must be a JSON object")
     try:

@@ -37,6 +37,8 @@ from repro.api import backends as backends_mod
 from repro.api import protocol
 from repro.api.backends import available_backends, backend_capabilities
 from repro.api.service import ModelHandle, VedaliaService
+from repro.core import codec as codec_lib
+from repro.core import quant as quant_lib
 from repro.core import rlda, views as views_lib
 from repro.core.types import LDAState
 from repro.obs import config as obs_config
@@ -188,6 +190,18 @@ class VedaliaServer:
             raise protocol.NotFound(f"unknown session_id {sid!r}")
         return self.sessions[sid]
 
+    def _quant_arg(self, payload: dict):
+        """The optional `quant` payload field -> packed QuantSpec or None.
+
+        Quantized encodings are strictly opt-in per request: a server
+        never volunteers them, so clients that predate the field keep
+        receiving (and parsing) raw arrays and version-1 views.
+        """
+        mode = payload.get("quant")
+        if mode is None:
+            return None
+        return quant_lib.QuantSpec.from_wire(mode)  # ValueError on bad mode
+
     def _backend_arg(self, payload: dict):
         name = payload.get("backend")
         if name is not None and name != backends_mod.AUTO \
@@ -218,6 +232,12 @@ class VedaliaServer:
                 for name, caps in backend_capabilities().items()
             },
             "default_backend": self.service.default_backend,
+            # Additive capability advertisement: which packed array
+            # encodings this server can emit on request (`quant` options
+            # of view / export_model / adopt_state / spot_check) and the
+            # newest view format it serves.
+            "quant_modes": list(quant_lib.PACKED_MODES),
+            "view_version": views_lib.VIEW_VERSION,
         }
 
     def _handle_open_session(self, payload: dict) -> dict:
@@ -355,13 +375,28 @@ class VedaliaServer:
         )
         return self._fit_payload(handle)
 
-    def _decode_state(self, payload: dict) -> LDAState:
+    def _decode_state(self, payload: dict,
+                      handle: Optional[ModelHandle] = None) -> LDAState:
         """Wire `state` field -> LDAState (shape checks happen later, in
         `VedaliaService.validate_state`, so malformed submissions come back
-        as a typed `valid=False` instead of a wire error where possible)."""
+        as a typed `valid=False` instead of a wire error where possible).
+
+        Quantized uploads (packed `n_dt`/`n_wt`) are lossy, so their count
+        tables are *not* trusted: `z` is the ground truth and the counts
+        are scatter-rebuilt from it against the handle's corpus before the
+        unchanged validation runs — an honest device's packed upload
+        validates exactly; a fabricated one still fails the re-Gibbs
+        spot-check on `z`.
+        """
         arrays = protocol.decode_state_arrays(payload["state"])
+        z = jnp.asarray(arrays["z"])
+        if handle is not None \
+                and protocol.state_arrays_quantized(payload["state"]) \
+                and z.shape == (handle.model.corpus.num_tokens,):
+            return codec_lib.rebuild_state(
+                handle.cfg, handle.model.corpus, z)
         return LDAState(
-            z=jnp.asarray(arrays["z"]),
+            z=z,
             n_dt=jnp.asarray(arrays["n_dt"]),
             n_wt=jnp.asarray(arrays["n_wt"]),
             n_t=jnp.asarray(arrays["n_t"]),
@@ -372,6 +407,7 @@ class VedaliaServer:
         locally: config, the handle's (token-parallel) corpus, and the
         current stored-unit state — the offload tier's task lease."""
         handle = self._handle_of(payload)
+        spec = self._quant_arg(payload)
         cfg = handle.cfg
         corpus = handle.model.corpus
         return {
@@ -390,7 +426,7 @@ class VedaliaServer:
                 "words": protocol.encode_array(corpus.words),
                 "weights": protocol.encode_array(corpus.weights),
             },
-            "state": protocol.encode_state_arrays(handle.state),
+            "state": protocol.encode_state_arrays(handle.state, spec=spec),
             "sweeps_run": handle.sweeps_run,
             "num_tokens": corpus.num_tokens,
         }
@@ -399,7 +435,7 @@ class VedaliaServer:
         """Validate + recompute-perplexity (+ optional re-Gibbs on a
         throwaway copy) of an uploaded state. Never touches the handle."""
         handle = self._handle_of(payload)
-        state = self._decode_state(payload)
+        state = self._decode_state(payload, handle)
         res = self.service.spot_check(
             handle,
             state,
@@ -423,7 +459,7 @@ class VedaliaServer:
         handle (re-validated server-side regardless of what the caller
         already checked)."""
         handle = self._handle_of(payload)
-        state = self._decode_state(payload)
+        state = self._decode_state(payload, handle)
         self.service.adopt_state(
             handle, state, sweeps_run=int(payload.get("sweeps_run", 0)))
         return self._fit_payload(handle)
@@ -517,6 +553,7 @@ class VedaliaServer:
 
     def _handle_view(self, payload: dict) -> dict:
         handle = self._handle_of(payload)
+        spec = self._quant_arg(payload)
         resp = self.service.view(
             handle,
             topics=payload.get("topics"),
@@ -560,16 +597,28 @@ class VedaliaServer:
             session.store(handle.handle_id, cursor, sigs_now,
                           self.max_cursors_per_session)
 
-        return {
+        # Cursor signatures (`sigs_now`, stored above) always come from the
+        # *unquantized* view, so delta thresholds are judged on exact
+        # weights no matter how the payload is encoded.
+        if spec is not None:
+            topics = [views_lib.encode_topic_q(t, spec.bits)
+                      for t in changed]
+        else:
+            topics = [t.to_dict() for t in changed]
+        out = {
             "handle_id": handle.handle_id,
             "topic_ids": resp.topic_ids,
-            "topics": [t.to_dict() for t in changed],
+            "topics": topics,
             "removed_topic_ids": removed,
             "delta": since is not None and not resync,
             "resync": resync,
             "cursor": cursor,
             "valid": resp.valid,
         }
+        if spec is not None:
+            out["view_version"] = views_lib.VIEW_VERSION
+            out["quant"] = spec.to_wire()
+        return out
 
     def _handle_top_reviews(self, payload: dict) -> dict:
         handle = self._handle_of(payload)

@@ -601,8 +601,9 @@ class VedaliaService:
             list(reviews), base_vocab=handle.prep.base_vocab,
             num_topics=cfg.num_topics, alpha=cfg.alpha, beta=cfg.beta,
             w_bits=cfg.w_bits, seed=self._seed)
-        n_wt = codec.decode_array_np(cfg, handle.state.n_wt)  # (V, K)
-        n_t = codec.decode_array_np(cfg, handle.state.n_t)  # (K,)
+        sc = codec.codec_for(cfg)
+        n_wt = sc.decode_array_np(handle.state.n_wt)  # (V, K)
+        n_t = sc.decode_array_np(handle.state.n_t)  # (K,)
         phi = (n_wt + cfg.beta) / (n_t[None, :] + cfg.beta_bar)
         theta_bar = (n_t + cfg.alpha) / (n_t.sum() + cfg.alpha * cfg.num_topics)
         words = np.asarray(prep.corpus.words)

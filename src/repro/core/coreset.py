@@ -17,22 +17,18 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import fractional
+from repro.core import codec
 from repro.core.types import LDAConfig, LDAState
 
 
 def topic_mass(cfg: LDAConfig, state: LDAState) -> jnp.ndarray:
-    n_t = state.n_t
-    if cfg.w_bits is not None:
-        n_t = fractional.from_fixed(n_t, cfg.w_bits)
+    n_t = codec.decode_array(cfg, state.n_t)
     return n_t / jnp.maximum(n_t.sum(), 1e-9)
 
 
 def topic_informativeness(cfg: LDAConfig, state: LDAState, top_n: int = 20):
     """KL(topic || background) restricted to each topic's top-n words."""
-    n_wt = state.n_wt
-    if cfg.w_bits is not None:
-        n_wt = fractional.from_fixed(n_wt, cfg.w_bits)
+    n_wt = codec.decode_array(cfg, state.n_wt)
     phi = (n_wt + cfg.beta) / (n_wt.sum(0, keepdims=True) + cfg.beta_bar)  # (V,K)
     bg = n_wt.sum(1) + cfg.beta  # background unigram
     bg = bg / bg.sum()  # (V,)

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.quant import QuantSpec
+
 
 @dataclasses.dataclass(frozen=True)
 class LDAConfig:
@@ -32,6 +34,16 @@ class LDAConfig:
     beta: float = 0.01
     # Fixed-point fractional counts (paper §4.3): None => float32 counts.
     w_bits: Optional[int] = None
+    # Full representation spec (repro.core.quant). None => derive from
+    # w_bits; set explicitly to opt read-only tables into int8/int4 packing.
+    quant: Optional[QuantSpec] = None
+
+    @property
+    def quant_spec(self) -> QuantSpec:
+        """The resolved `QuantSpec` (explicit `quant`, else `w_bits`)."""
+        if self.quant is not None:
+            return self.quant
+        return QuantSpec.from_w_bits(self.w_bits)
 
     @property
     def beta_bar(self) -> float:

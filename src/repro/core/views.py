@@ -13,15 +13,39 @@ expected helpfulness/unhelpfulness are count-weighted document averages.
 
 from __future__ import annotations
 
+import base64
 import dataclasses
 import json
 from typing import Optional
 
 import numpy as np
 
-from repro.core import codec
+from repro.core import codec, quant
 from repro.core.rlda import NUM_TIERS, RLDACorpus, strip_rating
 from repro.core.types import LDAState
+
+#: Version of the serialized `ModelView` format. Version 1 is the original
+#: plain JSON topic list (still emitted for unquantized views, still
+#: parsed); version 2 is the enveloped form `{"view_version", "quant",
+#: "topics"}` whose topics may carry int8/int4 word weights.
+VIEW_VERSION = 2
+
+
+class ViewVersionError(ValueError):
+    """A serialized view is from a newer format than this client speaks.
+
+    The typed ``resync`` signal: callers catch this (instead of an opaque
+    parse error) and re-open a full unquantized sync. `got` is the
+    offending wire version; `resync` is always True.
+    """
+
+    def __init__(self, got, speaks: int = VIEW_VERSION):
+        super().__init__(
+            f"view_version {got!r} is newer than this client's "
+            f"{speaks}; full resync required")
+        self.got = got
+        self.speaks = speaks
+        self.resync = True
 
 
 @dataclasses.dataclass
@@ -38,16 +62,84 @@ class TopicView:
         return dataclasses.asdict(self)
 
 
+def encode_topic_q(t: TopicView, bits: int) -> dict:
+    """Compact quantized topic dict: single-letter keys, scalars rounded
+    to display precision, word weights as base64 codes + one scale."""
+    w = np.asarray(t.top_word_weights, np.float32)
+    codes, scales = quant.quantize_rows(w[None, :], bits)
+    return {
+        "t": int(t.topic_id),
+        "p": round(float(t.probability), 6),
+        "r": round(float(t.expected_rating), 4),
+        "h": round(float(t.expected_helpful), 4),
+        "u": round(float(t.expected_unhelpful), 4),
+        "w": [int(x) for x in t.top_words],
+        "q": base64.b64encode(codes.tobytes()).decode("ascii"),
+        "s": float(scales[0]),
+    }
+
+
+def decode_topic_q(d: dict, bits: int) -> TopicView:
+    k = len(d["w"])
+    codes = np.frombuffer(base64.b64decode(d["q"]), np.uint8)[None, :]
+    weights = quant.dequantize_rows(
+        codes, np.asarray([d["s"]], np.float32), bits, k)[0]
+    return TopicView(
+        topic_id=int(d["t"]),
+        probability=float(d["p"]),
+        expected_rating=float(d["r"]),
+        expected_helpful=float(d["h"]),
+        expected_unhelpful=float(d["u"]),
+        top_words=[int(x) for x in d["w"]],
+        top_word_weights=[float(x) for x in weights],
+    )
+
+
 @dataclasses.dataclass
 class ModelView:
     topics: list[TopicView]
 
-    def to_json(self) -> str:
-        return json.dumps([t.to_dict() for t in self.topics])
+    def to_json(self, quant_spec=None) -> str:
+        """Serialize for the wire.
+
+        Default: the version-1 plain topic list (byte-identical to the
+        pre-`view_version` format, so existing payload contracts hold).
+        With a packed `QuantSpec`, the version-2 envelope whose topics
+        carry base64 int8/int4 word-weight codes + one scale each —
+        roughly 2.5x smaller per topic.
+        """
+        if quant_spec is None or not quant_spec.packed:
+            return json.dumps([t.to_dict() for t in self.topics])
+        return json.dumps({
+            "view_version": VIEW_VERSION,
+            "quant": quant_spec.to_wire(),
+            "topics": [encode_topic_q(t, quant_spec.bits)
+                       for t in self.topics],
+        })
 
     @staticmethod
     def from_json(s: str) -> "ModelView":
-        return ModelView(topics=[TopicView(**d) for d in json.loads(s)])
+        """Parse either serialized form.
+
+        Raises :class:`ViewVersionError` (not a shape/parse error) when
+        the payload announces a `view_version` newer than this build —
+        the caller's cue to resync unquantized.
+        """
+        obj = json.loads(s)
+        if isinstance(obj, list):  # version-1 plain list
+            return ModelView(topics=[TopicView(**d) for d in obj])
+        if not isinstance(obj, dict):
+            raise ValueError("serialized view must be a list or object")
+        ver = obj.get("view_version")
+        if ver not in (1, VIEW_VERSION):
+            raise ViewVersionError(ver)
+        mode = obj.get("quant")
+        topics = obj.get("topics", [])
+        if mode is None:
+            return ModelView(topics=[TopicView(**d) for d in topics])
+        spec = quant.QuantSpec.from_wire(mode)
+        return ModelView(
+            topics=[decode_topic_q(d, spec.bits) for d in topics])
 
     def validate(self) -> bool:
         """Chital validation stage (§2.5.5): basic distribution sanity.
@@ -198,7 +290,7 @@ def build_view(
 ) -> ModelView:
     """Compute the streamed model view for a set of (core) topics."""
     cfg = prep.cfg
-    n_dt, n_wt, _ = codec.decode_counts_np(cfg, state)
+    n_dt, n_wt, _ = codec.codec_for(cfg).decode_counts_np(state)
     n_t = n_wt.sum(axis=0)
     total = max(n_t.sum(), 1e-9)
 
@@ -242,7 +334,7 @@ def top_reviews_for_topic(
     prep: RLDACorpus, state: LDAState, topic_id: int, n: int = 5
 ) -> list[int]:
     """Topic-probability-sorted review ids (the ViewPager ordering, §3.4)."""
-    n_dt = codec.decode_array_np(prep.cfg, state.n_dt)
+    n_dt = codec.codec_for(prep.cfg).decode_array_np(state.n_dt)
     theta = (n_dt + prep.cfg.alpha) / (
         n_dt.sum(1, keepdims=True) + prep.cfg.alpha * prep.cfg.num_topics
     )

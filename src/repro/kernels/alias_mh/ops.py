@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import alias as alias_core
-from repro.core import codec
+from repro.core import codec, quant
 from repro.core.types import Corpus, LDAConfig, LDAState
 from repro.kernels.alias_mh.kernel import (
     alias_mh_blocked,
@@ -64,7 +64,17 @@ def mh_resample(
 ) -> jax.Array:
     """One fused proposal+MH pass; returns new z (counts rebuilt by
     caller). `state` is in stored units (int32 fixed point when
-    `cfg.w_bits` is set — rescaled inside the kernel)."""
+    `cfg.w_bits` is set — rescaled inside the kernel).
+
+    With a packed `cfg.quant` spec the stale word-topic table — and the
+    word-proposal alias tables built from it — is row-quantized to the
+    spec's width before use (quantize-dequantize: the accuracy model of
+    the packed table; stale tables are rebuilt every sweep anyway, so the
+    error never accumulates). Doc rows and totals stay exact, and the
+    kernel then runs its plain float path (`w_bits=None`) on the already-
+    dequantized inputs.
+    """
+    spec = cfg.quant_spec
     n = corpus.num_tokens
     k = cfg.num_topics
     kp = -(-k // 128) * 128  # lane-pad K to 128
@@ -74,12 +84,23 @@ def mh_resample(
     # the decoded counts by the parallel prefix-sum builder, then gathered
     # per token like the count rows. Fixed-point count rows are gathered
     # *as int32* and rescaled inside the kernel.
-    thresh_w, alias_w = alias_core.build_alias_tables(
-        codec.decode_array(cfg, state.n_wt) + cfg.beta)
+    if spec.packed:
+        n_wt_q = quant.fake_quantize_rows(
+            codec.decode_array(cfg, state.n_wt), spec.bits)
+        thresh_w, alias_w = alias_core.build_alias_tables(n_wt_q + cfg.beta)
+        rows_w = n_wt_q[corpus.words]
+        rows_d = codec.decode_array(cfg, state.n_dt[corpus.docs])
+        n_t = codec.decode_array(cfg, state.n_t)
+        kernel_w_bits = None  # inputs already real-valued
+    else:
+        thresh_w, alias_w = alias_core.build_alias_tables(
+            codec.decode_array(cfg, state.n_wt) + cfg.beta)
+        rows_w = state.n_wt[corpus.words]
+        rows_d = state.n_dt[corpus.docs]  # (N, K) gather outside the kernel
+        n_t = state.n_t
+        kernel_w_bits = cfg.w_bits
     thresh_d, alias_d = alias_core.build_alias_tables(
         codec.decode_array(cfg, state.n_dt) + cfg.alpha)
-    rows_d = state.n_dt[corpus.docs]  # (N, K) gather outside the kernel
-    rows_w = state.n_wt[corpus.words]
     thresh_w_rows = thresh_w[corpus.words]
     alias_w_rows = alias_w[corpus.words]
     thresh_d_rows = thresh_d[corpus.docs]
@@ -100,7 +121,7 @@ def mh_resample(
     z_new = alias_mh_blocked(
         pad2(rows_d),
         pad2(rows_w),
-        jnp.pad(state.n_t, (0, kp - k)),
+        jnp.pad(n_t, (0, kp - k)),
         pad2(thresh_w_rows, 0.0),
         pad2(alias_w_rows),
         pad2(thresh_d_rows, 0.0),
@@ -113,7 +134,7 @@ def mh_resample(
         alpha=cfg.alpha,
         beta=cfg.beta,
         beta_bar=cfg.beta_bar,
-        w_bits=cfg.w_bits,
+        w_bits=kernel_w_bits,
         token_block=token_block,
         interpret=_interpret(),
     )

@@ -35,6 +35,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import quant
+
 
 def _resample_tile(
     rows_d,
@@ -132,6 +134,100 @@ def _gibbs_kernel_batched(
         beta_bar=beta_bar,
         w_bits=w_bits,
     )
+
+
+def _gibbs_kernel_quant(
+    codes_w_ref,
+    scales_w_ref,
+    rows_d_ref,
+    tot_ref,
+    z_ref,
+    w_ref,
+    g_ref,
+    z_out_ref,
+    *,
+    alpha: float,
+    beta: float,
+    beta_bar: float,
+    bits: int,
+    k: int,
+):
+    """Tile body for *packed* word-topic rows (QuantSpec int8/int4_packed).
+
+    The gathered `n_wt` rows arrive as uint8 codes — nibble-packed for
+    bits=4 — plus one float32 scale per token row, and are dequantized
+    *inside* the tile: the VMEM (and HBM→VMEM) footprint of the dominant
+    input drops 4x/8x vs f32 rows, which is what lets the packed path run
+    larger token blocks. Doc-topic rows and topic totals stay exact f32
+    (they are small, and exact self-exclusion on `n_dt` is what keeps the
+    sampler's per-document bookkeeping honest).
+    """
+    codes = codes_w_ref[...]
+    if bits == 4:
+        codes = quant.unpack_nibbles_jnp(codes, k)
+    rows_w = codes.astype(jnp.float32) * scales_w_ref[...][:, None]
+    z_out_ref[...] = _resample_tile(
+        rows_d_ref[...],
+        rows_w,
+        tot_ref[...],
+        z_ref[...],
+        w_ref[...],
+        g_ref[...],
+        alpha=alpha,
+        beta=beta,
+        beta_bar=beta_bar,
+        w_bits=None,  # inputs are already real-valued / dequantized
+    )
+
+
+def gibbs_resample_blocked_quant(
+    codes_w: jax.Array,  # (N, K) uint8 codes, or (N, K//2) nibble-packed
+    scales_w: jax.Array,  # (N,) float32 per-row dequant scales
+    rows_d: jax.Array,  # (N, K) float32 gathered doc-topic rows (exact)
+    tot: jax.Array,  # (K,) float32 topic totals (exact)
+    z: jax.Array,  # (N,)
+    weights: jax.Array,  # (N,)
+    gumbel: jax.Array,  # (N, K)
+    *,
+    alpha: float,
+    beta: float,
+    beta_bar: float,
+    bits: int,
+    token_block: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Packed-row variant of `gibbs_resample_blocked`: same grid and
+    sampling semantics, but the word-topic input is quantized codes that
+    the tile body dequantizes in VMEM. For bits=4 the caller packs two
+    codes per byte (pad K so K//2 stays lane-aligned)."""
+    n, k = rows_d.shape
+    assert n % token_block == 0, (n, token_block)
+    assert k % 128 == 0, k
+    kc = codes_w.shape[-1]
+    assert kc == (k // 2 if bits == 4 else k), (kc, k, bits)
+    grid = (n // token_block,)
+
+    kern = functools.partial(
+        _gibbs_kernel_quant,
+        alpha=alpha, beta=beta, beta_bar=beta_bar, bits=bits, k=k,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((token_block, kc), lambda i: (i, 0)),
+            pl.BlockSpec((token_block,), lambda i: (i,)),
+            pl.BlockSpec((token_block, k), lambda i: (i, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((token_block,), lambda i: (i,)),
+            pl.BlockSpec((token_block,), lambda i: (i,)),
+            pl.BlockSpec((token_block, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((token_block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), z.dtype),
+        interpret=interpret,
+        name="lda_gibbs_resample_quant",
+    )(codes_w, scales_w, rows_d, tot, z, weights, gumbel)
 
 
 def gibbs_resample_blocked(

@@ -14,11 +14,12 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core import codec
+from repro.core import codec, quant
 from repro.core.types import Corpus, LDAConfig, LDAState
 from repro.kernels.lda_gibbs.kernel import (
     gibbs_resample_blocked,
     gibbs_resample_blocked_batched,
+    gibbs_resample_blocked_quant,
 )
 
 
@@ -34,17 +35,23 @@ def sweep_resample(
     key: jax.Array,
     token_block: int = 256,
 ) -> jax.Array:
-    """One full resampling pass; returns new z (counts rebuilt by caller)."""
+    """One full resampling pass; returns new z (counts rebuilt by caller).
+
+    With a packed `cfg.quant` spec (int8/int4_packed) the word-topic rows
+    take the quantized kernel: the (V, K) table is row-quantized once per
+    sweep (counts are sweep-stale by design, so one lossy snapshot per
+    sweep is the §4.3 story at table granularity), the uint8 code rows are
+    gathered instead of f32/int32 rows, and the tile body dequantizes in
+    VMEM.
+    """
+    spec = cfg.quant_spec
     n = corpus.num_tokens
     k = cfg.num_topics
-    kp = -(-k // 128) * 128  # lane-pad K to 128
+    kp_base = -(-k // 128) * 128  # lane-pad K to 128
+    kp = kp_base
+    if spec.packed and spec.bits == 4:
+        kp = -(-k // 256) * 256  # keep the nibble-packed lane dim at 128
     npad = -(-n // token_block) * token_block
-
-    # Fixed-point counts are gathered *as int32* and rescaled inside the
-    # kernel (saves the full (D,K)/(V,K) float materialization of from_fixed).
-    rows_d = state.n_dt[corpus.docs]  # (N, K) gather outside the kernel
-    rows_w = state.n_wt[corpus.words]
-    n_t = state.n_t
 
     def pad2(x, fill=0):
         return jnp.pad(
@@ -54,9 +61,47 @@ def sweep_resample(
     def pad1(x, fill=0):
         return jnp.pad(x, (0, npad - n), constant_values=fill)
 
-    gumbel = jax.random.gumbel(key, (npad, kp), jnp.float32)
+    # Noise is drawn at the mode-independent base width so a packed sweep
+    # consumes the *same* per-topic gumbel columns as the exact sweep from
+    # the same key (the int4 lane over-padding only adds -inf columns).
+    gumbel = jax.random.gumbel(key, (npad, kp_base), jnp.float32)
     # Padded topics get -inf scores via zero counts + -inf gumbel.
-    gumbel = jnp.where(jnp.arange(kp)[None, :] < k, gumbel, -jnp.inf)
+    gumbel = jnp.where(jnp.arange(kp_base)[None, :] < k, gumbel, -jnp.inf)
+    if kp != kp_base:
+        gumbel = jnp.pad(gumbel, ((0, 0), (0, kp - kp_base)),
+                         constant_values=-jnp.inf)
+
+    if spec.packed:
+        # Quantize the stale table once, gather packed rows per token.
+        n_wt_real = codec.decode_array(cfg, state.n_wt)
+        codes, scales = quant.quantize_rows_jnp(n_wt_real, spec.bits)
+        codes_rows = pad2(codes[corpus.words])
+        if spec.bits == 4:
+            codes_rows = quant.pack_nibbles_jnp(codes_rows)
+        rows_d = pad2(codec.decode_array(cfg, state.n_dt[corpus.docs]))
+        tot = jnp.pad(codec.decode_array(cfg, state.n_t), (0, kp - k))
+        z_new = gibbs_resample_blocked_quant(
+            codes_rows,
+            pad1(scales[corpus.words], 0.0),
+            rows_d,
+            tot,
+            pad1(state.z),
+            pad1(corpus.weights, 0.0),
+            gumbel,
+            alpha=cfg.alpha,
+            beta=cfg.beta,
+            beta_bar=cfg.beta_bar,
+            bits=spec.bits,
+            token_block=token_block,
+            interpret=_interpret(),
+        )
+        return z_new[:n]
+
+    # Fixed-point counts are gathered *as int32* and rescaled inside the
+    # kernel (saves the full (D,K)/(V,K) float materialization of from_fixed).
+    rows_d = state.n_dt[corpus.docs]  # (N, K) gather outside the kernel
+    rows_w = state.n_wt[corpus.words]
+    n_t = state.n_t
 
     z_new = gibbs_resample_blocked(
         pad2(rows_d),

@@ -52,7 +52,7 @@ def abstract_corpus(cfg: LDAConfig, num_tokens: int) -> Corpus:
 
 def abstract_state(cfg: LDAConfig, num_tokens: int) -> LDAState:
     sds = jax.ShapeDtypeStruct
-    cdt = jnp.int32 if cfg.w_bits is not None else jnp.float32
+    cdt = jnp.int32 if cfg.quant_spec.live_fixed else jnp.float32
     return LDAState(
         z=sds((num_tokens,), jnp.int32),
         n_dt=sds((cfg.num_docs, cfg.num_topics), cdt),

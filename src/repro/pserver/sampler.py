@@ -193,7 +193,7 @@ class PServerFit:
         if num_sweeps <= 0:
             return state
         keys = jax.random.split(key, num_sweeps)
-        if cfg.w_bits is not None:
+        if cfg.quant_spec.live_fixed:
             # Stored-unit quantization between sweeps must match the
             # oracle chain (encode/decode round-trip per sweep), so the
             # fused multi-sweep program only serves the float32 path.

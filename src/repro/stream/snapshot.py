@@ -29,6 +29,7 @@ from repro.api import protocol
 from repro.api.server import VedaliaServer
 from repro.api.service import ModelHandle, VedaliaService
 from repro.core import rlda, update
+from repro.core.quant import QuantSpec
 from repro.core.types import Corpus, LDAConfig, LDAState
 
 SNAPSHOT_FORMAT = 1
@@ -42,6 +43,7 @@ def _encode_cfg(cfg: LDAConfig) -> dict:
 
 
 def _decode_cfg(d: dict) -> LDAConfig:
+    q = d.get("quant")
     return LDAConfig(
         num_topics=int(d["num_topics"]),
         vocab_size=int(d["vocab_size"]),
@@ -49,6 +51,9 @@ def _decode_cfg(d: dict) -> LDAConfig:
         alpha=float(d["alpha"]),
         beta=float(d["beta"]),
         w_bits=None if d["w_bits"] is None else int(d["w_bits"]),
+        quant=None if q is None else QuantSpec(
+            mode=q["mode"],
+            w_bits=None if q["w_bits"] is None else int(q["w_bits"])),
     )
 
 

@@ -257,12 +257,14 @@ def test_perf_gate_update_refuses_partial_summary(tmp_path):
             "distributed": {"weak_scaling_efficiency": 1.0,
                             "sync_bytes_saving": 4.0},
             "obs": {"overhead_ok": 1.0},
+            "delta_view": {"quantized_saving": 2.4},
         }}))
     assert perf_gate.main(["--summary", str(summary),
                            "--baseline", str(baseline), "--update"]) == 0
     assert perf_gate.main(
         ["--summary", str(summary), "--baseline", str(baseline),
-         "--require", "sampler,batch,alias,offload,distributed,obs"]) == 0
+         "--require",
+         "sampler,batch,alias,offload,distributed,obs,delta_view"]) == 0
     summary.write_text(json.dumps({
         "benches": {
             "sampler": {"samplers": {
@@ -275,6 +277,7 @@ def test_perf_gate_update_refuses_partial_summary(tmp_path):
             "distributed": {"weak_scaling_efficiency": 1.0,
                             "sync_bytes_saving": 4.0},
             "obs": {"overhead_ok": 1.0},
+            "delta_view": {"quantized_saving": 2.4},
         }}))
     assert perf_gate.main(["--summary", str(summary),
                            "--baseline", str(baseline)]) == 1
