@@ -133,7 +133,7 @@ def _quant_ppl_delta(client, hid, heldout) -> float:
     n_t = sc.decode_array_np(exp.state.n_t)
     prep = rlda.prepare(list(heldout), base_vocab=exp.base_vocab,
                         num_topics=cfg.num_topics, alpha=cfg.alpha,
-                        beta=cfg.beta, w_bits=cfg.w_bits, seed=0)
+                        beta=cfg.beta, w_bits=cfg.w_bits)
     words = np.asarray(prep.corpus.words)
     wts = np.asarray(prep.corpus.weights, np.float64)
     theta_bar = (n_t + cfg.alpha) / (n_t.sum() + cfg.alpha * cfg.num_topics)

@@ -124,7 +124,7 @@ def _overhead(quick: bool) -> dict:
     }
 
 
-def _e2e_trace(quick: bool) -> dict:
+def _e2e_trace() -> dict:
     """Drive a stream through scheduler + offload with obs on; assert one
     trace id covers every tier, then export the artifacts."""
     obs.enable()
@@ -195,7 +195,7 @@ def _e2e_trace(quick: bool) -> dict:
 
 def run(quick: bool = False) -> dict:
     overhead = _overhead(quick)
-    e2e = _e2e_trace(quick)
+    e2e = _e2e_trace()
     return {
         **overhead,
         "e2e": e2e,

@@ -125,6 +125,8 @@ def run(quick: bool = False) -> dict:
                             **kwargs)
         if name == "rlda-nopsi":
             prep.corpus.weights = jnp.ones_like(prep.corpus.weights)
+        # vedalint: disable=prng-key-hygiene -- the three weighting variants
+        # deliberately fit from one seed so the ablation isolates weighting
         st = _SAMPLER.run(prep.cfg, prep.corpus, jax.random.PRNGKey(1), sweeps)
 
         # (a) marginal perplexity (tier-summed counts) — the "structure tax"

@@ -134,7 +134,7 @@ def render_table(recs: list[dict]) -> str:
     return "\n".join(lines)
 
 
-def run(quick: bool = False) -> dict:
+def run(quick: bool = False) -> dict:  # noqa: ARG001 - registry surface
     out = {}
     os.makedirs("experiments", exist_ok=True)
     for tag, path in (("", "experiments/roofline_table.md"),

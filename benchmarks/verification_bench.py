@@ -13,7 +13,7 @@ import numpy as np
 from repro.chital.verification import verification_probability
 
 
-def run(quick: bool = False) -> dict:
+def run(quick: bool = False) -> dict:  # noqa: ARG001 - registry surface
     credits = [-10, -4, -1, 0, 1, 4, 10]
     ratios = [1.0, 0.9, 0.7, 0.5, 0.2]
     table = np.zeros((len(credits), len(ratios)))

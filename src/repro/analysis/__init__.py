@@ -1,0 +1,36 @@
+"""repro.analysis — vedalint, the repo's AST static-analysis pass.
+
+Run `python -m repro.analysis src benchmarks` (exit 0 = clean). The
+rules encode the cross-file conventions the tiers rest on: PRNG key
+hygiene, jit static-arg hashability, wire-protocol conformance, Pallas
+tile budgets, the codec's storage-format-branch monopoly, and metric
+declaration consistency. See README "Static analysis" for the rule
+table and suppression syntax.
+"""
+
+from repro.analysis.engine import (
+    AnalysisConfig,
+    Finding,
+    Module,
+    Report,
+    Rule,
+    analyze,
+    analyze_paths,
+    load_modules,
+    write_json,
+)
+from repro.analysis.rules import all_rules, rule_ids
+
+__all__ = [
+    "AnalysisConfig",
+    "Finding",
+    "Module",
+    "Report",
+    "Rule",
+    "all_rules",
+    "analyze",
+    "analyze_paths",
+    "load_modules",
+    "rule_ids",
+    "write_json",
+]

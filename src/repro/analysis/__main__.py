@@ -1,0 +1,76 @@
+"""CLI: `python -m repro.analysis [paths...]` (a.k.a. vedalint).
+
+Exit codes: 0 clean, 1 findings, 2 usage error. `--format json` prints
+the machine-readable report (the CI artifact; `--output` writes it to a
+file as well). Suppress a finding inline with
+`# vedalint: disable=<rule-id> -- <why>`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.engine import AnalysisConfig, analyze_paths, write_json
+from repro.analysis.rules import all_rules, rule_ids
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="vedalint: AST static analysis for the repro tiers")
+    parser.add_argument(
+        "paths", nargs="*", default=["src", "benchmarks"],
+        help="files or directories to analyze (default: src benchmarks)")
+    parser.add_argument("--format", choices=("text", "json"),
+                        default="text")
+    parser.add_argument("--output", metavar="FILE",
+                        help="also write the JSON report here")
+    parser.add_argument("--rules", metavar="ID[,ID...]",
+                        help="run only these rule ids")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule table and exit")
+    parser.add_argument("--tile-budget-bytes", type=int,
+                        default=AnalysisConfig.tile_budget_bytes,
+                        help="pallas-tile-budget VMEM ceiling per grid "
+                             "step (default: %(default)s)")
+    parser.add_argument("--tile-assume", action="append", default=[],
+                        metavar="NAME=N",
+                        help="assumed extent for an unresolvable "
+                             "BlockSpec dim (repeatable)")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.id}\n    {rule.summary}")
+        return 0
+
+    config = AnalysisConfig(tile_budget_bytes=args.tile_budget_bytes)
+    for spec in args.tile_assume:
+        name, _, val = spec.partition("=")
+        if not name or not val.isdigit():
+            parser.error(f"--tile-assume wants NAME=N, got {spec!r}")
+        config.assume_dims[name] = int(val)
+    if args.rules:
+        wanted = frozenset(r.strip() for r in args.rules.split(",")
+                           if r.strip())
+        unknown = wanted - set(rule_ids())
+        if unknown:
+            parser.error(f"unknown rule ids: {sorted(unknown)}; "
+                         f"known: {rule_ids()}")
+        config.rules = wanted
+
+    report = analyze_paths(args.paths, config)
+    if args.output:
+        write_json(report, args.output)
+    if args.format == "json":
+        import json
+
+        print(json.dumps(report.to_json(), indent=2, sort_keys=True))
+    else:
+        print(report.render_text())
+    return 0 if report.clean else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

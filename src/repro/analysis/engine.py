@@ -1,0 +1,313 @@
+"""vedalint engine: file walking, suppression handling, rule dispatch.
+
+The analyzer is a thin deterministic pass over the repo's own ASTs — no
+imports of the analyzed code, no runtime, so it is safe to run on any
+tree (including one that would fail at import time; syntax errors become
+findings of the pseudo-rule ``parse-error``).
+
+Two rule shapes:
+
+  * per-module rules (`Rule.check_module`) see one parsed file at a time
+    (PRNG hygiene, jit static args, tile budgets, the w_bits branch ban);
+  * project rules (`Rule.check_project`) see every parsed module at once
+    (protocol conformance, metric declaration consistency) — the checks
+    that exist precisely because no single file can see the contract.
+
+Suppressions are inline comments::
+
+    x = thing()  # vedalint: disable=rule-id -- why this one is fine
+    # vedalint: disable=rule-id,other-rule -- standalone form
+    x = thing()
+
+An inline comment suppresses matching findings on its own line; a
+standalone comment line suppresses them on the next line. The
+justification after ``--`` is required by convention (CI diffs are the
+enforcement: a bare disable is easy to spot in review) but not parsed.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import json
+import tokenize
+from pathlib import Path
+from typing import Iterable, Optional, Sequence
+
+#: Findings of this pseudo-rule cannot be produced by real rules and are
+#: never suppressible — a file that does not parse analyzes as nothing.
+PARSE_ERROR = "parse-error"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic: where, which rule, what, and how to fix it."""
+
+    rule: str
+    path: str  # posix relative path, stable across machines
+    line: int
+    message: str
+    hint: str = ""
+
+    def format(self) -> str:
+        s = f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+        if self.hint:
+            s += f"\n    hint: {self.hint}"
+        return s
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class Suppression:
+    line: int  # where the comment sits
+    rules: tuple[str, ...]  # ("*",) for a blanket disable
+    first: int  # first covered source line
+    last: int  # last covered source line
+
+    def covers(self, rule: str, line: int) -> bool:
+        return self.first <= line <= self.last \
+            and ("*" in self.rules or rule in self.rules)
+
+
+class Module:
+    """One parsed source file plus its suppression comments."""
+
+    def __init__(self, path: Path, relpath: str, source: str):
+        self.path = path
+        self.relpath = relpath
+        self.source = source
+        self.tree: Optional[ast.Module] = None
+        self.parse_error: Optional[str] = None
+        try:
+            self.tree = ast.parse(source, filename=relpath)
+        except SyntaxError as e:
+            self.parse_error = f"{e.msg} (line {e.lineno})"
+        self.suppressions = _parse_suppressions(source)
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        return any(s.covers(rule, line) for s in self.suppressions)
+
+
+def _parse_suppressions(source: str) -> list[Suppression]:
+    """A suppression comment covers one *logical* line: the one it sits
+    on (inline form) or the next one (standalone form) — so a wrapped
+    call is covered whichever physical line the finding anchors to, and
+    the `--` justification may spill onto following comment lines."""
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        return []
+
+    # Logical-line spans: runs of real tokens closed by a NEWLINE token.
+    spans: list[tuple[int, int]] = []
+    start: Optional[int] = None
+    last_line = 1
+    skip = (tokenize.COMMENT, tokenize.NL, tokenize.INDENT,
+            tokenize.DEDENT, tokenize.ENDMARKER)
+    for tok in tokens:
+        last_line = max(last_line, tok.end[0])
+        if tok.type == tokenize.NEWLINE:
+            if start is not None:
+                spans.append((start, tok.end[0]))
+                start = None
+        elif tok.type not in skip and start is None:
+            start = tok.start[0]
+    if start is not None:
+        spans.append((start, last_line))
+
+    out = []
+    lines = source.splitlines()
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        text = tok.string.lstrip("#").strip()
+        if not text.startswith("vedalint:"):
+            continue
+        directive = text[len("vedalint:"):].strip()
+        if not directive.startswith("disable="):
+            continue
+        spec = directive[len("disable="):].split("--", 1)[0].strip()
+        rules = tuple(r.strip() for r in spec.split(",") if r.strip())
+        if not rules:
+            continue
+        cline = tok.start[0]
+        standalone = lines[cline - 1].lstrip().startswith("#")
+        if standalone:
+            covered = next(((a, b) for a, b in spans if a > cline),
+                           (cline + 1, cline + 1))
+        else:
+            covered = next(((a, b) for a, b in spans if a <= cline <= b),
+                           (cline, cline))
+        out.append(Suppression(cline, rules, covered[0], covered[1]))
+    return out
+
+
+@dataclasses.dataclass
+class AnalysisConfig:
+    """Knobs a CLI flag can turn; rules read, never mutate."""
+
+    #: pallas-tile-budget: per-grid-step VMEM estimate ceiling. Half of a
+    #: v5e core's ~16 MiB VMEM, leaving headroom for double buffering.
+    tile_budget_bytes: int = 8 * 1024 * 1024
+    #: TPU lane width — BlockSpec last dims should be multiples of this.
+    lane: int = 128
+    #: Name -> assumed extent for BlockSpec dims the estimator cannot
+    #: resolve statically (runtime shapes). `k`/`kp`/`kc` are the repo's
+    #: topic-lane dims; anything else defaults to `assume_default`.
+    assume_dims: dict = dataclasses.field(
+        default_factory=lambda: {"k": 1024, "kp": 1024, "kc": 1024,
+                                 "kp_base": 1024})
+    assume_default: int = 128
+    #: quant-branch-ban: relpath suffixes where `.w_bits is not None`
+    #: dispatch is the point (the codec owns the storage-format branch).
+    quant_allowed: tuple[str, ...] = ("core/quant.py", "core/codec.py")
+    #: Subset of rule ids to run (None = all registered rules).
+    rules: Optional[frozenset[str]] = None
+
+
+class Rule:
+    """Base class; subclasses set `id`, `summary` and override one hook."""
+
+    id: str = ""
+    summary: str = ""
+
+    def check_module(self, _module: Module,
+                     _config: AnalysisConfig) -> Iterable[Finding]:
+        return ()
+
+    def check_project(self, _modules: Sequence[Module],
+                      _config: AnalysisConfig) -> Iterable[Finding]:
+        return ()
+
+
+@dataclasses.dataclass
+class Report:
+    findings: list[Finding]
+    suppressed: list[Finding]
+    files_checked: int
+
+    @property
+    def clean(self) -> bool:
+        return not self.findings
+
+    def counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for f in self.findings:
+            out[f.rule] = out.get(f.rule, 0) + 1
+        return out
+
+    def to_json(self) -> dict:
+        return {
+            "version": 1,
+            "tool": "vedalint",
+            "files_checked": self.files_checked,
+            "counts": self.counts(),
+            "findings": [f.to_json() for f in self.findings],
+            "suppressed": [f.to_json() for f in self.suppressed],
+        }
+
+    def render_text(self) -> str:
+        lines = [f.format() for f in self.findings]
+        total = len(self.findings)
+        lines.append(
+            f"vedalint: {total} finding{'s' if total != 1 else ''} "
+            f"({len(self.suppressed)} suppressed) "
+            f"across {self.files_checked} files")
+        return "\n".join(lines)
+
+
+def collect_files(paths: Sequence[str | Path],
+                  root: Optional[Path] = None) -> list[tuple[Path, str]]:
+    """Expand files/directories into (abspath, posix relpath) pairs."""
+    root = Path(root) if root is not None else Path.cwd()
+    seen: set[Path] = set()
+    out: list[tuple[Path, str]] = []
+
+    def add(p: Path) -> None:
+        rp = p.resolve()
+        if rp in seen:
+            return
+        seen.add(rp)
+        try:
+            rel = rp.relative_to(root.resolve()).as_posix()
+        except ValueError:
+            rel = p.as_posix()
+        out.append((rp, rel))
+
+    for raw in paths:
+        p = Path(raw)
+        if p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if "__pycache__" in f.parts:
+                    continue
+                add(f)
+        elif p.suffix == ".py":
+            add(p)
+    return out
+
+
+def load_modules(paths: Sequence[str | Path],
+                 root: Optional[Path] = None) -> list[Module]:
+    mods = []
+    for abspath, rel in collect_files(paths, root=root):
+        try:
+            source = abspath.read_text(encoding="utf-8")
+        except OSError as e:  # unreadable file: surface, don't crash
+            m = Module.__new__(Module)
+            m.path, m.relpath, m.source = abspath, rel, ""
+            m.tree, m.parse_error, m.suppressions = None, str(e), []
+            mods.append(m)
+            continue
+        mods.append(Module(abspath, rel, source))
+    return mods
+
+
+def analyze(modules: Sequence[Module], rules: Sequence[Rule],
+            config: Optional[AnalysisConfig] = None) -> Report:
+    config = config or AnalysisConfig()
+    active = [r for r in rules
+              if config.rules is None or r.id in config.rules]
+    raw: list[Finding] = []
+    for mod in modules:
+        if mod.parse_error is not None:
+            raw.append(Finding(PARSE_ERROR, mod.relpath, 1,
+                               f"file does not parse: {mod.parse_error}"))
+            continue
+        for rule in active:
+            raw.extend(rule.check_module(mod, config))
+    parsed = [m for m in modules if m.tree is not None]
+    for rule in active:
+        raw.extend(rule.check_project(parsed, config))
+
+    by_path = {m.relpath: m for m in modules}
+    findings, suppressed = [], []
+    for f in sorted(raw, key=lambda f: (f.path, f.line, f.rule, f.message)):
+        mod = by_path.get(f.path)
+        if mod is not None and f.rule != PARSE_ERROR \
+                and mod.suppressed(f.rule, f.line):
+            suppressed.append(f)
+        else:
+            findings.append(f)
+    return Report(findings, suppressed, files_checked=len(modules))
+
+
+def analyze_paths(paths: Sequence[str | Path],
+                  config: Optional[AnalysisConfig] = None,
+                  root: Optional[Path] = None,
+                  rules: Optional[Sequence[Rule]] = None) -> Report:
+    """One-call entry point: walk, parse, run every registered rule."""
+    from repro.analysis.rules import all_rules
+
+    return analyze(load_modules(paths, root=root),
+                   list(rules) if rules is not None else all_rules(),
+                   config)
+
+
+def write_json(report: Report, path: str | Path) -> None:
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(report.to_json(), indent=2, sort_keys=True)
+                 + "\n", encoding="utf-8")

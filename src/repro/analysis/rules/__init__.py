@@ -1,0 +1,33 @@
+"""vedalint rule registry.
+
+Each rule module defines one `Rule` subclass; `all_rules()` returns one
+instance of each, in stable id order. Adding a rule = adding a module
+here + an entry in `_RULE_CLASSES` (+ a fixture test in
+tests/test_analysis.py and a row in the README rule table).
+"""
+
+from __future__ import annotations
+
+from repro.analysis.rules.jit_static import JitStaticHashable
+from repro.analysis.rules.obs_metrics import ObsMetricConsistency
+from repro.analysis.rules.pallas_tiles import PallasTileBudget
+from repro.analysis.rules.prng import PrngKeyHygiene
+from repro.analysis.rules.protocol_wire import ProtocolConformance
+from repro.analysis.rules.quant_branch import QuantBranchBan
+
+_RULE_CLASSES = (
+    JitStaticHashable,
+    ObsMetricConsistency,
+    PallasTileBudget,
+    PrngKeyHygiene,
+    ProtocolConformance,
+    QuantBranchBan,
+)
+
+
+def all_rules():
+    return sorted((cls() for cls in _RULE_CLASSES), key=lambda r: r.id)
+
+
+def rule_ids() -> tuple[str, ...]:
+    return tuple(r.id for r in all_rules())

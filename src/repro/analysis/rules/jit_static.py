@@ -1,0 +1,200 @@
+"""jit-static-hashable: static jit arguments must be hashable & frozen.
+
+`static_argnums` / `static_argnames` positions are hashed into the jit
+cache key. A non-frozen dataclass (`__hash__` is None when `eq=True`),
+a dict, list or set there raises `TypeError: unhashable type` at trace
+time — or worse, a *mutable but hashable* object silently retraces or
+serves stale compilations (the `LDAConfig`-must-stay-hashable contract:
+every config that flows into `static_argnums=(0, ...)` is a frozen
+dataclass).
+
+Checked per jitted function, using a project-wide index of dataclass
+definitions:
+
+  * a static parameter annotated with a non-frozen project dataclass;
+  * a static parameter annotated `dict`/`list`/`set` (incl. `typing.`
+    and `Optional[...]` forms);
+  * a static parameter whose *default value* is a mutable literal;
+  * `static_argnums` indices out of range and `static_argnames` naming
+    no parameter — a silently ignored static marker is a retrace hazard
+    in disguise (the arg everyone believes is static is traced).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis import astutil
+from repro.analysis.engine import Finding, Rule
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+_UNHASHABLE_ANNOTATIONS = {
+    "dict", "list", "set", "Dict", "List", "Set", "typing.Dict",
+    "typing.List", "typing.Set", "defaultdict", "collections.defaultdict",
+}
+_HINT = ("make the class a frozen dataclass (`@dataclass(frozen=True)`) "
+         "or move the argument out of the static set")
+
+
+def _annotation_names(node: ast.AST) -> list[str]:
+    """Base type names mentioned by an annotation, unwrapping Optional/
+    Union subscripts and string annotations."""
+    if node is None:
+        return []
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        try:
+            node = ast.parse(node.value, mode="eval").body
+        except SyntaxError:
+            return []
+    if isinstance(node, ast.Subscript):
+        outer = _annotation_names(node.value)
+        if outer and outer[0].split(".")[-1] in ("Optional", "Union"):
+            inner = node.slice
+            elts = inner.elts if isinstance(inner, ast.Tuple) else [inner]
+            out = []
+            for e in elts:
+                out.extend(_annotation_names(e))
+            return out
+        return outer
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.BitOr):
+        return _annotation_names(node.left) + _annotation_names(node.right)
+    if isinstance(node, (ast.Name, ast.Attribute)):
+        q = astutil.qualname(node, {})
+        return [q] if q else []
+    return []
+
+
+def _dataclass_index(modules) -> dict[str, tuple[bool, str, int]]:
+    """Class name -> (frozen?, relpath, line) for every @dataclass."""
+    index: dict[str, tuple[bool, str, int]] = {}
+    for mod in modules:
+        aliases = astutil.import_aliases(mod.tree)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            for dec in node.decorator_list:
+                call = dec if isinstance(dec, ast.Call) else None
+                target = call.func if call else dec
+                q = astutil.qualname(target, aliases)
+                if q not in ("dataclasses.dataclass", "dataclass"):
+                    continue
+                frozen = False
+                if call is not None:
+                    kw = astutil.keyword_arg(call, "frozen")
+                    frozen = isinstance(kw, ast.Constant) \
+                        and kw.value is True
+                index[node.name] = (frozen, mod.relpath, node.lineno)
+    return index
+
+
+def _jit_static_spec(dec: ast.AST, aliases) -> Optional[ast.Call]:
+    """The call carrying static_argnums/static_argnames, for decorators
+    shaped `jax.jit`, `partial(jax.jit, ...)` or `jax.jit(...)`."""
+    if not isinstance(dec, ast.Call):
+        return None
+    q = astutil.qualname(dec.func, aliases)
+    if q in _PARTIAL_NAMES and dec.args:
+        inner_q = astutil.qualname(dec.args[0], aliases)
+        if inner_q in _JIT_NAMES:
+            return dec
+    if q in _JIT_NAMES:
+        return dec
+    return None
+
+
+class JitStaticHashable(Rule):
+    id = "jit-static-hashable"
+    summary = ("static_argnums/static_argnames positions must be frozen "
+               "dataclasses or hashable scalars, and must exist")
+
+    def check_project(self, modules, _config):
+        dc_index = _dataclass_index(modules)
+        findings: list[Finding] = []
+        for mod in modules:
+            aliases = astutil.import_aliases(mod.tree)
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                for dec in node.decorator_list:
+                    spec = _jit_static_spec(dec, aliases)
+                    if spec is not None:
+                        findings.extend(self._check_fn(
+                            mod, node, spec, dc_index))
+        return findings
+
+    def _check_fn(self, mod, fn, spec, dc_index):
+        findings = []
+        pos_params = [a for a in fn.args.posonlyargs + fn.args.args]
+        by_name = {a.arg: a for a in pos_params + fn.args.kwonlyargs}
+        defaults = dict(zip(
+            [a.arg for a in pos_params[len(pos_params)
+                                       - len(fn.args.defaults):]],
+            fn.args.defaults))
+        defaults.update({a.arg: d for a, d in
+                         zip(fn.args.kwonlyargs, fn.args.kw_defaults)
+                         if d is not None})
+
+        static_params: list[ast.arg] = []
+        argnums_node = astutil.keyword_arg(spec, "static_argnums")
+        if argnums_node is not None:
+            nums = astutil.int_tuple(argnums_node)
+            for i in nums or ():
+                if i < 0 or i >= len(pos_params):
+                    findings.append(Finding(
+                        self.id, mod.relpath, spec.lineno,
+                        f"static_argnums index {i} is out of range for "
+                        f"`{fn.name}` ({len(pos_params)} positional "
+                        f"parameters): the static marker binds nothing",
+                        hint="fix the index or drop it"))
+                else:
+                    static_params.append(pos_params[i])
+        argnames_node = astutil.keyword_arg(spec, "static_argnames")
+        if argnames_node is not None:
+            names = astutil.str_tuple(argnames_node)
+            if names is None:
+                s = astutil.const_str(argnames_node)
+                names = (s,) if s is not None else ()
+            for n in names:
+                if n not in by_name:
+                    findings.append(Finding(
+                        self.id, mod.relpath, spec.lineno,
+                        f"static_argnames {n!r} names no parameter of "
+                        f"`{fn.name}`: the static marker binds nothing",
+                        hint="fix the name or drop it"))
+                else:
+                    static_params.append(by_name[n])
+
+        for p in static_params:
+            for ann in _annotation_names(p.annotation):
+                base = ann.split(".")[-1]
+                if ann in _UNHASHABLE_ANNOTATIONS:
+                    findings.append(Finding(
+                        self.id, mod.relpath, p.lineno,
+                        f"static jit argument '{p.arg}' of `{fn.name}` is "
+                        f"annotated {ann}: unhashable, raises at trace "
+                        f"time (and mutation would poison the jit cache)",
+                        hint="pass a tuple/frozen structure, or make the "
+                             "argument dynamic"))
+                elif base in dc_index and not dc_index[base][0]:
+                    _, dc_path, dc_line = dc_index[base]
+                    findings.append(Finding(
+                        self.id, mod.relpath, p.lineno,
+                        f"static jit argument '{p.arg}' of `{fn.name}` is "
+                        f"annotated {base}, a non-frozen dataclass "
+                        f"({dc_path}:{dc_line}): unhashable as a jit "
+                        f"cache key",
+                        hint=_HINT))
+            default = defaults.get(p.arg)
+            if isinstance(default, (ast.Dict, ast.List, ast.Set,
+                                    ast.ListComp, ast.DictComp,
+                                    ast.SetComp)):
+                findings.append(Finding(
+                    self.id, mod.relpath, p.lineno,
+                    f"static jit argument '{p.arg}' of `{fn.name}` "
+                    f"defaults to a mutable literal: unhashable at trace "
+                    f"time",
+                    hint="use a tuple or None sentinel"))
+        return findings

@@ -1,0 +1,204 @@
+"""pallas-tile-budget: BlockSpec tiles must fit VMEM and ride full lanes.
+
+Each `pl.pallas_call` grid step stages its in/out blocks in VMEM
+(~16 MiB per TPU core, shared with double buffering). The estimator
+sums `prod(block_shape) * 4` bytes over every `in_specs`/`out_specs`
+BlockSpec of a call and flags grid steps whose estimate exceeds the
+configured budget (`AnalysisConfig.tile_budget_bytes`, default 8 MiB) —
+the analysis-time guard for the ROADMAP item on growing packed-table
+tiles: a tile bump that can't fit shows up here, not as a compile-time
+OOM three tiers up.
+
+It also flags BlockSpec *last* dims that are resolved, larger than one
+lane (128) and not a multiple of it — sublane-padded tiles silently
+waste VPU lanes.
+
+Block dims resolve from (in order): int literals, `None` (squeezed
+dim, counts as 1), enclosing-function keyword defaults
+(`token_block: int = 256`), module-level int constants, and finally the
+`AnalysisConfig.assume_dims` table for runtime shapes (`k`/`kp`/`kc`
+default 1024, anything else 128). Assumed dims are marked in the
+message and never trigger the lane check on their own. BlockSpecs bound
+to local names (`row_spec = pl.BlockSpec(...)`) resolve through the
+enclosing function's assignments.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis import astutil
+from repro.analysis.engine import Finding, Rule
+
+
+def _module_constants(tree: ast.Module) -> dict[str, int]:
+    out = {}
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            v = astutil.const_int(node.value)
+            if v is not None:
+                out[node.targets[0].id] = v
+    return out
+
+
+def _fn_defaults(fn) -> dict[str, int]:
+    out = {}
+    pos = fn.args.posonlyargs + fn.args.args
+    for arg, d in zip(pos[len(pos) - len(fn.args.defaults):],
+                      fn.args.defaults):
+        v = astutil.const_int(d)
+        if v is not None:
+            out[arg.arg] = v
+    for arg, d in zip(fn.args.kwonlyargs, fn.args.kw_defaults):
+        if d is not None:
+            v = astutil.const_int(d)
+            if v is not None:
+                out[arg.arg] = v
+    return out
+
+
+class _DimEnv:
+    def __init__(self, config, fn_defaults, mod_consts):
+        self.config = config
+        self.scope = {**mod_consts, **fn_defaults}
+
+    def resolve(self, node: ast.AST) -> tuple[Optional[int], bool]:
+        """(value, assumed?) — value None only for literal `None` dims."""
+        if isinstance(node, ast.Constant) and node.value is None:
+            return 1, False
+        v = astutil.const_int(node)
+        if v is not None:
+            return v, False
+        if isinstance(node, ast.Name):
+            if node.id in self.scope:
+                return self.scope[node.id], False
+            return (self.config.assume_dims.get(
+                node.id, self.config.assume_default), True)
+        return self.config.assume_default, True
+
+
+class PallasTileBudget(Rule):
+    id = "pallas-tile-budget"
+    summary = ("estimated per-grid-step VMEM bytes of a pallas_call must "
+               "stay under budget; BlockSpec last dims lane-aligned")
+
+    def check_module(self, module, config):
+        aliases = astutil.import_aliases(module.tree)
+        mod_consts = _module_constants(module.tree)
+        findings: list[Finding] = []
+
+        def scoped_nodes(body):
+            """Walk a scope's statements without crossing into nested
+            function scopes (those get their own env/defaults)."""
+            stack = list(body)
+            while stack:
+                node = stack.pop()
+                yield node
+                for child in ast.iter_child_nodes(node):
+                    if not isinstance(child, (ast.FunctionDef,
+                                              ast.AsyncFunctionDef)):
+                        stack.append(child)
+
+        def enclosing_fns(tree):
+            yield None, tree.body
+            for node in ast.walk(tree):
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    yield node, node.body
+
+        for fn, body in enclosing_fns(module.tree):
+            env = _DimEnv(config, _fn_defaults(fn) if fn else {},
+                          mod_consts)
+            # Local BlockSpec bindings (row_spec = pl.BlockSpec(...)).
+            spec_vars: dict[str, ast.Call] = {}
+            calls: list[ast.Call] = []
+            for sub in scoped_nodes(body):
+                if isinstance(sub, ast.Assign) \
+                        and isinstance(sub.value, ast.Call) \
+                        and self._is(sub.value, "BlockSpec", aliases):
+                    for t in sub.targets:
+                        if isinstance(t, ast.Name):
+                            spec_vars[t.id] = sub.value
+                if isinstance(sub, ast.Call) \
+                        and self._is(sub, "pallas_call", aliases):
+                    calls.append(sub)
+            for call in calls:
+                findings.extend(self._check_call(
+                    module, call, env, spec_vars, aliases, config))
+        return findings
+
+    @staticmethod
+    def _is(call: ast.Call, name: str, aliases) -> bool:
+        q = astutil.qualname(call.func, aliases) or ""
+        return q.endswith("." + name) or q == name \
+            or q.endswith("pallas." + name)
+
+    def _specs_of(self, node, spec_vars, aliases) -> list[ast.Call]:
+        """Flatten an in_specs/out_specs expression into BlockSpec calls."""
+        if node is None:
+            return []
+        if isinstance(node, (ast.List, ast.Tuple)):
+            out = []
+            for elt in node.elts:
+                out.extend(self._specs_of(elt, spec_vars, aliases))
+            return out
+        if isinstance(node, ast.Call) and self._is(node, "BlockSpec",
+                                                   aliases):
+            return [node]
+        if isinstance(node, ast.Name) and node.id in spec_vars:
+            return [spec_vars[node.id]]
+        return []
+
+    def _check_call(self, module, call, env, spec_vars, aliases, config):
+        findings = []
+        specs = (self._specs_of(astutil.keyword_arg(call, "in_specs"),
+                                spec_vars, aliases)
+                 + self._specs_of(astutil.keyword_arg(call, "out_specs"),
+                                  spec_vars, aliases))
+        if not specs:
+            return findings
+        total = 0
+        any_assumed = False
+        kernel = astutil.const_str(astutil.keyword_arg(call, "name")) \
+            or "pallas_call"
+        for spec in specs:
+            shape = spec.args[0] if spec.args \
+                else astutil.keyword_arg(spec, "block_shape")
+            if not isinstance(shape, (ast.Tuple, ast.List)) \
+                    or not shape.elts:
+                continue
+            dims = []
+            assumed_dims = []
+            for elt in shape.elts:
+                v, assumed = env.resolve(elt)
+                dims.append(v)
+                assumed_dims.append(assumed)
+            size = 4
+            for v in dims:
+                size *= v
+            total += size
+            any_assumed |= any(assumed_dims)
+            last, last_assumed = dims[-1], assumed_dims[-1]
+            if not last_assumed and last > config.lane \
+                    and last % config.lane != 0:
+                findings.append(Finding(
+                    self.id, module.relpath, spec.lineno,
+                    f"BlockSpec last dim {last} of kernel '{kernel}' is "
+                    f"not a multiple of the {config.lane}-wide lane: the "
+                    f"tile is sublane-padded and wastes VPU lanes",
+                    hint=f"pad the trailing dim to a multiple of "
+                         f"{config.lane} (callers already lane-pad K)"))
+        if total > config.tile_budget_bytes:
+            approx = " (some dims assumed)" if any_assumed else ""
+            findings.append(Finding(
+                self.id, module.relpath, call.lineno,
+                f"kernel '{kernel}' stages an estimated "
+                f"{total / (1024 * 1024):.1f} MiB of blocks per grid "
+                f"step{approx}, over the "
+                f"{config.tile_budget_bytes // (1024 * 1024)} MiB VMEM "
+                f"budget",
+                hint="shrink token_block / split the grid, or raise "
+                     "--tile-budget-bytes with a measured justification"))
+        return findings

@@ -1,0 +1,367 @@
+"""prng-key-hygiene: every PRNG key is consumed at most once.
+
+The repo's parity story (Pallas sweeps bit-exact vs the jnp oracle,
+batched fits comparable to sequential fits) only holds when both sides
+consume *identical, non-reused* randomness. Two hazards:
+
+  * straight-line reuse — one key fed to two consumers (`gumbel` then
+    `split` on the same variable) silently correlates draws;
+  * loop-carried reuse — a key bound outside a loop and consumed inside
+    it without a per-iteration `split`/`fold_in` makes every iteration
+    draw the same numbers (the classic "all my sweeps are identical"
+    bug), as does `PRNGKey(<constant>)` inside a loop body.
+
+Tracking is intentionally conservative: only variables bound from
+`jax.random.{PRNGKey,key,split,fold_in}` results, key-ish parameters
+(`key`, `*_key`, `keys`, `rng`, ...), and constant-index subscripts of
+those (`ks[0]`) are followed. `fold_in(key, i)` *derives* — it never
+marks the key consumed, so the `[fold_in(base, i) for i in range(m)]`
+idiom stays clean. Dynamic subscripts (`keys[i]`) are per-iteration
+indexing — the healthy pattern — and are not tracked at all. Branches of
+an `if` are scanned independently (consuming the same key in two
+mutually exclusive arms is fine only when one arm terminates; otherwise
+both arms may run in sequence across calls, so the merge keeps the
+consumed mark)."""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Optional
+
+from repro.analysis import astutil
+from repro.analysis.engine import AnalysisConfig, Finding, Module, Rule
+
+_JR = "jax.random."
+#: jax.random callables that derive new keys without consuming the input
+#: in the reuse sense (calling them twice with distinct data is the point).
+_DERIVERS = {"fold_in"}
+#: jax.random callables that create keys from seeds.
+_MAKERS = {"PRNGKey", "key", "wrap_key_data"}
+#: Key-producing calls whose assignment targets become tracked keys.
+_PRODUCERS = _MAKERS | {"split", "fold_in", "clone"}
+
+_KEYISH_NAMES = {"key", "keys", "rng", "subkey", "subkeys", "kk"}
+
+#: Callables that inspect without consuming randomness — passing a key
+#: to these never marks it used.
+_NON_CONSUMING = {
+    "len", "isinstance", "issubclass", "type", "repr", "str", "print",
+    "id", "hash", "bool", "list", "tuple", "sorted", "reversed",
+    "enumerate", "zip", "range", "getattr", "hasattr", "format",
+}
+
+_REUSE_HINT = ("interleave `key, sub = jax.random.split(key)` (or "
+               "`fold_in`) between the two consumers")
+_LOOP_HINT = ("fold_in the loop index (`k = jax.random.fold_in(key, i)`) "
+              "or iterate over `jax.random.split(key, n)`")
+
+
+def _keyish(name: str) -> bool:
+    return (name in _KEYISH_NAMES or name.endswith("_key")
+            or name.endswith("_keys"))
+
+
+@dataclasses.dataclass
+class _Use:
+    line: int
+    fn: str
+
+
+@dataclasses.dataclass
+class _Event:
+    var: str
+    kind: str  # "use" | "bind"
+    line: int
+    fn: str = ""
+
+
+class PrngKeyHygiene(Rule):
+    id = "prng-key-hygiene"
+    summary = ("jax.random keys must not be consumed twice without an "
+               "interleaving split/fold_in; loops need per-iteration keys")
+
+    def check_module(self, module, _config):
+        aliases = astutil.import_aliases(module.tree)
+        findings: list[Finding] = []
+        scanner = _Scanner(module.relpath, aliases, findings)
+        top = [s for s in module.tree.body
+               if not isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef))]
+        scanner.scan_scope([], top)
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                params = [a.arg for a in (node.args.posonlyargs
+                                          + node.args.args
+                                          + node.args.kwonlyargs)]
+                scanner.scan_scope(params, node.body)
+            elif isinstance(node, ast.Lambda):
+                params = [a.arg for a in node.args.args]
+                scanner.scan_scope(params, [ast.Expr(value=node.body)])
+        return findings
+
+
+class _Scanner:
+    """Order-sensitive abstract interpreter over one function scope."""
+
+    def __init__(self, path: str, aliases: dict, findings: list):
+        self.path = path
+        self.aliases = aliases
+        self.findings = findings
+
+    # -- scope entry ---------------------------------------------------------
+
+    def scan_scope(self, params: list[str], body: list[ast.stmt]) -> None:
+        state: dict[str, Optional[_Use]] = {
+            p: None for p in params if _keyish(p)}
+        events: list[_Event] = []
+        self._scan(body, state, events, in_loop=False)
+
+    # -- statements ----------------------------------------------------------
+
+    def _scan(self, stmts, state, events, in_loop: bool) -> bool:
+        """Returns True when the block always terminates (return/raise)."""
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue  # separate scope, analyzed by check_module
+            if isinstance(stmt, (ast.Return, ast.Raise)):
+                if getattr(stmt, "value", None) is not None:
+                    self._eval(stmt.value, state, events, in_loop)
+                if isinstance(stmt, ast.Raise) and stmt.exc is not None:
+                    self._eval(stmt.exc, state, events, in_loop)
+                return True
+            if isinstance(stmt, (ast.Break, ast.Continue)):
+                return True
+            if isinstance(stmt, ast.Assign):
+                self._eval(stmt.value, state, events, in_loop)
+                self._bind_targets(stmt.targets, stmt.value, state, events)
+            elif isinstance(stmt, ast.AnnAssign):
+                if stmt.value is not None:
+                    self._eval(stmt.value, state, events, in_loop)
+                    self._bind_targets([stmt.target], stmt.value, state,
+                                       events)
+            elif isinstance(stmt, ast.AugAssign):
+                self._eval(stmt.value, state, events, in_loop)
+                self._bind_targets([stmt.target], None, state, events)
+            elif isinstance(stmt, ast.Expr):
+                self._eval(stmt.value, state, events, in_loop)
+            elif isinstance(stmt, ast.If):
+                self._eval(stmt.test, state, events, in_loop)
+                b_state, o_state = dict(state), dict(state)
+                b_term = self._scan(stmt.body, b_state, events, in_loop)
+                o_term = self._scan(stmt.orelse, o_state, events, in_loop)
+                self._merge_if(state, (b_state, b_term), (o_state, o_term))
+                if b_term and o_term:
+                    return True
+            elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+                self._scan_for(stmt, state, events, in_loop)
+            elif isinstance(stmt, ast.While):
+                self._eval(stmt.test, state, events, in_loop)
+                self._scan_loop_body(stmt.body, set(), state, events)
+                self._scan(stmt.orelse, state, events, in_loop)
+            elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    self._eval(item.context_expr, state, events, in_loop)
+                if self._scan(stmt.body, state, events, in_loop):
+                    return True
+            elif isinstance(stmt, ast.Try):
+                self._scan(stmt.body, state, events, in_loop)
+                for h in stmt.handlers:
+                    self._scan(h.body, dict(state), events, in_loop)
+                self._scan(stmt.orelse, state, events, in_loop)
+                self._scan(stmt.finalbody, state, events, in_loop)
+            elif isinstance(stmt, ast.Delete):
+                for t in stmt.targets:
+                    tid = astutil.expr_id(t)
+                    if tid in state:
+                        del state[tid]
+        return False
+
+    def _merge_if(self, state, *branches) -> None:
+        live = [s for s, term in branches if not term]
+        if not live:
+            return
+        for var in {v for s in live for v in s}:
+            uses = [s[var] for s in live if s.get(var) is not None]
+            state[var] = uses[0] if uses else None
+
+    # -- loops ---------------------------------------------------------------
+
+    def _scan_for(self, stmt, state, events, in_loop: bool) -> None:
+        self._eval(stmt.iter, state, events, in_loop)
+        loop_targets = set(astutil.target_names(stmt.target))
+        fresh = self._fresh_loop_targets(stmt.target, stmt.iter)
+        for name in loop_targets:
+            if name in fresh or name in state:
+                state[name] = None
+                events.append(_Event(name, "bind", stmt.lineno))
+        for name in fresh:
+            state[name] = None
+        self._scan_loop_body(stmt.body, loop_targets, state, events)
+        self._scan(stmt.orelse, state, events, in_loop)
+
+    def _fresh_loop_targets(self, target, iter_expr) -> set[str]:
+        """Loop targets that receive a fresh key per iteration: iterating
+        a `split` result directly, or via `enumerate(split(...))`."""
+        call = iter_expr if isinstance(iter_expr, ast.Call) else None
+        if call is None:
+            return set()
+        q = astutil.qualname(call.func, self.aliases)
+        if q == "enumerate" and call.args \
+                and isinstance(call.args[0], ast.Call):
+            inner_q = astutil.qualname(call.args[0].func, self.aliases)
+            if inner_q == _JR + "split" \
+                    and isinstance(target, (ast.Tuple, ast.List)) \
+                    and len(target.elts) == 2:
+                return set(astutil.target_names(target.elts[1]))
+            return set()
+        if q == _JR + "split":
+            return set(astutil.target_names(target))
+        return set()
+
+    def _scan_loop_body(self, body, loop_targets, state, events) -> None:
+        pre_tracked = set(state)
+        n0 = len(events)
+        self._scan(body, state, events, in_loop=True)
+        body_events = events[n0:]
+        used: dict[str, _Event] = {}
+        rebound: set[str] = set()
+        for ev in body_events:
+            if ev.kind == "bind":
+                rebound.add(ev.var)
+            elif ev.var not in used:
+                used[ev.var] = ev
+        for var, ev in used.items():
+            if var in pre_tracked and var not in loop_targets \
+                    and var not in rebound:
+                self.findings.append(Finding(
+                    PrngKeyHygiene.id, self.path, ev.line,
+                    f"PRNG key '{var}' is bound outside the loop but "
+                    f"consumed by {ev.fn} inside the loop body with no "
+                    f"per-iteration split/fold_in: every iteration draws "
+                    f"identical randomness",
+                    hint=_LOOP_HINT))
+
+    # -- expressions ---------------------------------------------------------
+
+    def _eval(self, expr, state, events, in_loop: bool,
+              comp_locals: frozenset = frozenset()) -> None:
+        if expr is None:
+            return
+        if isinstance(expr, (ast.ListComp, ast.SetComp, ast.DictComp,
+                             ast.GeneratorExp)):
+            self._eval_comp(expr, state, events, in_loop)
+            return
+        child_in_loop = in_loop
+        if isinstance(expr, ast.Call) and astutil.qualname(
+                expr.func, self.aliases) == _JR + "fold_in":
+            # `fold_in(PRNGKey(c), i)` in a loop is the sanctioned
+            # derivation idiom — the constant seed is varied by the fold,
+            # so the maker inside must not trip the constant-seed check.
+            child_in_loop = False
+        for node in ast.iter_child_nodes(expr):
+            if isinstance(node, (ast.Lambda, ast.FunctionDef)):
+                continue  # separate scope
+            if isinstance(node, (ast.expr, ast.keyword, ast.comprehension)):
+                self._eval(node, state, events, child_in_loop, comp_locals)
+        if isinstance(expr, ast.Call):
+            self._eval_call(expr, state, events, in_loop, comp_locals)
+
+    def _eval_comp(self, comp, state, events, in_loop: bool) -> None:
+        locals_ = set()
+        for gen in comp.generators:
+            self._eval(gen.iter, state, events, in_loop)
+            locals_ |= set(astutil.target_names(gen.target))
+        comp_state = {v: u for v, u in state.items() if v not in locals_}
+        n0 = len(events)
+        parts = [getattr(comp, a, None)
+                 for a in ("elt", "key", "value")] + [
+            c for gen in comp.generators for c in gen.ifs]
+        for part in parts:
+            if part is not None:
+                self._eval(part, comp_state, events, True,
+                           frozenset(locals_))
+        for ev in events[n0:]:
+            if ev.kind == "use" and ev.var in state \
+                    and ev.var not in locals_:
+                self.findings.append(Finding(
+                    PrngKeyHygiene.id, self.path, ev.line,
+                    f"PRNG key '{ev.var}' from the enclosing scope is "
+                    f"consumed by {ev.fn} on every comprehension "
+                    f"iteration: identical randomness each element",
+                    hint=_LOOP_HINT))
+                state[ev.var] = _Use(ev.line, ev.fn)
+                break
+
+    def _eval_call(self, call, state, events, in_loop: bool,
+                   comp_locals: frozenset) -> None:
+        q = astutil.qualname(call.func, self.aliases)
+        if q is not None and q.startswith(_JR):
+            name = q[len(_JR):]
+            if name in _MAKERS:
+                if in_loop and call.args and all(
+                        isinstance(a, ast.Constant) for a in call.args):
+                    self.findings.append(Finding(
+                        PrngKeyHygiene.id, self.path, call.lineno,
+                        f"jax.random.{name} called with a constant seed "
+                        f"inside a loop: identical key every iteration",
+                        hint=("derive the seed from the loop variable, or "
+                              "create the key once outside and fold_in "
+                              "the index")))
+                return
+            if name in _DERIVERS:
+                return
+            # Everything else in jax.random consumes its key argument.
+            key_arg = call.args[0] if call.args \
+                else astutil.keyword_arg(call, "key")
+            self._consume(key_arg, f"jax.random.{name}", state, events,
+                          comp_locals)
+            return
+        # Generic call: a tracked key passed as any argument is handed to
+        # a sampler/kernel — that consumes it.
+        if q in _NON_CONSUMING:
+            return
+        fn = q or "a call"
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            if isinstance(arg, (ast.Name, ast.Attribute, ast.Subscript)):
+                self._consume(arg, fn, state, events, comp_locals,
+                              tracked_only=True)
+
+    def _consume(self, key_expr, fn: str, state, events,
+                 comp_locals: frozenset, tracked_only: bool = False) -> None:
+        if key_expr is None:
+            return
+        kid = astutil.expr_id(key_expr)
+        if kid is None or kid in comp_locals:
+            return
+        if kid not in state:
+            if tracked_only:
+                return
+            # Untracked name consumed by an explicit jax.random call:
+            # start tracking it so a second consumption is caught.
+            state[kid] = None
+        prior = state[kid]
+        line = getattr(key_expr, "lineno", 0)
+        if prior is not None:
+            self.findings.append(Finding(
+                PrngKeyHygiene.id, self.path, line,
+                f"PRNG key '{kid}' passed to {fn} was already consumed "
+                f"by {prior.fn} at line {prior.line}; reusing a key "
+                f"correlates the two draws",
+                hint=_REUSE_HINT))
+        state[kid] = _Use(line, fn)
+        events.append(_Event(kid, "use", line, fn))
+
+    def _bind_targets(self, targets, value, state, events) -> None:
+        produced = False
+        if isinstance(value, ast.Call):
+            q = astutil.qualname(value.func, self.aliases)
+            produced = q is not None and q.startswith(_JR) \
+                and q[len(_JR):] in _PRODUCERS
+        for t in targets:
+            for name in astutil.target_names(t):
+                if produced or name in state:
+                    state[name] = None
+                    events.append(_Event(name, "bind",
+                                         getattr(t, "lineno", 0)))

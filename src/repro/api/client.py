@@ -268,10 +268,10 @@ class VedaliaClient:
         alpha: float = 0.1,
         beta: float = 0.01,
         w_bits: Optional[int] = 8,
-        seed: int = 0,
     ) -> PrepareResult:
         """Server-side §4.3 preparation; the returned corpus_id lets
-        sellers fit by reference instead of re-shipping the tokens."""
+        sellers fit by reference instead of re-shipping the tokens.
+        Preparation is deterministic — seeds only enter at fit time."""
         p = self._call("prepare", {
             "reviews": protocol.encode_reviews(reviews),
             "base_vocab": base_vocab,
@@ -279,7 +279,6 @@ class VedaliaClient:
             "alpha": alpha,
             "beta": beta,
             "w_bits": w_bits,
-            "seed": seed,
         })
         return PrepareResult(
             corpus_id=int(p["corpus_id"]),

@@ -178,7 +178,7 @@ class VedaliaServer:
 
     # -- helpers ------------------------------------------------------------
 
-    def _handle_of(self, payload: dict) -> ModelHandle:
+    def _resolve_handle(self, payload: dict) -> ModelHandle:
         hid = int(payload["handle_id"])
         if hid not in self.service.handles:
             raise protocol.NotFound(f"unknown handle_id {hid}")
@@ -223,7 +223,7 @@ class VedaliaServer:
 
     # -- verbs ---------------------------------------------------------------
 
-    def _handle_hello(self, payload: dict) -> dict:
+    def _handle_hello(self, _payload: dict) -> dict:
         return {
             "protocol_version": protocol.PROTOCOL_VERSION,
             "backends": available_backends(),
@@ -240,7 +240,7 @@ class VedaliaServer:
             "view_version": views_lib.VIEW_VERSION,
         }
 
-    def _handle_open_session(self, payload: dict) -> dict:
+    def _handle_open_session(self, _payload: dict) -> dict:
         sid = f"s{self._next_session}"
         self._next_session += 1
         self.sessions[sid] = Session(session_id=sid)
@@ -266,7 +266,6 @@ class VedaliaServer:
             alpha=float(payload.get("alpha", 0.1)),
             beta=float(payload.get("beta", 0.01)),
             w_bits=payload.get("w_bits", 8),
-            seed=int(payload.get("seed", 0)),
         )
         cid = self._next_corpus
         self._next_corpus += 1
@@ -315,7 +314,7 @@ class VedaliaServer:
         """Warm-refit several handles in one coalesced launch
         (`VedaliaService.refine_many`); one fit payload per handle."""
         handles = [
-            self._handle_of({"handle_id": hid})
+            self._resolve_handle({"handle_id": hid})
             for hid in payload["handle_ids"]
         ]
         if not handles:
@@ -406,7 +405,7 @@ class VedaliaServer:
         """A device downloads everything needed to continue a served model
         locally: config, the handle's (token-parallel) corpus, and the
         current stored-unit state — the offload tier's task lease."""
-        handle = self._handle_of(payload)
+        handle = self._resolve_handle(payload)
         spec = self._quant_arg(payload)
         cfg = handle.cfg
         corpus = handle.model.corpus
@@ -434,7 +433,7 @@ class VedaliaServer:
     def _handle_spot_check(self, payload: dict) -> dict:
         """Validate + recompute-perplexity (+ optional re-Gibbs on a
         throwaway copy) of an uploaded state. Never touches the handle."""
-        handle = self._handle_of(payload)
+        handle = self._resolve_handle(payload)
         state = self._decode_state(payload, handle)
         res = self.service.spot_check(
             handle,
@@ -458,14 +457,14 @@ class VedaliaServer:
         """Swap a verified device-computed state into an existing served
         handle (re-validated server-side regardless of what the caller
         already checked)."""
-        handle = self._handle_of(payload)
+        handle = self._resolve_handle(payload)
         state = self._decode_state(payload, handle)
         self.service.adopt_state(
             handle, state, sweeps_run=int(payload.get("sweeps_run", 0)))
         return self._fit_payload(handle)
 
     def _handle_refine(self, payload: dict) -> dict:
-        handle = self._handle_of(payload)
+        handle = self._resolve_handle(payload)
         self.service.refine(
             handle,
             num_sweeps=int(payload["num_sweeps"]),
@@ -482,7 +481,7 @@ class VedaliaServer:
         sessions. A batch that would overflow the bounded queue is rejected
         whole (`overloaded`), so the cursor never covers dropped reviews.
         """
-        handle = self._handle_of(payload)
+        handle = self._resolve_handle(payload)
         batch = protocol.decode_reviews(payload["reviews"])
         if not batch:
             raise ValueError("ingest needs at least one review")
@@ -502,7 +501,7 @@ class VedaliaServer:
         }
 
     def _handle_update(self, payload: dict) -> dict:
-        handle = self._handle_of(payload)
+        handle = self._resolve_handle(payload)
         reviews = protocol.decode_reviews(payload.get("reviews", []))
         drained = 0
         if payload.get("drain"):
@@ -552,7 +551,7 @@ class VedaliaServer:
         }
 
     def _handle_view(self, payload: dict) -> dict:
-        handle = self._handle_of(payload)
+        handle = self._resolve_handle(payload)
         spec = self._quant_arg(payload)
         resp = self.service.view(
             handle,
@@ -621,7 +620,7 @@ class VedaliaServer:
         return out
 
     def _handle_top_reviews(self, payload: dict) -> dict:
-        handle = self._handle_of(payload)
+        handle = self._resolve_handle(payload)
         resp = self.service.top_reviews(
             handle,
             int(payload["topic_id"]),
@@ -637,7 +636,7 @@ class VedaliaServer:
         """Training-corpus perplexity, or — with a `reviews` payload —
         held-out perplexity of those reviews under the current model
         (the streaming scheduler's refit guard)."""
-        handle = self._handle_of(payload)
+        handle = self._resolve_handle(payload)
         if payload.get("reviews") is not None:
             ppx = self.service.heldout_perplexity(
                 handle, protocol.decode_reviews(payload["reviews"]))
@@ -648,7 +647,7 @@ class VedaliaServer:
             "perplexity": self.service.perplexity(handle),
         }
 
-    def _handle_stats(self, payload: dict) -> dict:
+    def _handle_stats(self, _payload: dict) -> dict:
         """Server observability: what the router/scheduler/bench read."""
         queues = {
             str(hid): len(q) for hid, q in self.ingest_queues.items() if q
@@ -683,7 +682,7 @@ class VedaliaServer:
         return out
 
     def _handle_release(self, payload: dict) -> dict:
-        handle = self._handle_of(payload)
+        handle = self._resolve_handle(payload)
         self.service.release(handle)
         for session in self.sessions.values():  # cursors die with the handle
             session.drop_handle(handle.handle_id)

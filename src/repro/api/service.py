@@ -246,8 +246,7 @@ class VedaliaService:
             base_vocab = _infer_base_vocab(reviews)
         prep = rlda.prepare(
             list(reviews), base_vocab=base_vocab, num_topics=num_topics,
-            alpha=alpha, beta=beta, w_bits=w_bits,
-            seed=seed if seed is not None else self._seed)
+            alpha=alpha, beta=beta, w_bits=w_bits)
         return self.fit_prepared(
             prep, backend=backend, num_sweeps=num_sweeps, seed=seed,
             device_kind=device_kind)
@@ -309,8 +308,7 @@ class VedaliaService:
         preps = [
             rlda.prepare(
                 list(rs), base_vocab=base_vocab, num_topics=num_topics,
-                alpha=alpha, beta=beta, w_bits=w_bits,
-                seed=seed if seed is not None else self._seed)
+                alpha=alpha, beta=beta, w_bits=w_bits)
             for rs in review_sets
         ]
         return self.fit_batch_prepared(
@@ -492,8 +490,7 @@ class VedaliaService:
         prep_new = rlda.prepare(
             list(new_reviews), base_vocab=prep.base_vocab,
             num_topics=cfg.num_topics, alpha=cfg.alpha, beta=cfg.beta,
-            w_bits=cfg.w_bits,
-            seed=seed if seed is not None else self._seed)
+            w_bits=cfg.w_bits)
 
         backend = self._resolve(
             backend or handle.backend,
@@ -600,7 +597,7 @@ class VedaliaService:
         prep = rlda.prepare(
             list(reviews), base_vocab=handle.prep.base_vocab,
             num_topics=cfg.num_topics, alpha=cfg.alpha, beta=cfg.beta,
-            w_bits=cfg.w_bits, seed=self._seed)
+            w_bits=cfg.w_bits)
         sc = codec.codec_for(cfg)
         n_wt = sc.decode_array_np(handle.state.n_wt)  # (V, K)
         n_t = sc.decode_array_np(handle.state.n_t)  # (K,)

@@ -104,7 +104,7 @@ class RankingMatcher(Matcher):
             self._rank[s.seller_id] = float(self._rng.uniform())
         return self._rank[s.seller_id]
 
-    def match(self, buyer, sellers, now, rng):
+    def match(self, buyer, sellers, now, rng):  # noqa: ARG002 - Matcher interface
         avail = [s for s in sellers if s.available(now)]
         if len(avail) < 2:
             return None
@@ -116,7 +116,7 @@ class RankingMatcher(Matcher):
 class GreedyGainMatcher(Matcher):
     """Maximize the buyer's time saved: the two fastest available sellers."""
 
-    def match(self, buyer, sellers, now, rng):
+    def match(self, buyer, sellers, now, rng):  # noqa: ARG002 - Matcher interface
         avail = [s for s in sellers if s.available(now)]
         if len(avail) < 2:
             return None

@@ -191,7 +191,7 @@ def make_client_server_sweep(cfg: LDAConfig, mesh, *, block: int = 8192,
 
         n_wt_others = n_wt - own_contrib(z)
 
-        for i in range(sync_every):
+        for _ in range(sync_every):
             key, sub = jax.random.split(key)
             cur_wt = n_wt_others + own_contrib(z)
             cur_t = cur_wt.sum(axis=0)

@@ -136,7 +136,6 @@ def prepare(
     beta: float = 0.01,
     w_bits: Optional[int] = 8,
     quality_model: Optional[quality_lib.QualityModel] = None,
-    seed: int = 0,
 ) -> RLDACorpus:
     """Transform raw reviews into the flat weighted LDA-compatible corpus.
 

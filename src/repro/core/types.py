@@ -75,7 +75,7 @@ class Corpus:
         return (self.docs, self.words, self.weights), None
 
     @classmethod
-    def tree_unflatten(cls, aux, children):
+    def tree_unflatten(cls, _aux, children):
         return cls(*children)
 
 
@@ -98,7 +98,7 @@ class LDAState:
         return (self.z, self.n_dt, self.n_wt, self.n_t), None
 
     @classmethod
-    def tree_unflatten(cls, aux, children):
+    def tree_unflatten(cls, _aux, children):
         return cls(*children)
 
 
@@ -124,7 +124,11 @@ def corpus_from_docs(doc_word_lists, vocab_size: int, weights=None) -> Corpus:
     """Build a flat Corpus from a list of per-document word-id lists."""
     docs, words, wts = [], [], []
     for d, wl in enumerate(doc_word_lists):
-        for j, w in enumerate(wl):
+        for w in wl:
+            if not 0 <= w < vocab_size:
+                raise ValueError(
+                    f"word id {w} in doc {d} out of range for "
+                    f"vocab_size={vocab_size}")
             docs.append(d)
             words.append(w)
             wts.append(1.0 if weights is None else float(weights[d]))

@@ -57,7 +57,7 @@ def generate(spec: SyntheticSpec) -> SyntheticCorpus:
 
     user_bias = rng.normal(0.0, 0.4, spec.num_users)
     reviews, doc_topic, relevant = [], [], []
-    for d in range(spec.num_reviews):
+    for _d in range(spec.num_reviews):
         user = int(rng.integers(0, spec.num_users))
         is_relevant = rng.random() > spec.irrelevant_frac
 

@@ -247,7 +247,7 @@ def alias_mh_blocked(
         in_specs=[
             row_spec,  # rows_d
             row_spec,  # rows_w
-            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda _i: (0,)),
             row_spec,  # thresh_w
             row_spec,  # alias_w
             row_spec,  # thresh_d
@@ -314,7 +314,7 @@ def alias_mh_blocked_batched(
         in_specs=[
             row_spec,  # rows_d
             row_spec,  # rows_w
-            pl.BlockSpec((1, k), lambda j, i: (j, 0)),
+            pl.BlockSpec((1, k), lambda j, _i: (j, 0)),
             row_spec,  # thresh_w
             row_spec,  # alias_w
             row_spec,  # thresh_d

@@ -144,12 +144,12 @@ def chunk_scan_pallas(
             pl.BlockSpec((None, chunk, dk), lambda i, j: (i, j, 0)),
             pl.BlockSpec((None, chunk, dv), lambda i, j: (i, j, 0)),
             pl.BlockSpec((None, chunk, dk), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((None, 1, dk), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((None, dk, dv), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, 1, dk), lambda i, _j: (i, 0, 0)),
+            pl.BlockSpec((None, dk, dv), lambda i, _j: (i, 0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((None, chunk, dv), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((None, dk, dv), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, dk, dv), lambda i, _j: (i, 0, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((b * h, s, dv), v.dtype),

@@ -134,13 +134,13 @@ def decode_attention_pallas(
         kern,
         grid=(b, hkv, n),
         in_specs=[
-            pl.BlockSpec((2,), lambda bi, hi, j: (0,)),
-            pl.BlockSpec((None, None, g, hd), lambda bi, hi, j: (bi, hi, 0, 0)),
+            pl.BlockSpec((2,), lambda _bi, _hi, _j: (0,)),
+            pl.BlockSpec((None, None, g, hd), lambda bi, hi, _j: (bi, hi, 0, 0)),
             pl.BlockSpec((None, kv_block, None, hd), lambda bi, hi, j: (bi, j, hi, 0)),
             pl.BlockSpec((None, kv_block, None, hd), lambda bi, hi, j: (bi, j, hi, 0)),
         ],
         out_specs=pl.BlockSpec(
-            (None, None, g, hd), lambda bi, hi, j: (bi, hi, 0, 0)
+            (None, None, g, hd), lambda bi, hi, _j: (bi, hi, 0, 0)
         ),
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
         scratch_shapes=[

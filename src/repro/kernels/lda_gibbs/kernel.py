@@ -218,7 +218,7 @@ def gibbs_resample_blocked_quant(
             pl.BlockSpec((token_block, kc), lambda i: (i, 0)),
             pl.BlockSpec((token_block,), lambda i: (i,)),
             pl.BlockSpec((token_block, k), lambda i: (i, 0)),
-            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda _i: (0,)),
             pl.BlockSpec((token_block,), lambda i: (i,)),
             pl.BlockSpec((token_block,), lambda i: (i,)),
             pl.BlockSpec((token_block, k), lambda i: (i, 0)),
@@ -261,7 +261,7 @@ def gibbs_resample_blocked(
         in_specs=[
             pl.BlockSpec((token_block, k), lambda i: (i, 0)),
             pl.BlockSpec((token_block, k), lambda i: (i, 0)),
-            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda _i: (0,)),
             pl.BlockSpec((token_block,), lambda i: (i,)),
             pl.BlockSpec((token_block,), lambda i: (i,)),
             pl.BlockSpec((token_block, k), lambda i: (i, 0)),
@@ -311,7 +311,7 @@ def gibbs_resample_blocked_batched(
         in_specs=[
             pl.BlockSpec((1, token_block, k), lambda j, i: (j, i, 0)),
             pl.BlockSpec((1, token_block, k), lambda j, i: (j, i, 0)),
-            pl.BlockSpec((1, k), lambda j, i: (j, 0)),
+            pl.BlockSpec((1, k), lambda j, _i: (j, 0)),
             pl.BlockSpec((1, token_block), lambda j, i: (j, i)),
             pl.BlockSpec((1, token_block), lambda j, i: (j, i)),
             pl.BlockSpec((1, token_block, k), lambda j, i: (j, i, 0)),

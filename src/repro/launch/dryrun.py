@@ -163,7 +163,7 @@ def lower_combo(arch: str, shape_name: str, mesh, *, impl: str = "masked",
     return lowered, compiled, {"compile_s": compile_s, "kind": kind}
 
 
-def analyze(lowered, compiled, mesh, meta) -> dict:
+def analyze(_lowered, compiled, mesh, meta) -> dict:
     chips = mesh_lib.mesh_chips(mesh)
     cost = compiled.cost_analysis() or {}
     flops = float(cost.get("flops", 0.0))

@@ -41,7 +41,7 @@ def production_lda_config(w_bits=8) -> LDAConfig:
     )
 
 
-def abstract_corpus(cfg: LDAConfig, num_tokens: int) -> Corpus:
+def abstract_corpus(_cfg: LDAConfig, num_tokens: int) -> Corpus:
     sds = jax.ShapeDtypeStruct
     return Corpus(
         docs=sds((num_tokens,), jnp.int32),

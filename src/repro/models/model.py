@@ -795,7 +795,7 @@ def cache_pspecs(cfg: ArchConfig, mesh, b: int, cache_len: int, *,
         seq_ok = (msize and seq_len % msize == 0
                   and (kind == "decode" or seq_len >= cache_len))
         spec = []
-        for dim, ax in zip(sh, axes):
+        for _dim, ax in zip(sh, axes):
             if ax == "batch":
                 spec.append(bspec)
             elif ax == "kv_heads" and head_ok:
@@ -1058,7 +1058,7 @@ def batch_pspecs(cfg: ArchConfig, mesh, kind: str, b: int) -> dict:
 
 def real_batch(cfg: ArchConfig, kind: str, b: int, s: int, key) -> dict:
     """Materialized random batch (smoke tests / examples)."""
-    ks = jax.random.split(key, 3)
+    ks = jax.random.split(key, 4)
     batch = {}
     if kind == "decode":
         return {"tokens": jax.random.randint(ks[0], (b,), 0, cfg.vocab_size)}
@@ -1070,5 +1070,5 @@ def real_batch(cfg: ArchConfig, kind: str, b: int, s: int, key) -> dict:
             ks[2], (b, cfg.num_frontend_tokens, cfg.d_model), ACT_DTYPE) * 0.02
     if cfg.arch_type == "audio":
         batch["frames"] = jax.random.normal(
-            ks[2], (b, cfg.encoder_tokens, cfg.d_model), ACT_DTYPE) * 0.02
+            ks[3], (b, cfg.encoder_tokens, cfg.d_model), ACT_DTYPE) * 0.02
     return batch

@@ -50,7 +50,7 @@ def _fan_in(shape: tuple[int, ...]) -> int:
     return int(np.prod(shape[:-1]))
 
 
-def init_params(schema: Schema, key: jax.Array, stacked_axes: int = 0):
+def init_params(schema: Schema, key: jax.Array):
     """Materialize real parameters (truncated-normal fan-in scaled)."""
     leaves = []
 

@@ -206,7 +206,7 @@ class OffloadCoordinator:
 
     # -- marketplace hooks ---------------------------------------------------
 
-    def _runtime(self, seller: Seller, buyer: BuyerRequest) -> Submission:
+    def _runtime(self, seller: Seller, _buyer: BuyerRequest) -> Submission:
         """SellerRuntime: run the lease on the device, then validate the
         upload server-side before it enters selection."""
         task, client = self._task, self._client

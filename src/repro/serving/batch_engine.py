@@ -169,6 +169,8 @@ def run_batched(
     buckets = plan_buckets(list(zip(cfgs, corpora)), max_models=max_models)
     out: list[Optional[LDAState]] = [None] * len(cfgs)
     for idxs in buckets:
+        # vedalint: disable=prng-key-hygiene -- `keys` is the whole per-model
+        # key list; buckets index disjoint subsets, so no key is consumed twice
         for i, st in zip(idxs, _run_bucket(
                 sampler, idxs, cfgs, corpora, keys, num_sweeps, states)):
             out[i] = st

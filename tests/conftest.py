@@ -5,6 +5,17 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(__file__))
 
+# Sanitized leg: REPRO_SANITIZE=1 flips on jax's NaN debugger, so a NaN
+# minted inside a jitted computation raises at the op that produced it
+# instead of surfacing as a corrupt count table three sweeps later. CI
+# runs the fast numeric-core tests once under this switch; the checkify
+# complement (div-by-zero / out-of-bounds gathers) lives in
+# tests/test_gibbs.py::test_sweep_checkify_clean, gated on the same var.
+if os.environ.get("REPRO_SANITIZE") == "1":
+    import jax
+
+    jax.config.update("jax_debug_nans", True)
+
 # Optional-dep fallback: tier-1 must collect without `hypothesis` installed.
 # The shim runs each property test over a fixed set of deterministic
 # examples; installing the real hypothesis (requirements-dev.txt) upgrades

@@ -181,3 +181,27 @@ def test_alias_tables_batched_matches_per_row():
         t_i, a_i = alias.build_alias_table(jnp.asarray(probs[i]))
         np.testing.assert_array_equal(np.asarray(thresh[i]), np.asarray(t_i))
         np.testing.assert_array_equal(np.asarray(al[i]), np.asarray(a_i))
+
+
+def test_sweep_checkify_clean():
+    """Sanitized leg (REPRO_SANITIZE=1): a full sweep is clean under
+    checkify's float + index checks — no NaNs, no div-by-zero, and every
+    count-table gather/scatter in bounds."""
+    import os
+
+    import pytest
+
+    if os.environ.get("REPRO_SANITIZE") != "1":
+        pytest.skip("sanitized leg only (set REPRO_SANITIZE=1)")
+    from jax.experimental import checkify
+
+    cfg, corpus = _planted_corpus(n_docs=20, vocab=60, k=4, mean_tokens=20)
+    state = gibbs.run(cfg, corpus, jax.random.PRNGKey(0), num_sweeps=1)
+
+    checked = checkify.checkify(
+        lambda st, key: gibbs.sweep(cfg, st, corpus, key, block=256),
+        errors=checkify.float_checks | checkify.index_checks,
+    )
+    err, new_state = checked(state, jax.random.PRNGKey(1))
+    err.throw()
+    assert new_state.z.shape == state.z.shape

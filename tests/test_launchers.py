@@ -25,7 +25,7 @@ def test_train_cli_runs_and_logs(tmp_path):
     assert logged[-1]["step"] == 7
 
 
-def test_train_cli_ssm_arch(tmp_path):
+def test_train_cli_ssm_arch():
     history = train_cli.main([
         "--arch", "rwkv6-1.6b", "--steps", "4", "--seq-len", "32",
         "--global-batch", "2",
